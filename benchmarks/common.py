@@ -1,0 +1,188 @@
+"""Shared benchmark substrate: train the paper's four DNNs at reduced
+scale on the deterministic synthetic tasks, calibrate MoR, cache results.
+
+Training here is real gradient descent (the activation statistics MoR
+exploits only appear in trained networks); results are cached under
+experiments/cache so the full benchmark suite re-runs in seconds.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.serialization import load_pytree, save_pytree
+from repro.configs import get_config, reduce_config
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import synthetic_frames_batch, synthetic_image_batch
+from repro.models import cnn as cnn_mod
+from repro.models import tds as tds_mod
+
+CACHE = "experiments/cache"
+PAPER_DNNS = ["paper-tds", "paper-cnn10", "paper-resnet18",
+              "paper-darknet19"]
+
+_TRAIN_STEPS = {"paper-tds": 150, "paper-cnn10": 200,
+                "paper-resnet18": 150, "paper-darknet19": 120}
+_BATCH = 32
+
+
+def _sgd(params, grads, lr):
+    return jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+
+
+def train_cnn(cfg: ModelConfig, steps: int, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    params = cnn_mod.init_params(key, cfg)
+    state = cnn_mod.init_state(cfg)
+
+    @jax.jit
+    def step_fn(params, state, images, labels):
+        def loss_fn(p):
+            logits, new_state, _ = cnn_mod.forward(p, state, cfg, images,
+                                                   train=True)
+            lf = logits.astype(jnp.float32)
+            ce = (jax.nn.logsumexp(lf, -1)
+                  - jnp.take_along_axis(lf, labels[:, None], 1)[:, 0]).mean()
+            acc = (logits.argmax(-1) == labels).mean()
+            return ce, (new_state, acc)
+        (loss, (new_state, acc)), g = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        return _sgd(params, g, 0.05), new_state, loss, acc
+
+    for s in range(steps):
+        d = synthetic_image_batch(cfg, _BATCH, seed=seed, step=s)
+        params, state, loss, acc = step_fn(params, state,
+                                           jnp.asarray(d["images"]),
+                                           jnp.asarray(d["labels"]))
+    return params, state, float(loss), float(acc)
+
+
+def train_tds(cfg: ModelConfig, steps: int, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    params = tds_mod.init_params(key, cfg)
+
+    @jax.jit
+    def step_fn(params, frames, labels):
+        def loss_fn(p):
+            logits, _ = tds_mod.forward(p, cfg, {"frames": frames})
+            lf = logits.astype(jnp.float32)
+            ce = (jax.nn.logsumexp(lf, -1) - jnp.take_along_axis(
+                lf, labels[..., None], -1)[..., 0]).mean()
+            acc = (logits.argmax(-1) == labels).mean()
+            return ce, acc
+        (loss, acc), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        return _sgd(params, g, 0.05), loss, acc
+
+    for s in range(steps):
+        d = synthetic_frames_batch(cfg, 8, 64, seed=seed, step=s)
+        params, loss, acc = step_fn(params, jnp.asarray(d["frames"]),
+                                    jnp.asarray(d["labels"]))
+    return params, float(loss), float(acc)
+
+
+def eval_accuracy(name: str, cfg, params, state, *, mor=None,
+                  mor_mode="dense", n_batches=4, seed=123) -> float:
+    accs = []
+    for s in range(n_batches):
+        if cfg.family == "cnn":
+            d = synthetic_image_batch(cfg, 64, seed=seed, step=s)
+            logits, _, _ = cnn_mod.forward(params, state, cfg,
+                                           jnp.asarray(d["images"]),
+                                           train=False, mor=mor,
+                                           mor_mode=mor_mode)
+            accs.append(float((logits.argmax(-1) ==
+                               jnp.asarray(d["labels"])).mean()))
+        else:
+            d = synthetic_frames_batch(cfg, 16, 64, seed=seed, step=s)
+            logits, _ = tds_mod.forward(params, cfg,
+                                        {"frames": jnp.asarray(d["frames"])},
+                                        mor=mor, mor_mode=mor_mode)
+            accs.append(float((logits.argmax(-1) ==
+                               jnp.asarray(d["labels"])).mean()))
+    return float(np.mean(accs))
+
+
+_MODELS: Dict[str, Tuple] = {}
+
+
+def get_trained(name: str):
+    """-> (cfg, params, state_or_None, train_acc).  Disk-cached."""
+    if name in _MODELS:
+        return _MODELS[name]
+    cfg = reduce_config(get_config(name))
+    os.makedirs(CACHE, exist_ok=True)
+    path = os.path.join(CACHE, name.replace("/", "_"))
+    steps = _TRAIN_STEPS[name]
+    if cfg.family == "cnn":
+        tmpl_p = cnn_mod.init_params(jax.random.PRNGKey(0), cfg)
+        tmpl_s = cnn_mod.init_state(cfg)
+        if os.path.exists(path + ".npz"):
+            blob, extra = load_pytree({"p": tmpl_p, "s": tmpl_s}, path)
+            out = (cfg, blob["p"], blob["s"], extra.get("acc", -1.0))
+        else:
+            p, s, loss, acc = train_cnn(cfg, steps)
+            save_pytree({"p": p, "s": s}, path, {"acc": acc})
+            out = (cfg, p, s, acc)
+    else:
+        tmpl_p = tds_mod.init_params(jax.random.PRNGKey(0), cfg)
+        if os.path.exists(path + ".npz"):
+            blob, extra = load_pytree({"p": tmpl_p}, path)
+            out = (cfg, blob["p"], None, extra.get("acc", -1.0))
+        else:
+            p, loss, acc = train_tds(cfg, steps)
+            save_pytree({"p": p}, path, {"acc": acc})
+            out = (cfg, p, None, acc)
+    _MODELS[name] = out
+    return out
+
+
+def get_taps(name: str, n_batches: int = 3, seed: int = 77) -> List[Dict]:
+    """Per-ReLU-layer taps {p_bin, p_base, relu_in} accumulated as numpy."""
+    cfg, params, state, _ = get_trained(name)
+    all_taps: List[Dict] = []
+    for s in range(n_batches):
+        if cfg.family == "cnn":
+            d = synthetic_image_batch(cfg, 32, seed=seed, step=s)
+            _, _, aux = cnn_mod.forward(params, state, cfg,
+                                        jnp.asarray(d["images"]),
+                                        train=False, with_taps=True)
+        else:
+            d = synthetic_frames_batch(cfg, 8, 64, seed=seed, step=s)
+            _, aux = tds_mod.forward(params, cfg,
+                                     {"frames": jnp.asarray(d["frames"])},
+                                     with_taps=True)
+        taps = aux["taps"]
+        if not all_taps:
+            all_taps = [{k: [np.asarray(v)] for k, v in t.items()}
+                        for t in taps]
+        else:
+            for acc, t in zip(all_taps, taps):
+                for k, v in t.items():
+                    acc[k].append(np.asarray(v))
+    return [{k: np.concatenate(v) for k, v in t.items()} for t in all_taps]
+
+
+def layer_macs(name: str) -> List[float]:
+    """MACs per ReLU-tapped layer (weights the per-layer stats)."""
+    cfg, params, state, _ = get_trained(name)
+    if cfg.family == "cnn":
+        macs = []
+        hw = cfg.img_size * cfg.img_size
+        from repro.models.cnn import _strides
+        strides = _strides(cfg)
+        for i, lp in enumerate(params["layers"]):
+            hw = hw // (strides[i] ** 2)
+            kh, kw, cin, cout = lp["w"].shape
+            macs.append(hw * kh * kw * cin * cout)
+        return macs
+    macs = []
+    for lp in params["layers"]:
+        conv = 64 * 5 * cfg.d_model * cfg.d_model       # conv tap
+        fc = 64 * cfg.d_model * cfg.d_ff                 # fc tap
+        macs += [conv, fc]
+    return macs

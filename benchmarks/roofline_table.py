@@ -1,0 +1,106 @@
+"""Aggregate experiments/dryrun/*.json into the EXPERIMENTS.md roofline
+tables (single-pod roofline, multi-pod compile proof)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+ARCH_ORDER = ["qwen1.5-110b", "granite-20b", "granite-3-2b", "qwen2-7b",
+              "deepseek-v2-236b", "mixtral-8x7b", "rwkv6-3b",
+              "phi-3-vision-4.2b", "zamba2-7b", "hubert-xlarge"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_records(directory: str = "experiments/dryrun") -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        try:
+            recs.append(json.load(open(f)))
+        except Exception:
+            pass
+    return recs
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def roofline_markdown(recs: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | GiB/dev (bf16) | fits | t_compute | t_memory | "
+        "t_collective | dominant | MODEL/HLO flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    by_key = {(r["arch"], r["shape"]): r for r in recs
+              if r.get("mesh") == "pod"}
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = by_key.get((a, s))
+            if r is None:
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {a} | {s} | - | - | - | - | - | "
+                             f"{r['status'][:40]} | - | - |")
+                continue
+            rf = r["roofline"]
+            lines.append(
+                f"| {a} | {s} | "
+                f"{r.get('per_device_gib_bf16_corrected', '-')} | "
+                f"{'Y' if r.get('fits_16gib_hbm') else 'N'} | "
+                f"{fmt_s(rf['t_compute_s'])} | {fmt_s(rf['t_memory_s'])} | "
+                f"{fmt_s(rf['t_collective_s'])} | {rf['dominant']} | "
+                f"{rf['useful_flop_ratio']:.2f} | "
+                f"{rf['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def multipod_markdown(recs: List[Dict]) -> str:
+    lines = ["| arch | shape | status | compile_s | wire GB/chip | "
+             "DCI GB/chip |", "|---|---|---|---|---|---|"]
+    by_key = {(r["arch"], r["shape"]): r for r in recs
+              if r.get("mesh") == "multipod"}
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = by_key.get((a, s))
+            if r is None:
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {a} | {s} | {r['status'][:50]} | - | - | - |")
+                continue
+            cb = r["roofline"]["collective_breakdown"]
+            lines.append(
+                f"| {a} | {s} | ok | {r['compile_s']} | "
+                f"{cb.get('total_wire_bytes', 0)/1e9:.1f} | "
+                f"{cb.get('dci_bytes', 0)/1e9:.1f} |")
+    return "\n".join(lines)
+
+
+def summary(recs: List[Dict]) -> Dict:
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skip = [r for r in recs if str(r.get("status", "")).startswith("skip")]
+    err = [r for r in recs if str(r.get("status", "")).startswith("error")]
+    fits = [r for r in ok if r.get("fits_16gib_hbm")]
+    return {"ok": len(ok), "skip": len(skip), "error": len(err),
+            "fits": len(fits),
+            "mean_roofline_fraction_train": float(sum(
+                r["roofline"]["roofline_fraction"] for r in ok
+                if r["shape"] == "train_4k" and r["mesh"] == "pod") /
+                max(1, sum(1 for r in ok if r["shape"] == "train_4k"
+                           and r["mesh"] == "pod")))}
+
+
+if __name__ == "__main__":
+    recs = load_records()
+    print(roofline_markdown(recs))
+    print()
+    print(multipod_markdown(recs))
+    print()
+    print(json.dumps(summary(recs), indent=1))

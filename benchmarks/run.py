@@ -1,0 +1,55 @@
+"""Benchmark harness: one entry per paper table/figure + the roofline
+aggregation.  Prints ``name,us_per_call,derived`` CSV (timing = wall time
+of the reproduction; derived = the figure's headline number)."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _run(name, fn):
+    t0 = time.time()
+    derived, detail = fn()
+    us = (time.time() - t0) * 1e6
+    print(f"{name},{us:.0f},{derived:.4f}", flush=True)
+    return {"name": name, "us_per_call": us, "derived": derived,
+            "detail": detail}
+
+
+def main() -> None:
+    from benchmarks import figures
+    results = []
+    results.append(_run("fig1_negative_relu_input_fraction",
+                        figures.fig1_negative_fraction))
+    results.append(_run("fig3_relu_mac_fraction",
+                        figures.fig3_mac_breakdown))
+    results.append(_run("fig5_binary_pearson_mean",
+                        figures.fig5_correlation))
+    results.append(_run("fig8_closest_angle_mean_deg",
+                        figures.fig8_angles))
+    results.append(_run("fig6_binary_alone_best_savings",
+                        figures.fig6_threshold_binary_alone))
+    results.append(_run("fig9_hybrid_best_savings", figures.fig9_hybrid))
+    results.append(_run("fig12_mispredicted_zero_rate",
+                        figures.fig12_breakdown))
+    results.append(_run("fig13_modeled_speedup",
+                        figures.fig13_speedup_energy))
+
+    # roofline: aggregate whatever dry-run records exist
+    from benchmarks import roofline_table
+    recs = roofline_table.load_records()
+    if recs:
+        s = roofline_table.summary(recs)
+        print(f"roofline_cells_ok,{0:.0f},{s['ok']}")
+        print(f"roofline_mean_train_fraction,{0:.0f},"
+              f"{s['mean_roofline_fraction_train']:.4f}")
+
+    import json
+    import os
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/bench_results.json", "w") as f:
+        json.dump(results, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""End-to-end serving driver (the paper's deployment scenario): batched
+requests against a decode cache, comparing dense vs MoR execution modes
+and reporting the realised skip statistics.
+
+    PYTHONPATH=src python examples/serve_mor.py [--arch granite-3-2b]
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+    for mode in ("dense", "exact", "tiled"):
+        serve_main(["--arch", args.arch, "--reduced",
+                    "--batch", str(args.batch), "--prompt-len", "16",
+                    "--gen-len", "32", "--mor", mode]
+                   + (["--compare"] if mode != "dense" else []))
+
+
+if __name__ == "__main__":
+    main()

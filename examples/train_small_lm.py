@@ -1,0 +1,29 @@
+"""End-to-end training driver: a few hundred steps of a small LM with
+fault-tolerant checkpointing (kill it mid-run and re-launch: it resumes
+from the last committed step), cosine schedule, grad clipping, and
+post-training MoR calibration.
+
+    PYTHONPATH=src python examples/train_small_lm.py [--steps 300]
+"""
+import argparse
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_small_lm")
+    args = ap.parse_args()
+    train_main([
+        "--arch", "granite-3-2b", "--reduced",
+        "--steps", str(args.steps),
+        "--batch", "16", "--seq", "64", "--lr", "1e-3",
+        "--ckpt-dir", args.ckpt_dir, "--save-every", "50",
+        "--log-every", "20", "--calibrate",
+        "--out-json", "/tmp/repro_small_lm_report.json",
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Pytree <-> disk serialization: flat npz payload + JSON tree manifest.
+
+Arrays are fetched shard-by-shard (``jax.device_get``) so saving a
+fully-sharded 236B state never materialises more than one leaf on host.
+Restore is mesh-agnostic: leaves are plain numpy and get re-placed with
+whatever sharding the *new* mesh prescribes (elastic re-scale path).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+
+    def walk(path, leaf):
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        flat[key] = leaf
+    jax.tree_util.tree_map_with_path(walk, tree)
+    return flat
+
+
+def save_pytree(tree, path: str, extra_meta: Dict | None = None) -> None:
+    flat = _flatten_with_paths(tree)
+    arrays = {}
+    meta = {"keys": [], "extra": extra_meta or {}}
+    for i, (k, v) in enumerate(sorted(flat.items())):
+        arrays[f"a{i}"] = np.asarray(jax.device_get(v))
+        meta["keys"].append(k)
+    tmp = path + ".tmp.npz"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path + ".npz")
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f)
+
+
+def load_pytree(template, path: str) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``template`` (shapes must match)."""
+    with open(path + ".json") as f:
+        meta = json.load(f)
+    payload = np.load(path + ".npz")
+    by_key = {k: payload[f"a{i}"] for i, k in enumerate(meta["keys"])}
+    tmpl_flat = _flatten_with_paths(template)
+    missing = set(tmpl_flat) - set(by_key)
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
+
+    def walk(path, leaf):
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        arr = by_key[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: ckpt {arr.shape} != template {leaf.shape}")
+        return arr.astype(leaf.dtype)
+
+    restored = jax.tree_util.tree_map_with_path(walk, template)
+    return restored, meta["extra"]

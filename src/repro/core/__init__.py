@@ -1,0 +1,28 @@
+"""Mixture-of-Rookies core: the paper's hybrid ReLU-output predictor.
+
+Pipeline (paper §3.2):
+  1. offline: ``calibration`` fits, per output neuron, a line between the
+     binarized (+-1) and base-precision pre-activations and a Pearson
+     correlation coefficient.
+  2. offline: ``clustering`` groups neurons by weight-vector angle and
+     elects proxy neurons (closest-neighbour graph, greedy by indegree).
+  3. offline: ``policy`` folds both into tile-structured ``MoRLayer``
+     parameters: a column permutation packing cluster members into the
+     same 128-wide TPU tile, fitted-line coefficients, enable masks.
+  4. online: ``predictor`` evaluates proxies at base precision, runs the
+     binary rookie for proxy-negative neurons, and skips a neuron iff
+     BOTH rookies predict a zero ReLU output.  ``masked_ffn`` provides
+     dense/"exact"/tiled/Pallas execution modes.
+"""
+from repro.core.predictor import (  # noqa: F401
+    MoRLayer, binarize, binary_preact, hybrid_predict, make_identity_layer,
+)
+from repro.core.calibration import (  # noqa: F401
+    CalibAccumulator, init_accumulator, update_accumulator, finalize_regression,
+)
+from repro.core.clustering import (  # noqa: F401
+    pairwise_cosines, closest_neighbor_graph, greedy_proxy_clustering,
+    cluster_layer,
+)
+from repro.core.policy import build_mor_layer, tile_mask_from_neuron_mask  # noqa: F401
+from repro.core.masked_ffn import mor_relu_matmul  # noqa: F401

@@ -1,0 +1,67 @@
+"""Offline calibration (paper §3.2.1): streaming per-neuron linear
+regression between binarised and base-precision pre-activations.
+
+Uses Welford-style moment accumulation so calibration streams over an
+arbitrary number of batches in O(N) memory per layer — no activation
+series is ever stored (important when a 'neuron' count is d_ff = 49152).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Accumulator pytree per layer: first/second moments of (x=p_bin, y=p_base).
+CalibAccumulator = Dict[str, jax.Array]
+
+
+def init_accumulator(n: int) -> CalibAccumulator:
+    z = jnp.zeros((n,), jnp.float64 if jax.config.jax_enable_x64
+                  else jnp.float32)
+    return {"count": jnp.zeros((), z.dtype), "sx": z, "sy": z,
+            "sxx": z, "syy": z, "sxy": z}
+
+
+def update_accumulator(acc: CalibAccumulator, p_bin: jax.Array,
+                       p_base: jax.Array) -> CalibAccumulator:
+    """p_bin/p_base: (..., N) pre-activation samples for this batch."""
+    x = p_bin.reshape(-1, p_bin.shape[-1]).astype(acc["sx"].dtype)
+    y = p_base.reshape(-1, p_base.shape[-1]).astype(acc["sx"].dtype)
+    return {
+        "count": acc["count"] + x.shape[0],
+        "sx": acc["sx"] + x.sum(0),
+        "sy": acc["sy"] + y.sum(0),
+        "sxx": acc["sxx"] + (x * x).sum(0),
+        "syy": acc["syy"] + (y * y).sum(0),
+        "sxy": acc["sxy"] + (x * y).sum(0),
+    }
+
+
+def finalize_regression(acc: CalibAccumulator, eps: float = 1e-12
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """-> (m, b, c): slope, intercept, Pearson correlation per neuron.
+
+    Degenerate neurons (zero variance on either side) get c = 0 so the
+    threshold test disables the binary rookie for them."""
+    n = jnp.maximum(acc["count"], 1.0)
+    mx, my = acc["sx"] / n, acc["sy"] / n
+    vx = acc["sxx"] / n - mx * mx
+    vy = acc["syy"] / n - my * my
+    cov = acc["sxy"] / n - mx * my
+    m = cov / jnp.maximum(vx, eps)
+    b = my - m * mx
+    denom = jnp.sqrt(jnp.maximum(vx, eps) * jnp.maximum(vy, eps))
+    c = jnp.where((vx > eps) & (vy > eps), cov / denom, 0.0)
+    return (m.astype(jnp.float32), b.astype(jnp.float32),
+            c.astype(jnp.float32))
+
+
+def calibrate_from_taps(tap_stream, n: int) -> Tuple[jax.Array, jax.Array,
+                                                     jax.Array]:
+    """Convenience: consume an iterator of (p_bin, p_base) batch pairs."""
+    acc = init_accumulator(n)
+    upd = jax.jit(update_accumulator)
+    for p_bin, p_base in tap_stream:
+        acc = upd(acc, p_bin, p_base)
+    return finalize_regression(acc)

@@ -1,0 +1,117 @@
+"""Offline angle-based clustering (paper §3.2.2).
+
+The sign of ``dot(C, A)`` vs ``dot(C, B)`` disagrees with probability
+theta/360 for uniformly distributed C (paper Eqs. 3-6), so neurons whose
+weight vectors subtend a small angle can share one *proxy* evaluation.
+
+Algorithm (verbatim from the paper): build a directed graph with an edge
+from every neuron to its angularly-closest neuron, sort nodes by
+descending indegree, and greedily pop nodes: the popped node becomes a
+proxy and all nodes pointing at it join its cluster.  This runs offline
+(weights are fixed), so it is plain numpy — but the angle computation is
+blocked so d_ff ~ 50k fits in memory.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+
+def pairwise_cosines(w: np.ndarray, block: int = 2048) -> np.ndarray:
+    """w: (K, N) — one weight vector per output neuron (column).
+    Returns the (N, N) cosine matrix, computed in (block x N) slabs."""
+    wn = w / np.maximum(np.linalg.norm(w, axis=0, keepdims=True), 1e-12)
+    n = wn.shape[1]
+    out = np.empty((n, n), np.float32)
+    for i in range(0, n, block):
+        out[i:i + block] = (wn[:, i:i + block].T @ wn).astype(np.float32)
+    return out
+
+
+def closest_neighbor_graph(w: np.ndarray, max_angle_deg: float = 90.0,
+                           block: int = 2048) -> Tuple[np.ndarray, np.ndarray]:
+    """-> (nn_idx, nn_angle): for each neuron, its closest other neuron by
+    angle, and that angle in degrees.  Neurons whose closest angle exceeds
+    ``max_angle_deg`` point at themselves (they will not be clustered).
+    Memory: O(block * N)."""
+    wn = (w / np.maximum(np.linalg.norm(w, axis=0, keepdims=True), 1e-12)
+          ).astype(np.float32)
+    n = wn.shape[1]
+    nn_idx = np.empty((n,), np.int64)
+    best_cos = np.empty((n,), np.float32)
+    for i in range(0, n, block):
+        cos = wn[:, i:i + block].T @ wn              # (b, N)
+        cols = np.arange(i, min(i + block, n))
+        cos[np.arange(len(cols)), cols] = -2.0        # exclude self
+        nn_idx[cols] = np.argmax(cos, axis=1)
+        best_cos[cols] = cos[np.arange(len(cols)), nn_idx[cols]]
+    nn_angle = np.degrees(np.arccos(np.clip(best_cos, -1.0, 1.0)))
+    too_far = nn_angle >= max_angle_deg
+    nn_idx[too_far] = np.where(too_far)[0]            # self-loop = unclustered
+    return nn_idx, nn_angle
+
+
+def greedy_proxy_clustering(nn_idx: np.ndarray) -> Tuple[np.ndarray,
+                                                         np.ndarray]:
+    """Paper's indegree-greedy proxy election.
+
+    -> (proxy_of, is_proxy): proxy_of[j] = the proxy neuron for j (itself
+    if j is a proxy or unclustered)."""
+    n = len(nn_idx)
+    indegree = np.bincount(nn_idx, minlength=n)
+    # self-loops mark unclustered nodes; don't let them inflate indegree
+    self_loop = nn_idx == np.arange(n)
+    indegree[self_loop] = np.maximum(indegree[self_loop] - 1, 0)
+
+    alive = np.ones(n, bool)
+    proxy_of = np.arange(n)
+    is_proxy = np.zeros(n, bool)
+    # process nodes in descending indegree (stable order for determinism)
+    order = np.argsort(-indegree, kind="stable")
+    # reverse adjacency: who points at me
+    rev_sorted = np.argsort(nn_idx, kind="stable")
+    starts = np.searchsorted(nn_idx[rev_sorted], np.arange(n))
+    ends = np.searchsorted(nn_idx[rev_sorted], np.arange(n), side="right")
+    for node in order:
+        if not alive[node]:
+            continue
+        alive[node] = False
+        is_proxy[node] = True
+        members = rev_sorted[starts[node]:ends[node]]
+        members = members[alive[members] & (members != node)]
+        proxy_of[members] = node
+        alive[members] = False
+    # anything left alive (shouldn't happen) becomes its own proxy
+    is_proxy[alive] = True
+    return proxy_of, is_proxy
+
+
+def cluster_layer(w: np.ndarray, max_angle_deg: float = 90.0) -> Dict:
+    """Full offline clustering for one layer's (K, N) weight matrix."""
+    nn_idx, nn_angle = closest_neighbor_graph(w, max_angle_deg)
+    proxy_of, is_proxy = greedy_proxy_clustering(nn_idx)
+    return {
+        "nn_idx": nn_idx,
+        "nn_angle": nn_angle,
+        "proxy_of": proxy_of,
+        "is_proxy": is_proxy,
+        "n_proxies": int(is_proxy.sum()),
+    }
+
+
+def montecarlo_sign_agreement(theta_deg: float, dim: int, n_samples: int,
+                              seed: int = 0) -> float:
+    """Paper's Monte-Carlo check that P[sign disagree] = theta/180 holds in
+    high dimension (used by tests; the paper states theta/360 per
+    single-sided region, i.e. theta/180 total disagreement)."""
+    rng = np.random.default_rng(seed)
+    a = np.zeros(dim)
+    a[0] = 1.0
+    b = np.zeros(dim)
+    th = np.radians(theta_deg)
+    b[0], b[1] = np.cos(th), np.sin(th)
+    c = rng.normal(size=(n_samples, dim))
+    sa = c @ a > 0
+    sb = c @ b > 0
+    return float(np.mean(sa != sb))

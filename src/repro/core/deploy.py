@@ -1,0 +1,176 @@
+"""Offline MoR deployment: calibrate a trained model, cluster its ReLU
+layers, fold the tile permutation into the weights, and emit the stacked
+MoRLayer pytree the runtime consumes.
+
+This is the paper's offline stage (§3.2) end-to-end:
+  taps -> per-neuron (m, b, c) regression   [calibration.py]
+  weights -> angle clusters -> proxies       [clustering.py]
+  -> column permutation folded into w_gate/w_up (cols) + w_down (rows)
+  -> MoRLayer pytree stacked over layers (scan-consumable)
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.calibration import (finalize_regression, init_accumulator,
+                                    update_accumulator)
+from repro.core.clustering import cluster_layer
+from repro.core.policy import build_mor_layer
+
+
+def _stack_mor(layers: List[Dict]) -> Dict:
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def calibrate_lm(params: Dict, cfg: ModelConfig, forward: Callable,
+                 batches: Iterator[Dict], n_batches: int,
+                 layer_key: str = "layers") -> Tuple[Dict, Dict, Dict]:
+    """Calibrate a scan-stacked LM (dense/ssm/audio families).
+
+    -> (params with permuted FFN weights, mor pytree {layer_key: stacked},
+        report dict with Pearson stats)."""
+    L = cfg.n_layers
+    # locate the target weight stack: mlp (w_gate|w_up) or rwkv cm w_up
+    lp = params[layer_key]
+    if "mlp" in lp:
+        w_stack = lp["mlp"].get("w_gate", lp["mlp"]["w_up"])
+    else:
+        w_stack = lp["cm"]["w_up"]
+    N = w_stack.shape[-1]
+
+    acc = jax.vmap(lambda _: init_accumulator(N))(jnp.arange(L))
+    upd = jax.jit(jax.vmap(update_accumulator))
+    fwd = jax.jit(lambda p, b: forward(p, cfg, b, with_taps=True)[1]["taps"])
+    seen = 0
+    for batch in batches:
+        taps = fwd(params, batch)
+        acc = upd(acc, taps["p_bin"], taps["p_base"])
+        seen += 1
+        if seen >= n_batches:
+            break
+    m, b, c = jax.vmap(finalize_regression)(acc)
+    m, b, c = np.asarray(m), np.asarray(b), np.asarray(c)
+
+    mor_layers = []
+    w_np = np.asarray(w_stack, np.float32)
+    for l in range(L):
+        cl = cluster_layer(w_np[l], cfg.mor.max_cluster_angle)
+        mor_layers.append(build_mor_layer(m[l], b[l], c[l], cl, cfg.mor))
+    mor_stack = _stack_mor(mor_layers)
+
+    # fold permutations into the weights (offline, zero runtime cost)
+    perm = np.asarray(mor_stack["perm"])          # (L, N)
+    new_params = jax.tree_util.tree_map(lambda x: x, params)  # shallow copy
+
+    def permute_stack(w, axis):
+        w = np.asarray(w)
+        out = np.empty_like(w)
+        for l in range(L):
+            idx = perm[l]
+            out[l] = np.take(w[l], idx, axis=axis - 1)
+        return jnp.asarray(out)
+
+    if "mlp" in lp:
+        mlp = dict(lp["mlp"])
+        if "w_gate" in mlp:
+            mlp["w_gate"] = permute_stack(mlp["w_gate"], 2)
+        mlp["w_up"] = permute_stack(mlp["w_up"], 2)
+        mlp["w_down"] = permute_stack(mlp["w_down"], 1)
+        new_lp = dict(lp)
+        new_lp["mlp"] = mlp
+        new_params[layer_key] = new_lp
+    else:
+        cm = dict(lp["cm"])
+        cm["w_up"] = permute_stack(cm["w_up"], 2)
+        cm["w_down"] = permute_stack(cm["w_down"], 1)
+        new_lp = dict(lp)
+        new_lp["cm"] = cm
+        new_params[layer_key] = new_lp
+
+    report = {
+        "pearson_mean": float(c.mean()),
+        "pearson_frac_above_T": float((c > cfg.mor.corr_threshold).mean()),
+        "n_proxies_mean": float(np.mean([
+            len(np.unique(np.asarray(ml["proxy_slot"])))
+            for ml in mor_layers])),
+        "enabled_frac": float(np.asarray(mor_stack["enable"]).mean()),
+    }
+    return new_params, {layer_key: mor_stack}, report
+
+
+def calibrate_cnn(params: Dict, state: Dict, cfg: ModelConfig,
+                  forward: Callable, batches: Iterator[Dict],
+                  n_batches: int) -> Tuple[List, Dict]:
+    """Calibrate the paper's CNNs (per-conv-layer MoR with BN folding).
+    -> (mor list aligned with conv layers, report)."""
+    from repro.models.cnn import bn_fold, layer_weight_matrices
+    n_layers = len(params["layers"])
+    accs = [init_accumulator(lp["w"].shape[-1]) for lp in params["layers"]]
+    upd = jax.jit(update_accumulator)
+    fwd = jax.jit(lambda p, s, im: forward(p, s, cfg, im, train=False,
+                                           with_taps=True))
+    seen = 0
+    for batch in batches:
+        _, _, aux = fwd(params, state, batch["images"])
+        for i, tap in enumerate(aux["taps"]):
+            accs[i] = upd(accs[i], tap["p_bin"], tap["p_base"])
+        seen += 1
+        if seen >= n_batches:
+            break
+    mors = []
+    cs = []
+    for i, lp in enumerate(params["layers"]):
+        m, b, c = finalize_regression(accs[i])
+        w = np.asarray(lp["w"].reshape(-1, lp["w"].shape[-1]), np.float32)
+        cl = cluster_layer(w, cfg.mor.max_cluster_angle)
+        bn_s = bn_b = None
+        if cfg.batchnorm:
+            s, bias = bn_fold(lp["bn"], state["bn"][i])
+            bn_s, bn_b = np.asarray(s), np.asarray(bias)
+        mors.append(build_mor_layer(np.asarray(m), np.asarray(b),
+                                    np.asarray(c), cl, cfg.mor,
+                                    bn_scale=bn_s, bn_bias=bn_b))
+        cs.append(np.asarray(c))
+    report = {
+        "pearson_mean": float(np.mean([c.mean() for c in cs])),
+        "pearson_per_layer": [float(c.mean()) for c in cs],
+        "enabled_frac": float(np.mean(
+            [np.asarray(m["enable"]).mean() for m in mors])),
+    }
+    return mors, report
+
+
+def calibrate_tds(params: Dict, cfg: ModelConfig, forward: Callable,
+                  batches: Iterator[Dict], n_batches: int
+                  ) -> Tuple[List, Dict]:
+    """Calibrate TDS FC1 layers (taps alternate conv/fc — fc are odd)."""
+    n_layers = len(params["layers"])
+    accs = [init_accumulator(cfg.d_ff) for _ in range(n_layers)]
+    upd = jax.jit(update_accumulator)
+    fwd = jax.jit(lambda p, b: forward(p, cfg, b, with_taps=True))
+    seen = 0
+    for batch in batches:
+        _, aux = fwd(params, batch)
+        fc_taps = aux["taps"][1::2]       # conv tap, fc tap per layer
+        for i, tap in enumerate(fc_taps):
+            accs[i] = upd(accs[i], tap["p_bin"], tap["p_base"])
+        seen += 1
+        if seen >= n_batches:
+            break
+    mors = []
+    for i, lp in enumerate(params["layers"]):
+        m, b, c = finalize_regression(accs[i])
+        w = np.asarray(lp["fc1"], np.float32)
+        cl = cluster_layer(w, cfg.mor.max_cluster_angle)
+        # the FC bias folds into the predictor's affine term
+        mors.append(build_mor_layer(
+            np.asarray(m), np.asarray(b), np.asarray(c), cl, cfg.mor,
+            bn_bias=np.asarray(lp["fc1_b"])))
+    report = {"pearson_mean": float(np.mean(
+        [np.asarray(finalize_regression(a)[2]).mean() for a in accs]))}
+    return mors, report

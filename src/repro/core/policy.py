@@ -1,0 +1,111 @@
+"""Tile policy: fold calibration + clustering into a TPU-ready MoRLayer.
+
+This is the TPU translation of the paper's DNN memory format (§4.2):
+the paper stores proxies in one table and cluster members contiguously by
+cluster; we produce a **column permutation** that (a) packs each cluster's
+members into the same 128-wide output tile and (b) places proxies in the
+leading tiles, which are always computed.  The permutation is folded into
+the adjacent weight matrices offline, so the runtime never gathers.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs.base import MoRConfig
+from repro.core.predictor import MoRLayer
+
+
+def build_permutation(proxy_of: np.ndarray, is_proxy: np.ndarray
+                      ) -> np.ndarray:
+    """perm[new_pos] = old_index.  Proxies first (ordered by descending
+    cluster size so busy proxies land earliest), then members grouped by
+    their proxy — the paper's two-table layout, flattened."""
+    n = len(proxy_of)
+    sizes = np.bincount(proxy_of, minlength=n)
+    proxies = np.where(is_proxy)[0]
+    proxies = proxies[np.argsort(-sizes[proxies], kind="stable")]
+    members_of = {int(p): [] for p in proxies}
+    for j in range(n):
+        if not is_proxy[j]:
+            members_of[int(proxy_of[j])].append(j)
+    order = list(proxies)
+    for p in proxies:
+        order.extend(members_of[int(p)])
+    perm = np.asarray(order, np.int32)
+    assert len(np.unique(perm)) == n
+    return perm
+
+
+def build_mor_layer(m: np.ndarray, b: np.ndarray, c: np.ndarray,
+                    cluster: Optional[Dict], cfg: MoRConfig,
+                    bn_scale: Optional[np.ndarray] = None,
+                    bn_bias: Optional[np.ndarray] = None) -> MoRLayer:
+    """Assemble the online MoRLayer pytree in permuted column order.
+
+    ``cluster=None`` builds a binary-rookie-only layer (no spatial
+    predictor, identity permutation, proxy_slot = -1 sentinel)."""
+    n = len(m)
+    if cluster is None:
+        perm = np.arange(n, dtype=np.int32)
+        inv_perm = perm
+        proxy_slot = np.full(n, -1, np.int32)
+        is_proxy = np.zeros(n, bool)
+        enable = (c > cfg.corr_threshold)
+        return {
+            "m": jnp.asarray(m, jnp.float32),
+            "b": jnp.asarray(b, jnp.float32),
+            "enable": jnp.asarray(enable),
+            "proxy_slot": jnp.asarray(proxy_slot),
+            "is_proxy": jnp.asarray(is_proxy),
+            "perm": jnp.asarray(perm),
+            "inv_perm": jnp.asarray(inv_perm),
+            "bn_scale": jnp.asarray(
+                bn_scale if bn_scale is not None else np.ones(n),
+                jnp.float32),
+            "bn_bias": jnp.asarray(
+                bn_bias if bn_bias is not None else np.zeros(n),
+                jnp.float32),
+        }
+    perm = build_permutation(cluster["proxy_of"], cluster["is_proxy"])
+    inv_perm = np.empty_like(perm)
+    inv_perm[perm] = np.arange(n, dtype=np.int32)
+    proxy_slot = inv_perm[cluster["proxy_of"][perm]]  # permuted proxy index
+    enable = (c[perm] > cfg.corr_threshold)
+    return {
+        "m": jnp.asarray(m[perm], jnp.float32),
+        "b": jnp.asarray(b[perm], jnp.float32),
+        "enable": jnp.asarray(enable),
+        "proxy_slot": jnp.asarray(proxy_slot, jnp.int32),
+        "is_proxy": jnp.asarray(cluster["is_proxy"][perm]),
+        "perm": jnp.asarray(perm, jnp.int32),
+        "inv_perm": jnp.asarray(inv_perm, jnp.int32),
+        "bn_scale": jnp.asarray(
+            bn_scale[perm] if bn_scale is not None else np.ones(n),
+            jnp.float32),
+        "bn_bias": jnp.asarray(
+            bn_bias[perm] if bn_bias is not None else np.zeros(n),
+            jnp.float32),
+    }
+
+
+def tile_mask_from_neuron_mask(computed: jnp.ndarray, tile_m: int,
+                               tile_n: int) -> jnp.ndarray:
+    """computed: (M, N) bool neuron-level 'must compute' mask (permuted
+    order) -> (ceil(M/tile_m), ceil(N/tile_n)) bool tile mask.  A tile is
+    live iff ANY neuron in it must be computed for ANY row in the block."""
+    M, N = computed.shape
+    pm = (-M) % tile_m
+    pn = (-N) % tile_n
+    padded = jnp.pad(computed, ((0, pm), (0, pn)))
+    t = padded.reshape((M + pm) // tile_m, tile_m, (N + pn) // tile_n, tile_n)
+    return jnp.any(t, axis=(1, 3))
+
+
+def expand_tile_mask(tile_mask: jnp.ndarray, tile_m: int, tile_n: int,
+                     M: int, N: int) -> jnp.ndarray:
+    """Inverse of tile_mask_from_neuron_mask: broadcast back to (M, N)."""
+    big = jnp.repeat(jnp.repeat(tile_mask, tile_m, axis=0), tile_n, axis=1)
+    return big[:M, :N]

@@ -1,0 +1,142 @@
+"""The hybrid predictor itself (paper §3.2): binary rookie + proxy rookie.
+
+``MoRLayer`` is a plain pytree so it checkpoints/shards like any other
+parameters.  All online operations are jit-safe; the offline fitting lives
+in ``calibration.py`` / ``clustering.py``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+# A MoRLayer is a dict pytree with per-output-neuron fields (all length N,
+# stored in *permuted* (tile-packed) column order):
+#   m, b        : fitted line  p_hat = m * p_bin + b          (paper §3.2.1)
+#   enable      : binary rookie enabled (pearson c > T)        (paper Fig. 6)
+#   proxy_slot  : permuted column index of this neuron's proxy (paper §3.2.2)
+#   is_proxy    : proxies are always evaluated at base precision
+#   perm        : permuted -> original column index (int32[N])
+#   inv_perm    : original -> permuted column index (int32[N])
+#   bn_scale/bn_bias : folded batch-norm (gamma/sigma, beta - mu*gamma/sigma);
+#                      identity (1, 0) when the layer has no BN.
+MoRLayer = Dict[str, jax.Array]
+
+
+def make_identity_layer(n: int) -> MoRLayer:
+    """A no-op MoRLayer (nothing enabled, identity permutation)."""
+    idx = jnp.arange(n, dtype=jnp.int32)
+    return {
+        "m": jnp.ones((n,), jnp.float32),
+        "b": jnp.zeros((n,), jnp.float32),
+        "enable": jnp.zeros((n,), bool),
+        "proxy_slot": idx,
+        "is_proxy": jnp.ones((n,), bool),
+        "perm": idx,
+        "inv_perm": idx,
+        "bn_scale": jnp.ones((n,), jnp.float32),
+        "bn_bias": jnp.zeros((n,), jnp.float32),
+    }
+
+
+def binarize(x: jax.Array) -> jax.Array:
+    """Weight binarisation to +-1 from the sign bit (paper §3.2.1: 'the
+    1-bit weights are obtained from the sign bits'; zero maps to +1)."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(jnp.int8)
+
+
+def binarize_act(x: jax.Array) -> jax.Array:
+    """ACTIVATION binarisation: strictly-positive -> +1, else -1.
+
+    This differs from the weight convention at exactly x == 0, which is
+    measure-zero for signed inputs (layernormed TDS features, the paper's
+    Fig. 4 case) but is ~50% of entries for post-ReLU CNN inputs — with
+    zero -> +1 the binary dot product would carry NO information about
+    the input sparsity pattern (measured: Pearson 0.25 vs 0.8+).  An
+    XNOR-popcount binCU implements either convention at identical cost."""
+    return jnp.where(x > 0, 1.0, -1.0).astype(jnp.int8)
+
+
+def binary_preact(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Binarised dot product: sign_act(x) . sign(w), accumulated in int32.
+
+    x: (..., K)   w: (K, N)   ->   (..., N) float32.
+    On TPU this lowers to an int8 MXU matmul (the Pallas kernel in
+    ``repro.kernels.binary_dot`` is the hand-tiled version)."""
+    xs = binarize_act(x)
+    ws = binarize(w)
+    out = jax.lax.dot_general(
+        xs, ws, (((xs.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    return out.astype(jnp.float32)
+
+
+def estimate_preact(p_bin: jax.Array, mor: MoRLayer,
+                    residual: Optional[jax.Array] = None) -> jax.Array:
+    """Fitted line + BN fold (+ residual) -> estimated ReLU input.
+
+    Paper §3.2.1: 'p_hat = m * p_bin + b; if batch normalization and
+    residual connections are used, p_hat is transformed by the batch
+    normalization parameters and the residual input is added'."""
+    p_hat = mor["m"] * p_bin + mor["b"]
+    p_hat = p_hat * mor["bn_scale"] + mor["bn_bias"]
+    if residual is not None:
+        p_hat = p_hat + residual.astype(p_hat.dtype)
+    return p_hat
+
+
+def hybrid_predict(x: jax.Array, w_perm: jax.Array, mor: MoRLayer,
+                   preact_full: Optional[jax.Array] = None,
+                   residual: Optional[jax.Array] = None) -> jax.Array:
+    """Return a boolean mask (..., N) — True where the neuron MUST be
+    computed (predicted non-zero), False where both rookies agree the ReLU
+    output is zero.
+
+    ``w_perm`` is the weight matrix with columns already permuted into
+    tile-packed order.  ``preact_full``, when given (the "exact" evaluation
+    mode), supplies the true pre-activations from which proxy outcomes are
+    read; otherwise proxy pre-activations are computed here (only the proxy
+    columns are ever needed — in the tiled path they live in the leading
+    tiles and are computed anyway).
+    """
+    # proxy_slot == -1 is the "binary rookie alone" sentinel (no spatial
+    # predictor): the proxy test passes unconditionally.
+    slot = jnp.maximum(mor["proxy_slot"], 0)
+    if preact_full is None:
+        # gather proxy columns and evaluate them at base precision
+        proxy_cols = jnp.take(w_perm, slot, axis=1)
+        proxy_pre = jax.lax.dot_general(
+            x, proxy_cols, (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    else:
+        proxy_pre = jnp.take(preact_full.astype(jnp.float32), slot, axis=-1)
+    proxy_relu_in = proxy_pre * mor["bn_scale"][slot] + mor["bn_bias"][slot]
+    if residual is not None:
+        proxy_relu_in = proxy_relu_in + jnp.take(
+            residual.astype(jnp.float32), slot, axis=-1)
+    proxy_says_zero = (proxy_relu_in < 0.0) | (mor["proxy_slot"] < 0)
+
+    p_bin = binary_preact(x, w_perm)
+    p_hat = estimate_preact(p_bin, mor, residual)
+    binary_says_zero = p_hat < 0.0
+
+    skip = proxy_says_zero & binary_says_zero & mor["enable"] & ~mor["is_proxy"]
+    return ~skip
+
+
+def prediction_breakdown(true_preact: jax.Array, computed_mask: jax.Array):
+    """Paper Fig. 12 categories, as fractions of all outputs.
+
+    true_preact: the real ReLU inputs (after BN/residual); computed_mask:
+    the hybrid predictor's decision (True = evaluated at base precision).
+    """
+    truly_zero = true_preact <= 0.0
+    pred_zero = ~computed_mask
+    n = true_preact.size
+    return {
+        "correct_zero": jnp.sum(pred_zero & truly_zero) / n,
+        "incorrect_zero": jnp.sum(pred_zero & ~truly_zero) / n,
+        "correct_nonzero": jnp.sum(computed_mask & ~truly_zero) / n,
+        "incorrect_nonzero": jnp.sum(computed_mask & truly_zero) / n,
+    }

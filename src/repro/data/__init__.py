@@ -1,0 +1,4 @@
+from repro.data.pipeline import (  # noqa: F401
+    DataConfig, make_train_iterator, synthetic_lm_batch, synthetic_image_batch,
+    synthetic_frames_batch,
+)

@@ -1,0 +1,141 @@
+"""Deterministic, host-sharded data pipeline.
+
+Synthetic corpora with real learnable structure (Markov token chains,
+class-conditional image patterns, formant-like audio frames) so small
+models actually *learn* and develop the activation statistics MoR
+exploits — pure-noise data would give degenerate ReLU sparsity.
+
+Sharding contract: host h of H draws disjoint streams via
+fold_in(seed, step * H + h); a restart at step s reproduces the exact
+batch sequence (checkpoint/restore determinism, tested).
+"""
+from __future__ import annotations
+
+import threading
+import queue as _queue
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    host_id: int = 0
+    n_hosts: int = 1
+    prefetch: int = 2
+
+
+_MARKOV_STATES = 64
+
+
+def _markov_tables(vocab: int, seed: int):
+    rng = np.random.default_rng(seed)
+    trans = rng.dirichlet(np.full(_MARKOV_STATES, 0.3), _MARKOV_STATES)
+    emit = rng.integers(0, vocab, size=(_MARKOV_STATES, 8))
+    return trans, emit
+
+
+def synthetic_lm_batch(cfg: ModelConfig, batch: int, seq: int, *,
+                       seed: int, step: int, host: int = 0,
+                       n_hosts: int = 1) -> Dict[str, np.ndarray]:
+    """Markov-chain token stream: next-token prediction is learnable."""
+    rng = np.random.default_rng(
+        np.random.SeedSequence([seed, step * n_hosts + host]))
+    trans, emit = _markov_tables(max(cfg.vocab_size, 8), seed)
+    states = rng.integers(0, _MARKOV_STATES, size=batch)
+    toks = np.empty((batch, seq + 1), np.int32)
+    for t in range(seq + 1):
+        toks[:, t] = emit[states, rng.integers(0, 8, size=batch)]
+        cum = np.cumsum(trans[states], axis=1)
+        states = (cum > rng.random((batch, 1))).argmax(1)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def synthetic_image_batch(cfg: ModelConfig, batch: int, *, seed: int,
+                          step: int, host: int = 0, n_hosts: int = 1
+                          ) -> Dict[str, np.ndarray]:
+    """Class-conditional frequency patterns + noise (CIFAR-like task)."""
+    rng = np.random.default_rng(
+        np.random.SeedSequence([seed, step * n_hosts + host]))
+    n_cls = cfg.cnn_num_classes
+    s = cfg.img_size
+    labels = rng.integers(0, n_cls, size=batch).astype(np.int32)
+    yy, xx = np.mgrid[0:s, 0:s] / s
+    imgs = np.empty((batch, s, s, 3), np.float32)
+    for c in range(3):
+        freq = 1.0 + labels[:, None, None] * 0.7 + c
+        phase = labels[:, None, None] * 1.3 + c * 2.1
+        imgs[..., c] = np.sin(2 * np.pi * freq * (xx + yy)[None] + phase)
+    imgs += 0.35 * rng.standard_normal(imgs.shape).astype(np.float32)
+    return {"images": imgs, "labels": labels}
+
+
+def synthetic_frames_batch(cfg: ModelConfig, batch: int, seq: int, *,
+                           seed: int, step: int, host: int = 0,
+                           n_hosts: int = 1) -> Dict[str, np.ndarray]:
+    """Formant-like frame features + piecewise-constant targets (TDS/ASR)."""
+    rng = np.random.default_rng(
+        np.random.SeedSequence([seed, step * n_hosts + host]))
+    d = cfg.d_model
+    labels = np.repeat(rng.integers(0, cfg.vocab_size, (batch, seq // 4 + 1)),
+                       4, axis=1)[:, :seq].astype(np.int32)
+    t = np.arange(seq)[None, :, None]
+    k = np.arange(d)[None, None, :]
+    frames = np.sin(0.1 * (labels[..., None] + 1) * t / (1 + k % 7)) \
+        + 0.3 * rng.standard_normal((batch, seq, d))
+    return {"frames": frames.astype(np.float32), "labels": labels}
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeSpec, dcfg: DataConfig,
+               step: int, batch_override: Optional[int] = None) -> Dict:
+    b = batch_override or shape.global_batch
+    if cfg.family == "cnn":
+        return synthetic_image_batch(cfg, b, seed=dcfg.seed, step=step,
+                                     host=dcfg.host_id, n_hosts=dcfg.n_hosts)
+    if cfg.family == "tds" or cfg.frontend == "audio_stub":
+        d = synthetic_frames_batch(cfg, b, shape.seq_len, seed=dcfg.seed,
+                                   step=step, host=dcfg.host_id,
+                                   n_hosts=dcfg.n_hosts)
+        return d
+    return synthetic_lm_batch(cfg, b, shape.seq_len, seed=dcfg.seed,
+                              step=step, host=dcfg.host_id,
+                              n_hosts=dcfg.n_hosts)
+
+
+def make_train_iterator(cfg: ModelConfig, shape: ShapeSpec, dcfg: DataConfig,
+                        start_step: int = 0,
+                        batch_override: Optional[int] = None,
+                        ) -> Iterator[Dict]:
+    """Background-thread prefetching iterator (overlap host data gen with
+    device compute); deterministic given (seed, start_step)."""
+    q: _queue.Queue = _queue.Queue(maxsize=dcfg.prefetch)
+    stop = threading.Event()
+
+    def worker():
+        step = start_step
+        while not stop.is_set():
+            try:
+                q.put(make_batch(cfg, shape, dcfg, step, batch_override),
+                      timeout=0.5)
+                step += 1
+            except _queue.Full:
+                continue
+
+    th = threading.Thread(target=worker, daemon=True)
+    th.start()
+
+    class _It:
+        def __iter__(self):
+            return self
+
+        def __next__(self):
+            return q.get()
+
+        def close(self):
+            stop.set()
+
+    return _It()

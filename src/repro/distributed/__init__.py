@@ -1,0 +1,4 @@
+from repro.distributed.sharding_rules import (  # noqa: F401
+    ShardingRules, default_rules, param_sharding, activation_context,
+    constrain, batch_sharding, mesh_axes,
+)

@@ -1,0 +1,325 @@
+"""Sharding rules: logical-axis -> mesh-axis mapping for params and
+activations (DP + FSDP + TP + SP + EP, pod axis = extra DP dim).
+
+Params are named by pytree path; ``param_sharding`` pattern-matches path
+suffixes to PartitionSpecs.  Activations are constrained inside model code
+through ``constrain(x, kind)`` which is a no-op outside an
+``activation_context`` — so the same model code runs un-sharded on CPU
+smoke tests and fully sharded in the dry-run/launcher.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_TLS = threading.local()
+
+
+def mesh_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def _dp_axes(mesh: Mesh):
+    """Data-parallel axes: ('pod','data') when a pod axis exists."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Pattern (regex on '/'-joined param path) -> PartitionSpec factory.
+
+    Specs may reference the logical axes 'dp' (data+pod), 'tp' ('model');
+    they are resolved against the active mesh."""
+    rules: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...]
+    sequence_parallel: bool = False
+
+    def resolve(self, spec: Tuple[Optional[str], ...], mesh: Mesh) -> P:
+        out = []
+        for ax in spec:
+            if ax is None:
+                out.append(None)
+            elif ax == "dp":
+                dp = _dp_axes(mesh)
+                out.append(dp if len(dp) > 1 else (dp[0] if dp else None))
+            elif ax == "tp":
+                out.append("model" if "model" in mesh.axis_names else None)
+            else:
+                out.append(ax if ax in mesh.axis_names else None)
+        return P(*out)
+
+
+# Parameter rules: matched against the '/'-joined path, first match wins.
+# Layout: TP on the 'model' axis over heads/d_ff/experts/vocab, FSDP over
+# 'data' on the other major dim (ZeRO-3; XLA inserts the all-gathers).
+_PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    # embeddings / unembedding
+    (r"embed$", ("tp", "dp")),
+    (r"lm_head$", ("dp", "tp")),
+    # attention (GQA + MLA)
+    (r"(wq|wk|wv)$", ("dp", "tp")),
+    (r"wo$", ("tp", "dp")),
+    (r"(bq|bk|bv)$", ("tp",)),
+    (r"wq_a$", ("dp", "tp")),
+    (r"wq_b$", ("dp", "tp")),
+    (r"wkv_a$", ("dp", "tp")),
+    (r"(wk_b|wv_b)$", ("dp", "tp")),
+    # dense FFN
+    (r"(w_gate|w_up)$", ("dp", "tp")),
+    (r"w_down$", ("tp", "dp")),
+    # MoE experts: EP handled by moe-specific rule injected per-config
+    (r"router$", ("dp", "tp")),
+    (r"moe_ep/(w_gate|w_up)$", ("tp", "dp", None)),
+    (r"moe_ep/w_down$", ("tp", "dp", None)),
+    (r"moe_tp/(w_gate|w_up)$", (None, "dp", "tp")),
+    (r"moe_tp/w_down$", (None, "tp", "dp")),
+    # mamba2 / rwkv
+    (r"in_proj$", ("dp", "tp")),
+    (r"out_proj$", ("tp", "dp")),
+    (r"(Wr|Wk|Wv|Wg|Wo|wA|wB)$", ("dp", "tp")),
+    (r"conv_w$", (None, "tp")),
+    (r"conv_b$", ("tp",)),
+    (r"norm_scale$", ("tp",)),
+    # MoR predictor tables: per-output-neuron vectors follow d_ff (tp)
+    (r"mor/.*(m|b|enable|proxy_slot|is_proxy|perm|inv_perm|bn_scale|bn_bias)$",
+     ("tp",)),
+    # everything else (norms, scalars, small tables): replicated
+    (r".*", ()),
+)
+
+
+# Alternative layout (measured better for mid-size dense models on the
+# 16x16 mesh): weights sharded on the CONTRACTION dim over 'model'
+# (Megatron column-parallel in, row-parallel out), FSDP over 'data' on
+# the other dim.  A/B-able via param_sharding(layout=...).
+_PARAM_RULES_CONTRACT: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    (r"embed$", ("tp", "dp")),
+    (r"lm_head$", ("tp", "dp")),
+    (r"(wq|wk|wv)$", ("tp", "dp")),
+    (r"wo$", ("dp", "tp")),
+    (r"(bq|bk|bv)$", ()),
+    (r"wq_a$", ("tp", "dp")),
+    (r"wq_b$", ("tp", "dp")),
+    (r"wkv_a$", ("tp", "dp")),
+    (r"(wk_b|wv_b)$", ("tp", "dp")),
+    (r"(w_gate|w_up)$", ("tp", "dp")),
+    (r"w_down$", ("dp", "tp")),
+    (r"router$", ("tp", None)),
+    (r"moe_ep/(w_gate|w_up)$", ("tp", "dp", None)),
+    (r"moe_ep/w_down$", ("tp", None, "dp")),
+    (r"moe_tp/(w_gate|w_up)$", (None, "tp", "dp")),
+    (r"moe_tp/w_down$", (None, "dp", "tp")),
+    (r"in_proj$", ("tp", "dp")),
+    (r"out_proj$", ("dp", "tp")),
+    (r"(Wr|Wk|Wv|Wg|Wo|wA|wB)$", ("tp", "dp")),
+    (r"conv_w$", (None, "tp")),
+    (r"conv_b$", ("tp",)),
+    (r"norm_scale$", ("tp",)),
+    (r"mor/.*", ("tp",)),
+    (r".*", ()),
+)
+
+
+def default_rules(sequence_parallel: bool = False,
+                  layout: str = "fsdp_tp") -> ShardingRules:
+    rules = (_PARAM_RULES_CONTRACT if layout == "contract_tp"
+             else _PARAM_RULES)
+    return ShardingRules(rules=rules, sequence_parallel=sequence_parallel)
+
+
+def param_sharding(params, mesh: Mesh, rules: Optional[ShardingRules] = None,
+                   moe_mode: str = "tp", layout: str = "fsdp_tp"):
+    """Build a NamedSharding pytree matching ``params``."""
+    rules = rules or default_rules(layout=layout)
+
+    def spec_for(path_str: str, leaf) -> P:
+        p = path_str
+        # tag expert tensors so EP/TP rules can disambiguate
+        if re.search(r"moe/(w_gate|w_up|w_down)$", p):
+            mode = moe_mode
+            if moe_mode == "ep_shmap":
+                # expert dim is leaf dim -3 for (L, E, d, f) stacks
+                e_dim = leaf.shape[-3]
+                mp = mesh.shape.get("model", 1)
+                mode = "ep" if e_dim % mp == 0 else "tp"
+            p = p.replace("moe/", f"moe_{mode}/")
+        for pat, spec in rules.rules:
+            if re.search(pat, p):
+                resolved = rules.resolve(spec, mesh)
+                specs = list(resolved)
+                # rules describe the LOGICAL per-layer shape; scan-stacked
+                # params carry a leading L dim (and only that) extra —
+                # right-align the spec so L stays unsharded (the scan
+                # streams one layer per trip; sharding L would turn every
+                # layer slice into a cross-device gather)
+                if leaf.ndim > len(specs):
+                    specs = [None] * (leaf.ndim - len(specs)) + specs
+                specs = specs[:leaf.ndim]
+                # drop sharding on dims that don't divide evenly
+                for i, ax in enumerate(specs):
+                    if ax is None:
+                        continue
+                    axes = (ax,) if isinstance(ax, str) else tuple(ax)
+                    size = 1
+                    for a in axes:
+                        size *= mesh.shape[a]
+                    if leaf.shape[i] % size != 0:
+                        specs[i] = None
+                return P(*specs)
+        return P()
+
+    def walk(path, leaf):
+        path_str = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in path)
+        return NamedSharding(mesh, spec_for(path_str, leaf))
+
+    return jax.tree_util.tree_map_with_path(walk, params)
+
+
+def batch_sharding(batch, mesh: Mesh):
+    """Shard the leading (global-batch) dim over all DP axes."""
+    dp = _dp_axes(mesh)
+    spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def one(x):
+        if x.ndim == 0 or (spec and x.shape[0] % _dp_size(mesh) != 0):
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(spec))
+    return jax.tree_util.tree_map(one, batch)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    s = 1
+    for a in _dp_axes(mesh):
+        s *= mesh.shape[a]
+    return s
+
+
+# --- activation constraints -------------------------------------------------
+
+@contextlib.contextmanager
+def activation_context(mesh: Mesh, sequence_parallel: bool = False):
+    prev = getattr(_TLS, "ctx", None)
+    _TLS.ctx = (mesh, sequence_parallel)
+    try:
+        yield
+    finally:
+        _TLS.ctx = prev
+
+
+_ACT_SPECS: Dict[str, Tuple] = {
+    # (B, S, D) residual stream; S over model axis if sequence-parallel
+    "residual": ("dp", "sp_seq", None),
+    "residual_decode": ("dp", None, None),
+    "logits": ("dp", None, "tp"),
+    "ffn_hidden": ("dp", None, "tp"),
+    "heads": ("dp", None, "tp", None),       # (B, S, H, hd)
+    "kv_cache": ("dp", None, "tp", None),
+    "expert_buf": ("tp", None, None),        # (E, C, d) under EP
+    "expert_hidden_ep": ("tp", None, None),  # (E, C, f) under EP
+    "expert_hidden_tp": (None, None, "tp"),  # (E, C, f) under TP
+    # TP-standard FFN/attention interior layouts (2D flattened tokens):
+    # input gathered on model, hidden sharded over model -> single
+    # all-reduce of the (T, d) down-projection partials
+    "ffn_in_2d": ("dp", None),
+    "ffn_hidden_2d": ("dp", "tp"),
+    "w_down_grad": ("tp", "dp"),
+    "attn_in": ("dp", None, None),
+}
+
+
+def constrain(x, kind: str):
+    """Sharding constraint applied to BOTH the primal and (via custom_vjp)
+    its cotangent: without the backward pin, XLA derives gather-heavy
+    layouts through `transpose(jvp())` (measured: a 9.9 GB/layer
+    all-gather of the full-d_ff hidden grad in the qwen2-7b train cell)."""
+    ctx = getattr(_TLS, "ctx", None)
+    if ctx is None:
+        return x
+    return _constrain_vjp(x, kind)
+
+
+import functools as _functools  # noqa: E402
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _constrain_vjp(x, kind: str):
+    return _constrain_impl(x, kind)
+
+
+def _constrain_fwd(x, kind: str):
+    return _constrain_impl(x, kind), None
+
+
+def _constrain_bwd(kind: str, _, g):
+    return (_constrain_impl(g, kind),)
+
+
+_constrain_vjp.defvjp(_constrain_fwd, _constrain_bwd)
+
+
+def constrain_grad(x, kind: str):
+    """Identity in the forward pass; constrains only the COTANGENT.
+
+    Used at TP block outputs: the forward residual stays sequence-
+    sharded, but the incoming backward cotangent is pinned to the
+    seq-gathered layout before it transposes through the block's matmuls
+    (pinning the forward output instead forces an extra forward
+    all-gather per layer — measured 3.4x flops via recompute)."""
+    ctx = getattr(_TLS, "ctx", None)
+    if ctx is None:
+        return x
+    return _constrain_grad_vjp(x, kind)
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _constrain_grad_vjp(x, kind: str):
+    return x
+
+
+def _cg_fwd(x, kind: str):
+    return x, None
+
+
+def _cg_bwd(kind: str, _, g):
+    return (_constrain_impl(g, kind),)
+
+
+_constrain_grad_vjp.defvjp(_cg_fwd, _cg_bwd)
+
+
+def _constrain_impl(x, kind: str):
+    ctx = getattr(_TLS, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, seq_par = ctx
+    spec = _ACT_SPECS.get(kind)
+    if spec is None:
+        return x
+    out = []
+    for i, ax in enumerate(spec[:x.ndim]):
+        if ax == "dp":
+            dp = _dp_axes(mesh)
+            ax_r = dp if len(dp) > 1 else (dp[0] if dp else None)
+        elif ax == "sp_seq":
+            ax_r = "model" if (seq_par and "model" in mesh.axis_names) else None
+        elif ax == "tp":
+            ax_r = "model" if "model" in mesh.axis_names else None
+        else:
+            ax_r = None
+        # skip non-divisible dims
+        if ax_r is not None:
+            axes = (ax_r,) if isinstance(ax_r, str) else tuple(ax_r)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if x.shape[i] % size != 0:
+                ax_r = None
+        out.append(ax_r)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*out)))

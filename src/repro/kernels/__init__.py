@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the MoR hot paths (+ ops.py wrappers, ref.py
+oracles).  Validated in interpret mode on CPU; lowering targets TPU."""

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: matmul with tile-granular output skipping.
+
+The MoR tile mask (scalar-prefetched into SMEM) gates the MXU work for
+each (row-block x 128-col) output tile: dead tiles write zeros without
+issuing dot products.  This is the compute-skip half of the paper's
+benefit; the DMA-skip half needs the compacted variant
+(``gather_matmul``), because block DMAs declared via BlockSpec are
+unconditional under a static grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(mask_ref, x_ref, w_ref, o_ref, acc_ref):
+    j, k = pl.program_id(1), pl.program_id(2)
+    live = mask_ref[pl.program_id(0) * pl.num_programs(1) + j] != 0
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(live)
+    def _mac():
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_m", "tile_n", "bk", "interpret"))
+def masked_matmul(x: jax.Array, w: jax.Array, tile_mask: jax.Array, *,
+                  tile_m: int = 128, tile_n: int = 128, bk: int = 512,
+                  interpret: bool = False) -> jax.Array:
+    """x: (M, K) @ w: (K, N) with (M/tile_m, N/tile_n) bool tile mask."""
+    M, K = x.shape
+    _, N = w.shape
+    tile_m, bk, tile_n = min(tile_m, M), min(bk, K), min(tile_n, N)
+    assert M % tile_m == 0 and K % bk == 0 and N % tile_n == 0
+    grid = (M // tile_m, N // tile_n, K // bk)
+    assert tile_mask.shape == (grid[0], grid[1]), (tile_mask.shape, grid)
+    mask_flat = tile_mask.reshape(-1).astype(jnp.int32)
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((tile_m, bk), lambda i, j, k, m_ref: (i, k)),
+                pl.BlockSpec((bk, tile_n), lambda i, j, k, m_ref: (k, j)),
+            ],
+            out_specs=pl.BlockSpec((tile_m, tile_n),
+                                   lambda i, j, k, m_ref: (i, j)),
+            scratch_shapes=[pltpu.VMEM((tile_m, tile_n), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(mask_flat, x, w)

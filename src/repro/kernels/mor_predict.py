@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: fused MoR tile-mask predictor.
+
+One pass over the activations produces the per-tile liveness mask:
+int8 sign matmul (binary rookie) -> fitted line + BN fold -> AND with the
+proxy rookie's verdict -> any() reduction over the tile.  The mask feeds
+``gather_matmul`` for the main matmul, so the predictor runs ahead of the
+heavy compute exactly like the paper's binCUs overlap the CUs (§4.1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, coef_ref, pn_ref, o_ref, acc_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xs = jnp.where(x_ref[...] > 0, 1, -1).astype(jnp.int8)   # act: 0 -> -1
+    ws = jnp.where(w_ref[...] >= 0, 1, -1).astype(jnp.int8)  # weight sign
+    acc_ref[...] += jax.lax.dot_general(
+        xs, ws, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _done():
+        p_bin = acc_ref[...].astype(jnp.float32)
+        m, b = coef_ref[0, :], coef_ref[1, :]
+        sc, bi = coef_ref[2, :], coef_ref[3, :]
+        en = coef_ref[4, :]
+        p_hat = (m[None, :] * p_bin + b[None, :]) * sc[None, :] + bi[None, :]
+        skip = (p_hat < 0.0) & (en[None, :] > 0.5) & (pn_ref[...] > 0)
+        o_ref[0, 0] = jnp.any(~skip).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n", "bk",
+                                             "interpret"))
+def mor_tile_mask(x: jax.Array, w: jax.Array, coef: jax.Array,
+                  proxy_neg: jax.Array, *, tile_m: int = 8,
+                  tile_n: int = 128, bk: int = 512,
+                  interpret: bool = False) -> jax.Array:
+    """x: (M, K); w: (K, N); coef: (5, N) float32 rows = [m, b, bn_scale,
+    bn_bias, enable]; proxy_neg: (M, N) int8 (1 = proxy predicted zero).
+    -> (M/tile_m, N/tile_n) int32 tile liveness."""
+    M, K = x.shape
+    _, N = w.shape
+    tile_m, bk, tile_n = min(tile_m, M), min(bk, K), min(tile_n, N)
+    assert M % tile_m == 0 and K % bk == 0 and N % tile_n == 0
+    grid = (M // tile_m, N // tile_n, K // bk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, tile_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((5, tile_n), lambda i, j, k: (0, j)),
+            pl.BlockSpec((tile_m, tile_n), lambda i, j, k: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((grid[0], grid[1]), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((tile_m, tile_n), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w, coef, proxy_neg)

@@ -1,0 +1,127 @@
+"""Jit'd public wrappers around the Pallas kernels: shape padding,
+interpret-mode fallback on CPU, and the MoRLayer-facing helpers.
+
+On this (CPU) container every kernel runs with ``interpret=True`` — the
+kernel body executes in Python against the same BlockSpec tiling the TPU
+would use, so correctness (incl. the scalar-prefetch index plumbing) is
+what is validated here; the lowering targets TPU.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import binary_dot as _bd
+from repro.kernels import gather_matmul as _gm
+from repro.kernels import masked_matmul as _mm
+from repro.kernels import mor_predict as _mp
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false")
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult0, mult1):
+    p0 = (-x.shape[0]) % mult0
+    p1 = (-x.shape[1]) % mult1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def binary_dot(x: jax.Array, w: jax.Array, *, bm: int = 128, bk: int = 512,
+               bn: int = 128) -> jax.Array:
+    """Padded/unpadded wrapper for kernels.binary_dot."""
+    M, K = x.shape
+    N = w.shape[1]
+    bm_, bk_, bn_ = min(bm, max(M, 8)), min(bk, K), min(bn, N)
+    xp = _pad_to(x, bm_, bk_)
+    wp = _pad_to(w, bk_, bn_)
+    out = _bd.binary_dot(xp, wp, bm=bm_, bk=bk_, bn=bn_,
+                         interpret=_interpret())
+    # K padding contributes sign_act(0)*sign_w(0) = (-1)*(+1) = -1 per
+    # padded k to every cell (exactly), so add it back.
+    k_pad = xp.shape[1] - K
+    if k_pad:
+        out = out + float(k_pad)
+    return out[:M, :N]
+
+
+def masked_matmul(x: jax.Array, w: jax.Array, tile_mask: jax.Array, *,
+                  tile_m: int = 8, tile_n: int = 128,
+                  bk: int = 512) -> jax.Array:
+    M, K = x.shape
+    N = w.shape[1]
+    bk_ = min(bk, K)
+    if K % bk_ != 0:
+        bk_ = K  # single K step when K is small/odd
+    xp = _pad_to(x, tile_m, bk_)
+    wp = _pad_to(w, bk_, tile_n)
+    nm = xp.shape[0] // tile_m
+    nn = wp.shape[1] // tile_n
+    mask = tile_mask
+    if mask.shape != (nm, nn):
+        mask = jnp.pad(mask.astype(jnp.int32),
+                       ((0, nm - mask.shape[0]), (0, nn - mask.shape[1])))
+    out = _mm.masked_matmul(xp, wp, mask, tile_m=tile_m, tile_n=tile_n,
+                            bk=bk_, interpret=_interpret())
+    return out[:M, :N]
+
+
+def gather_matmul(x: jax.Array, w: jax.Array, tile_mask: jax.Array, *,
+                  capacity: Optional[int] = None, capacity_frac: float = 1.0,
+                  tile_m: int = 8, tile_n: int = 128,
+                  bk: int = 512) -> jax.Array:
+    M, K = x.shape
+    N = w.shape[1]
+    bk_ = min(bk, K)
+    if K % bk_ != 0:
+        bk_ = K
+    xp = _pad_to(x, tile_m, bk_)
+    wp = _pad_to(w, bk_, tile_n)
+    nm = xp.shape[0] // tile_m
+    nn = wp.shape[1] // tile_n
+    mask = tile_mask
+    if mask.shape != (nm, nn):
+        mask = jnp.pad(mask.astype(jnp.int32),
+                       ((0, nm - mask.shape[0]), (0, nn - mask.shape[1])))
+    if capacity is None:
+        capacity = max(1, int(capacity_frac * nm * nn))
+    capacity = min(capacity, nm * nn)
+    out = _gm.gather_matmul(xp, wp, mask, capacity=capacity, tile_m=tile_m,
+                            tile_n=tile_n, bk=bk_, interpret=_interpret())
+    return out[:M, :N]
+
+
+def mor_tile_mask(x: jax.Array, w_perm: jax.Array, mor, proxy_neg: jax.Array,
+                  *, tile_m: int = 8, tile_n: int = 128,
+                  bk: int = 512) -> jax.Array:
+    """Fused predictor: build the (5, N) coef table from a MoRLayer and
+    run the fused kernel.  proxy_neg: (M, N) bool."""
+    M, K = x.shape
+    N = w_perm.shape[1]
+    coef = jnp.stack([mor["m"], mor["b"], mor["bn_scale"], mor["bn_bias"],
+                      mor["enable"].astype(jnp.float32)], 0)
+    bk_ = min(bk, K)
+    if K % bk_ != 0:
+        bk_ = K
+    xp = _pad_to(x, tile_m, bk_)
+    wp = _pad_to(w_perm, bk_, tile_n)
+    # K padding adds (-1)*(+1) to every p_bin entry -> pre-compensate b
+    k_pad = xp.shape[1] - K
+    if k_pad:
+        coef = coef.at[1, :].add(coef[0, :] * k_pad)
+    n_pad = wp.shape[1] - N
+    if n_pad:
+        coef = jnp.pad(coef, ((0, 0), (0, n_pad)))
+    pn = jnp.pad(proxy_neg.astype(jnp.int8),
+                 ((0, xp.shape[0] - M), (0, n_pad)))
+    mask = _mp.mor_tile_mask(xp, wp, coef, pn, tile_m=tile_m, tile_n=tile_n,
+                             bk=bk_, interpret=_interpret())
+    return mask.astype(bool)

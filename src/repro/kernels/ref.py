@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def binary_dot_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """sign_act(x) . sign(w): activations x > 0 -> +1 else -1 (post-ReLU
+    zeros are informative), weights w >= 0 -> +1 (sign-bit convention).
+    x: (M, K) float, w: (K, N) float -> (M, N) float32."""
+    xs = jnp.where(x > 0, 1.0, -1.0).astype(jnp.float32)
+    ws = jnp.where(w >= 0, 1.0, -1.0).astype(jnp.float32)
+    return xs @ ws
+
+
+def _expand_mask(mask, tile_m, tile_n, M, N):
+    big = jnp.repeat(jnp.repeat(mask, tile_m, 0), tile_n, 1)
+    return big[:M, :N]
+
+
+def masked_matmul_ref(x: jax.Array, w: jax.Array, tile_mask: jax.Array,
+                      tile_m: int, tile_n: int) -> jax.Array:
+    """x @ w where output tiles with mask==0 are exactly zero.
+    tile_mask: (ceil(M/tile_m), ceil(N/tile_n)) bool/int."""
+    out = (x.astype(jnp.float32) @ w.astype(jnp.float32))
+    keep = _expand_mask(tile_mask.astype(bool), tile_m, tile_n,
+                        x.shape[0], w.shape[1])
+    return jnp.where(keep, out, 0.0).astype(x.dtype)
+
+
+def gather_matmul_ref(x: jax.Array, w: jax.Array, tile_mask: jax.Array,
+                      tile_m: int, tile_n: int, capacity: int) -> jax.Array:
+    """Like masked_matmul_ref but only the first ``capacity`` live tiles
+    (row-major scan order) are computed — overflow tiles degrade to
+    predicted-zero, mirroring the static-capacity Pallas kernel."""
+    flat = tile_mask.astype(bool).reshape(-1)
+    live_rank = jnp.cumsum(flat) - 1          # rank among live tiles
+    kept = flat & (live_rank < capacity)
+    kept = kept.reshape(tile_mask.shape)
+    return masked_matmul_ref(x, w, kept, tile_m, tile_n)
+
+
+def mor_tile_mask_ref(x: jax.Array, w: jax.Array, m: jax.Array,
+                      b: jax.Array, bn_scale: jax.Array, bn_bias: jax.Array,
+                      enable: jax.Array, proxy_neg: jax.Array,
+                      tile_m: int, tile_n: int) -> jax.Array:
+    """Oracle for the fused predictor kernel: binary rookie line + BN fold,
+    AND with the proxy rookie, reduce to a tile-liveness mask.
+
+    proxy_neg: (M, N) bool — True where the neuron's proxy predicted zero
+    (for proxies themselves this is False: they are always computed).
+    -> (ceil(M/tile_m), ceil(N/tile_n)) bool."""
+    p_bin = binary_dot_ref(x, w)
+    p_hat = (m * p_bin + b) * bn_scale + bn_bias
+    skip = (p_hat < 0.0) & enable & proxy_neg
+    computed = ~skip
+    M, N = computed.shape
+    pm, pn = (-M) % tile_m, (-N) % tile_n
+    padded = jnp.pad(computed, ((0, pm), (0, pn)))
+    t = padded.reshape((M + pm) // tile_m, tile_m, (N + pn) // tile_n, tile_n)
+    return jnp.any(t, axis=(1, 3))

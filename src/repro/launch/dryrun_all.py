@@ -1,0 +1,87 @@
+"""Driver: run the full (arch x shape x mesh) dry-run grid, one subprocess
+per cell (the XLA device-count env must be set before jax init, and a
+compiler crash in one cell must not kill the sweep).
+
+Writes experiments/dryrun/<arch>_<shape>_<mesh>.json; cells with an
+existing OK record are skipped, so the sweep is resumable.
+
+Usage: PYTHONPATH=src python -m repro.launch.dryrun_all [--mesh pod]
+           [--archs a,b,...] [--force] [--timeout 1200]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = ["qwen1.5-110b", "granite-20b", "granite-3-2b", "qwen2-7b",
+         "deepseek-v2-236b", "mixtral-8x7b", "rwkv6-3b",
+         "phi-3-vision-4.2b", "zamba2-7b", "hubert-xlarge"]
+SHAPE_NAMES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+OUT_DIR = "experiments/dryrun"
+
+
+def cell_path(arch, shape, mesh):
+    return os.path.join(OUT_DIR, f"{arch}_{shape}_{mesh}.json")
+
+
+def is_done(path, force):
+    if force or not os.path.exists(path):
+        return False
+    try:
+        rec = json.load(open(path))
+        return rec.get("status", "").startswith(("ok", "skip"))
+    except Exception:
+        return False
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both", choices=("pod", "multipod",
+                                                       "both"))
+    ap.add_argument("--archs", default=None)
+    ap.add_argument("--shapes", default=None)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=2400)
+    args = ap.parse_args()
+    archs = args.archs.split(",") if args.archs else ARCHS
+    shapes = args.shapes.split(",") if args.shapes else SHAPE_NAMES
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    os.makedirs(OUT_DIR, exist_ok=True)
+
+    cells = [(a, s, m) for m in meshes for a in archs for s in shapes]
+    t_start = time.time()
+    n_ok = n_skip = n_fail = 0
+    for i, (a, s, m) in enumerate(cells):
+        path = cell_path(a, s, m)
+        if is_done(path, args.force):
+            print(f"[{i+1}/{len(cells)}] {a} {s} {m}: cached")
+            n_skip += 1
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", a,
+               "--shape", s, "--mesh", m, "--out", path]
+        t0 = time.time()
+        try:
+            r = subprocess.run(cmd, timeout=args.timeout,
+                               capture_output=True, text=True)
+            tail = (r.stdout + r.stderr).strip().splitlines()
+            msg = tail[-1][:160] if tail else ""
+            status = "ok" if r.returncode == 0 else "FAIL"
+        except subprocess.TimeoutExpired:
+            status, msg = "TIMEOUT", ""
+            json.dump({"arch": a, "shape": s, "mesh": m,
+                       "status": f"error: compile timeout {args.timeout}s"},
+                      open(path, "w"))
+        n_ok += status == "ok"
+        n_fail += status != "ok"
+        print(f"[{i+1}/{len(cells)}] {a} {s} {m}: {status} "
+              f"({time.time()-t0:.0f}s)  {msg}", flush=True)
+    print(f"done in {(time.time()-t_start)/60:.1f} min: "
+          f"{n_ok} ok, {n_skip} cached, {n_fail} failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,371 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE (verified
+in this repo: a 10-step scanned matmul reports 1x flops).  Scan-stacked
+models are 98% while-loop, so we walk the optimized HLO text ourselves:
+
+  * computations are parsed into op lists; ``while`` ops recurse into
+    their body/condition with a trip-count multiplier extracted from the
+    condition's ``constant(N)`` bound (jax scans lower to
+    ``lt(counter, N)`` — we take the largest s32 constant compared
+    against, a heuristic that is exact for scan/fori_loop);
+  * flops: dot (2 * prod(result) * prod(lhs contracting dims)) and
+    convolution (2 * prod(result) * prod(kernel spatial+input-feature));
+    elementwise flops are ignored (sub-1% for these models);
+  * bytes: optimized HLO is fused, so every op at computation level is a
+    fusion boundary; bytes = operand + result bytes summed over
+    non-trivial ops (parameters/constants/tuples/gte excluded as they are
+    buffer aliases, fusion-internal ops never appear at this level).
+
+Both are multiplied through nested loop trip counts.  This mirrors what a
+real-hardware profile would integrate over time, from the compiled
+artifact alone.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_TOKEN = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\((.*)$")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_TOKEN.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_bytes_promoted(type_str: str) -> int:
+    """f32 charged at 2 bytes/elem (bf16 promoted by CPU FloatNormalization)."""
+    total = 0
+    for dt, dims in _SHAPE_TOKEN.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        nb = 2 if dt == "f32" else _DTYPE_BYTES[dt]
+        total += n * nb
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_TOKEN.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+class Op:
+    __slots__ = ("name", "result_type", "opcode", "rest", "line")
+
+    def __init__(self, name, result_type, opcode, rest, line):
+        self.name = name
+        self.result_type = result_type
+        self.opcode = opcode
+        self.rest = rest
+        self.line = line
+
+
+def parse_hlo(text: str) -> Dict[str, List[Op]]:
+    comps: Dict[str, List[Op]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HEADER.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if m:
+            comps[cur].append(Op(m.group(1), m.group(2), m.group(3),
+                                 m.group(4), line))
+    return comps
+
+
+def _dot_flops(op: Op, comps, shapes: Dict[str, str]) -> float:
+    """2 * prod(result) * prod(lhs contracting dims)."""
+    out = _shape_elems(op.result_type)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    lhs_name = op.rest.split(",")[0].strip().lstrip("%")
+    lhs_type = shapes.get(lhs_name, "")
+    sm = _SHAPE_TOKEN.search(lhs_type)
+    if not (m and sm):
+        return 2.0 * out  # fallback: K unknown
+    dims = [int(d) for d in sm.group(2).split(",") if d]
+    contracted = 1
+    for i in m.group(1).split(","):
+        if i != "" and int(i) < len(dims):
+            contracted *= dims[int(i)]
+    return 2.0 * out * contracted
+
+
+def _conv_flops(op: Op, shapes: Dict[str, str]) -> float:
+    out = _shape_elems(op.result_type)
+    parts = [p.strip().lstrip("%") for p in op.rest.split(",")[:2]]
+    if len(parts) < 2:
+        return 2.0 * out
+    k_type = shapes.get(parts[1], "")
+    sm = _SHAPE_TOKEN.search(k_type)
+    if not sm:
+        return 2.0 * out
+    kdims = [int(d) for d in sm.group(2).split(",") if d]
+    # kernel = spatial... x in_features x out_features: flops multiplier is
+    # prod(kernel)/out_features
+    mult = 1
+    for d in kdims[:-1]:
+        mult *= d
+    return 2.0 * out * mult
+
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "copy-start", "copy-done", "after-all",
+               "iota", "broadcast"}
+
+_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+
+def _trip_count(cond_ops: List[Op]) -> int:
+    """Largest integer constant in the loop condition (exact for
+    scan/fori_loop bounds; 1 if none found)."""
+    best = 1
+    for op in cond_ops:
+        if op.opcode == "constant":
+            m = re.search(r"constant\((\d+)\)", op.line)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _called(op: Op, attr: str) -> Optional[str]:
+    m = re.search(attr + r"=%?([\w\.\-]+)", op.line)
+    return m.group(1) if m else None
+
+
+_PARAM_RE = re.compile(r"%?(param_(\d+)[\w\.]*)")
+
+
+def _param_slice_usage(fops: List[Op], bytes_fn=_shape_bytes) -> Tuple[Dict[int, float], set]:
+    """Per-param operand utilization inside a fused computation.
+
+    XLA fusions compute element-wise backwards from the root: a param
+    whose every use flows through transparent ops (convert/bitcast/
+    copy/transpose) into a narrowing op (slice/dynamic-slice/gather) is
+    only read at the narrowed size.  Returns (sliced: param idx ->
+    charged bytes, full_use: params read in full)."""
+    by_name: Dict[str, Op] = {f.name: f for f in fops}
+    consumers: Dict[str, List[Op]] = {}
+    for f in fops:
+        for tok in re.findall(r"%([\w\.\-]+)", f.rest):
+            consumers.setdefault(tok, []).append(f)
+    TRANSPARENT = {"convert", "bitcast", "copy", "transpose", "reshape"}
+    NARROW = {"slice", "dynamic-slice", "gather"}
+    sliced: Dict[int, float] = {}
+    full_use: set = set()
+    for f in fops:
+        if f.opcode != "parameter":
+            continue
+        m = _PARAM_RE.match(f.name)
+        if not m:
+            continue
+        idx = int(m.group(2))
+        charged = 0.0
+        full = False
+        frontier = [f.name]
+        seen = set()
+        while frontier and not full:
+            nm = frontier.pop()
+            if nm in seen:
+                continue
+            seen.add(nm)
+            for c in consumers.get(nm, []):
+                if c.opcode in NARROW:
+                    charged += bytes_fn(c.result_type)
+                elif c.opcode == "dynamic-update-slice":
+                    # base operand of a DUS is updated in place (output
+                    # aliasing): charge the update window, not the buffer
+                    refs = re.findall(r"%([\w\.\-]+)", c.rest)
+                    if refs and refs[0] == nm and len(refs) > 1 \
+                            and refs[1] in by_name:
+                        charged += bytes_fn(by_name[refs[1]].result_type)
+                    else:
+                        full = True
+                        break
+                elif c.opcode in TRANSPARENT:
+                    frontier.append(c.name)
+                else:
+                    full = True
+                    break
+        if full:
+            full_use.add(idx)
+        else:
+            sliced[idx] = sliced.get(idx, 0.0) + charged
+    return sliced, full_use
+
+
+def analyze(text: str, bf16_promoted: bool = False) -> Dict[str, float]:
+    """-> {flops, bytes, coll_bytes, coll_bytes_by_type, per-collective
+    wire bytes with trip counts applied}.
+
+    ``bf16_promoted``: the CPU backend's FloatNormalization pass promotes
+    bf16 buffers to f32 (measured: 7300 f32 vs 1500 bf16 tokens in a
+    bf16-model train step).  When set, f32 tensors inside while bodies
+    (model activations/weights — bf16 on the TPU target) are charged at
+    2 bytes/elem; f32 outside loops (optimizer update, fp32 CE) stays 4."""
+    comps = parse_hlo(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.search(r"ENTRY\s+%?([\w\.\-]+)", line)
+            if m:
+                entry = m.group(1)
+    if entry is None or entry not in comps:
+        # fall back: biggest computation
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else None
+    result = {"flops": 0.0, "bytes": 0.0,
+              "coll": defaultdict(float)}
+    contrib = defaultdict(float)   # (opcode, shape) -> bytes with trips
+
+    shapes_cache: Dict[str, Dict[str, str]] = {}
+
+    def shapes_of(comp: str) -> Dict[str, str]:
+        if comp not in shapes_cache:
+            d = {}
+            for op in comps[comp]:
+                d[op.name] = op.result_type
+            # parameters appear as ops too in optimized HLO
+            shapes_cache[comp] = d
+        return shapes_cache[comp]
+
+    visited_stack = []
+
+    def walk(comp: str, mult: float, in_loop: bool = False):
+        if comp not in comps or comp in visited_stack:
+            return
+        visited_stack.append(comp)
+        sh = shapes_of(comp)
+        sb = (_shape_bytes_promoted if (bf16_promoted and in_loop)
+              else _shape_bytes)
+        for op in comps[comp]:
+            oc = op.opcode
+            if oc == "while":
+                body = _called(op, "body")
+                cond = _called(op, "condition")
+                # XLA records the analysed trip count in backend_config
+                m = re.search(r'known_trip_count[":{\s]+n["\s:]+(\d+)',
+                              op.line)
+                if m:
+                    trips = int(m.group(1))
+                else:
+                    trips = _trip_count(comps.get(cond, [])) if cond else 1
+                if body:
+                    walk(body, mult * trips, True)
+                continue
+            if oc in ("call", "custom-call"):
+                tgt = _called(op, "to_apply") or _called(op, "called_computations")
+                if tgt:
+                    walk(tgt, mult, in_loop)
+            if oc == "conditional":
+                for attr in ("true_computation", "false_computation"):
+                    tgt = _called(op, attr)
+                    if tgt:
+                        walk(tgt, mult, in_loop)
+            if oc == "fusion":
+                tgt = _called(op, "calls")
+                if tgt:
+                    # flops of ops inside the fusion, bytes at boundary only
+                    for fop in comps.get(tgt, []):
+                        if fop.opcode == "dot":
+                            result["flops"] += mult * _dot_flops(
+                                fop, comps, shapes_of(tgt))
+                        elif fop.opcode == "convolution":
+                            result["flops"] += mult * _conv_flops(
+                                fop, shapes_of(tgt))
+                    # bytes: params only touched via dynamic-slice are
+                    # charged at slice size (weight streaming through a
+                    # scan reads one layer per trip, not the full stack)
+                    operands = [t.lstrip("%") for t in
+                                re.findall(r"%[\w\.\-]+",
+                                           op.rest.split("kind=")[0])]
+                    fbytes = sb(op.result_type)
+                    sliced, full_use = _param_slice_usage(comps[tgt], sb)
+                    for pos, opnd in enumerate(operands):
+                        if opnd not in sh:
+                            continue
+                        if pos in full_use or pos not in sliced:
+                            fbytes += sb(sh[opnd])
+                        else:
+                            fbytes += min(sliced[pos], sb(sh[opnd]))
+                    result["bytes"] += mult * fbytes
+                    contrib[("fusion", op.result_type.split("{")[0][:60])] \
+                        += mult * fbytes
+                    continue
+            if oc == "dot":
+                result["flops"] += mult * _dot_flops(op, comps, sh)
+            elif oc == "convolution":
+                result["flops"] += mult * _conv_flops(op, sh)
+            base = oc.replace("-start", "")
+            if base in _COLL:
+                result["coll"][base] += mult * sb(op.result_type)
+            if oc in ("dynamic-slice",):
+                # touches only the slice, not the full buffer
+                result["bytes"] += mult * 2 * sb(op.result_type)
+                contrib[(oc, op.result_type.split("{")[0][:60])] \
+                    += mult * 2 * sb(op.result_type)
+            elif oc == "dynamic-update-slice":
+                # reads + writes the update region (in-place on TPU)
+                ops_ = [t.lstrip("%") for t in
+                        re.findall(r"%[\w\.\-]+", op.rest)]
+                upd = sb(sh[ops_[1]]) if len(ops_) > 1 \
+                    and ops_[1] in sh else sb(op.result_type)
+                result["bytes"] += mult * 2 * upd
+            elif oc not in _SKIP_BYTES and not oc.endswith("-done"):
+                opnd_bytes = 0.0
+                # operand types are not inline in optimized HLO; use
+                # result-only accounting + operand lookup by name
+                for token in re.findall(r"%([\w\.\-]+)", op.rest):
+                    if token in sh:
+                        opnd_bytes += sb(sh[token])
+                result["bytes"] += mult * (sb(op.result_type)
+                                           + opnd_bytes)
+                contrib[(oc, op.result_type.split("{")[0][:60])] \
+                    += mult * (sb(op.result_type) + opnd_bytes)
+        visited_stack.pop()
+
+    if entry:
+        walk(entry, 1.0)
+    coll = dict(result["coll"])
+    top = sorted(contrib.items(), key=lambda kv: -kv[1])[:20]
+    return {"flops": result["flops"], "bytes": result["bytes"],
+            "coll_bytes_by_type": coll,
+            "coll_bytes": sum(coll.values()),
+            "top_byte_contributors": [
+                {"op": k[0], "shape": k[1], "bytes": v} for k, v in top]}

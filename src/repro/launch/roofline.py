@@ -1,0 +1,171 @@
+"""Roofline analysis from compiled XLA artifacts (no hardware needed).
+
+Three terms per (arch x shape x mesh), all in seconds-per-step-per-chip:
+  compute    = HLO_FLOPs / PEAK_FLOPS
+  memory     = HLO_bytes_accessed / HBM_BW
+  collective = wire_bytes / ICI_BW_EFFECTIVE
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()`` (per-device,
+post-SPMD).  Collective bytes are NOT in cost_analysis: we parse the
+compiled HLO text and sum result-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute (including
+async -start forms), applying the standard ring-wire factors
+(ar=2(g-1)/g~2, ag/rs=(g-1)/g~1, a2a~1/g... kept at 1 as a conservative
+bound, cp=1).
+
+Hardware constants (TPU v5e class, per chip):
+  197 TFLOP/s bf16; 819 GB/s HBM; ICI ~50 GB/s/link, 2 links engaged per
+  ring collective -> 100 GB/s effective.  Inter-pod (DCI) collectives are
+  charged at 25 GB/s; an HLO collective is charged to DCI iff its replica
+  group spans the pod axis (group size > devices-per-pod or the
+  channel-id heuristic fails closed to ICI).
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 2 * 50e9            # bytes/s / chip (2 links per ring)
+DCI_BW = 25e9                # bytes/s / chip across pods
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?\s*((?:[a-z0-9]+\[[0-9,]*\][^)]*?,?\s*)+)?"
+    r"\s*((?:f|bf|s|u|pred|c)[a-z0-9]*\[[0-9,]*\])?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"((?:f|bf|s|u|c)[0-9e: alnum]*?[0-9]+|pred)\[([0-9,]*)\]")
+
+_FACTORS = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+            "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str,
+                      devices_per_pod: Optional[int] = None) -> Dict:
+    """Sum collective wire bytes per type from (post-SPMD) HLO text."""
+    out = {k: 0.0 for k in _FACTORS}
+    dci_bytes = 0.0
+    for line in hlo_text.splitlines():
+        m = re.search(r"\s=\s(.+?)\s+"
+                      r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)(?:-start)?\(", line)
+        if not m:
+            continue
+        kind = m.group(2)
+        shapes = _SHAPE_RE.findall(m.group(1))
+        if not shapes:
+            continue
+        bytes_ = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        out[kind] += bytes_ * _FACTORS[kind]
+        if devices_per_pod:
+            g = _replica_group_size(line)
+            if g and g > devices_per_pod:
+                dci_bytes += bytes_ * _FACTORS[kind]
+    out["dci_bytes"] = dci_bytes
+    out["total_wire_bytes"] = sum(v for k, v in out.items()
+                                  if k in _FACTORS)
+    return out
+
+
+def _replica_group_size(line: str) -> Optional[int]:
+    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    return None
+
+
+def roofline_terms(cost: Dict, collectives: Dict,
+                   trip_multiplier: float = 1.0) -> Dict:
+    flops = float(cost.get("flops", 0.0)) * trip_multiplier
+    hbm = float(cost.get("bytes accessed", 0.0)) * trip_multiplier
+    ici_bytes = (collectives["total_wire_bytes"]
+                 - collectives.get("dci_bytes", 0.0)) * trip_multiplier
+    dci_bytes = collectives.get("dci_bytes", 0.0) * trip_multiplier
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm / HBM_BW
+    t_coll = ici_bytes / ICI_BW + dci_bytes / DCI_BW
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    return {
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": hbm,
+        "wire_bytes_per_chip": ici_bytes + dci_bytes,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "bound_time_s": max(t_compute, t_memory, t_coll),
+    }
+
+
+def model_flops(cfg, shape, n_chips: int) -> Dict:
+    """Analytic MODEL_FLOPS: 6*N*D train, 2*N*D inference (per chip)."""
+    from repro.configs.base import param_count
+    total, active = param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mf = 6.0 * active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mf = 2.0 * active * tokens
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        mf = 2.0 * active * tokens
+    return {"params_total": total, "params_active": active,
+            "model_flops_per_chip": mf / n_chips}
+
+
+def summarize(cost: Dict, hlo_text: str, cfg, shape, n_chips: int,
+              devices_per_pod: Optional[int] = None,
+              tripped: Optional[Dict] = None) -> Dict:
+    """``tripped``: result of hlo_cost.analyze() — trip-count-corrected
+    flops/bytes/collective-bytes.  When given it overrides XLA's
+    loop-body-once cost_analysis; the DCI share is estimated from the
+    per-line replica-group parse (collectives inside loop bodies keep the
+    same pod/intra-pod mix)."""
+    colls = parse_collectives(hlo_text, devices_per_pod)
+    if tripped is not None:
+        dci_frac = (colls.get("dci_bytes", 0.0) /
+                    colls["total_wire_bytes"]) if colls.get(
+                        "total_wire_bytes") else 0.0
+        wired = {k: _FACTORS[k] * v
+                 for k, v in tripped["coll_bytes_by_type"].items()}
+        total = sum(wired.values())
+        colls = {**wired, "total_wire_bytes": total,
+                 "dci_bytes": total * dci_frac}
+        cost = {"flops": tripped["flops"],
+                "bytes accessed": tripped["bytes"]}
+    terms = roofline_terms(cost, colls)
+    mf = model_flops(cfg, shape, n_chips)
+    useful = (mf["model_flops_per_chip"] /
+              terms["hlo_flops_per_chip"]) if terms["hlo_flops_per_chip"] else 0.0
+    mfu_bound = (mf["model_flops_per_chip"] / PEAK_FLOPS /
+                 terms["bound_time_s"]) if terms["bound_time_s"] else 0.0
+    return {
+        **terms, **mf,
+        "collective_breakdown": colls,
+        "useful_flop_ratio": useful,
+        "roofline_fraction": mfu_bound,
+    }

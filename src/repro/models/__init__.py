@@ -1,0 +1,70 @@
+"""Model API dispatch: every family exposes
+  init(key, cfg) -> params
+  forward(params, cfg, batch, **kw) -> (logits, aux)
+  cache_init(cfg, batch, max_len, dtype) -> cache      (decoder families)
+  decode_step(params, cfg, tokens, cache, **kw) -> (logits, cache)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class ModelAPI:
+    init: Callable
+    forward: Callable
+    cache_init: Optional[Callable] = None
+    decode_step: Optional[Callable] = None
+    has_decode: bool = True
+
+
+def get_model(cfg: ModelConfig) -> ModelAPI:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        from repro.models import transformer as t
+        return ModelAPI(t.init_params, t.forward, t.cache_init, t.decode_step)
+    if fam == "audio":
+        from repro.models import transformer as t
+        return ModelAPI(t.init_params, t.forward, None, None,
+                        has_decode=False)
+    if fam == "ssm":
+        from repro.models import rwkv_model as r
+        return ModelAPI(r.init_params, r.forward, r.cache_init, r.decode_step)
+    if fam == "hybrid":
+        from repro.models import hybrid as h
+        return ModelAPI(h.init_params, h.forward, h.cache_init, h.decode_step)
+    if fam == "cnn":
+        from repro.models import cnn
+        return ModelAPI(cnn.init_params,
+                        cnn.forward, None, None, has_decode=False)
+    if fam == "tds":
+        from repro.models import tds
+        return ModelAPI(tds.init_params, tds.forward, None, None,
+                        has_decode=False)
+    raise ValueError(f"unknown family {fam!r}")
+
+
+def supports_long_context(cfg: ModelConfig) -> bool:
+    """Sub-quadratic decode: SSM/hybrid state or bounded (SWA) KV."""
+    if cfg.family in ("ssm", "hybrid"):
+        return True
+    return cfg.sliding_window > 0
+
+
+def param_shapes(cfg: ModelConfig):
+    """ShapeDtypeStruct tree of the params — no allocation."""
+    api = get_model(cfg)
+    return jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0), cfg))
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int):
+    api = get_model(cfg)
+    assert api.cache_init is not None
+    return jax.eval_shape(
+        lambda: api.cache_init(cfg, batch, max_len, jnp.dtype(cfg.dtype)))

@@ -1,0 +1,183 @@
+"""The paper's CNN benchmarks: CNN10 / Darknet19 (conv-BN-ReLU stacks,
+Fig. 2b) and ResNet18 (conv-BN-ReLU + residual, Fig. 2c).
+
+Functional batch-norm: train mode uses batch statistics and returns
+updated running stats; eval mode uses running stats — which is exactly
+what MoR's BN folding consumes (scale = gamma/sigma, bias = beta -
+mu*gamma/sigma, paper §3.2.1).
+
+A conv output *channel* is a 'neuron' whose weight vector is the
+flattened (kh*kw*cin) filter; the binary rookie is the conv of sign
+tensors — same math as the FC case.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers.common import split_keys
+
+_BN_MOMENTUM = 0.9
+
+
+def _conv_init(key, cin, cout, k=3):
+    scale = (k * k * cin) ** -0.5
+    return jax.random.normal(key, (k, k, cin, cout), jnp.float32) * scale
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _bn_apply(p, s, x, train: bool):
+    if train:
+        mu = x.mean((0, 1, 2))
+        var = x.var((0, 1, 2))
+        new_s = {"mu": _BN_MOMENTUM * s["mu"] + (1 - _BN_MOMENTUM) * mu,
+                 "var": _BN_MOMENTUM * s["var"] + (1 - _BN_MOMENTUM) * var}
+    else:
+        mu, var = s["mu"], s["var"]
+        new_s = s
+    inv = jax.lax.rsqrt(var + 1e-5)
+    return (x - mu) * inv * p["gamma"] + p["beta"], new_s
+
+
+def bn_fold(p, s) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (scale, bias) s.t. relu_input = preact * scale + bias."""
+    inv = jax.lax.rsqrt(s["var"] + 1e-5)
+    return p["gamma"] * inv, p["beta"] - s["mu"] * p["gamma"] * inv
+
+
+def _strides(cfg: ModelConfig) -> List[int]:
+    """Downsample (stride 2) whenever channel count grows."""
+    ch = cfg.cnn_channels
+    return [2 if ch[i + 1] > ch[i] and i > 0 else 1
+            for i in range(len(ch) - 1)]
+
+
+def init_params(key, cfg: ModelConfig) -> Dict:
+    ch = cfg.cnn_channels
+    n = len(ch) - 1
+    ks = split_keys(key, n + 1)
+    layers = []
+    for i in range(n):
+        p: Dict[str, Any] = {"w": _conv_init(ks[i], ch[i], ch[i + 1])}
+        if cfg.batchnorm:
+            p["bn"] = {"gamma": jnp.ones((ch[i + 1],), jnp.float32),
+                       "beta": jnp.zeros((ch[i + 1],), jnp.float32)}
+        layers.append(p)
+    head = jax.random.normal(ks[n], (ch[-1], cfg.cnn_num_classes),
+                             jnp.float32) * ch[-1] ** -0.5
+    return {"layers": layers, "head": head}
+
+
+def init_state(cfg: ModelConfig) -> Dict:
+    ch = cfg.cnn_channels
+    return {"bn": [{"mu": jnp.zeros((c,), jnp.float32),
+                    "var": jnp.ones((c,), jnp.float32)}
+                   for c in ch[1:]]}
+
+
+def forward(params: Dict, state: Dict, cfg: ModelConfig, images, *,
+            train: bool = False, with_taps: bool = False,
+            mor: Optional[List] = None, mor_mode: str = "dense",
+            ) -> Tuple[jnp.ndarray, Dict, Dict]:
+    """-> (logits, new_state, aux).  aux['taps'][i] = calibration taps for
+    conv layer i; aux['mor_stats'] aggregated skip stats."""
+    x = images
+    strides = _strides(cfg)
+    new_bn = []
+    taps: List[Dict] = []
+    mstats: List[Dict] = []
+    shortcut = None
+    for i, lp in enumerate(params["layers"]):
+        pre = _conv(x, lp["w"], strides[i])
+        res_in = None
+        if cfg.residual and i % 2 == 1 and shortcut is not None \
+                and shortcut.shape == pre.shape:
+            res_in = shortcut
+        if cfg.batchnorm:
+            pre_bn, s_new = _bn_apply(lp["bn"], state["bn"][i], pre, train)
+            new_bn.append(s_new)
+        else:
+            pre_bn = pre
+            new_bn.append(state["bn"][i])
+        relu_in = pre_bn + (res_in if res_in is not None else 0.0)
+
+        if with_taps:
+            from repro.core.predictor import binarize
+            wb = binarize(lp["w"]).astype(x.dtype)
+            p_bin = _conv(jnp.where(x > 0, 1.0, -1.0).astype(x.dtype),
+                          wb, strides[i])
+            taps.append({
+                "p_bin": p_bin.reshape(-1, p_bin.shape[-1]),
+                "p_base": pre.reshape(-1, pre.shape[-1]).astype(jnp.float32),
+                "relu_in": relu_in.reshape(-1, pre.shape[-1]
+                                           ).astype(jnp.float32),
+            })
+
+        if mor is not None and mor_mode != "dense" and mor[i] is not None:
+            from repro.core.masked_ffn import mor_relu_matmul
+            # conv-as-matmul view for the predictor: flatten spatial dims
+            m = mor[i]
+            B, H, W, C = pre.shape
+            pre_flat = pre.reshape(-1, C)
+            res_flat = (res_in.reshape(-1, C) if res_in is not None else None)
+            # exact mode on the *true* preacts (conv already computed)
+            from repro.core.predictor import hybrid_predict
+            computed = hybrid_predict(
+                _im2col(x, lp["w"].shape[0], strides[i]),
+                _wmat(lp["w"])[:, m["perm"]], m,
+                preact_full=pre_flat[:, m["perm"]],
+                residual=None if res_flat is None else res_flat[:, m["perm"]])
+            relu_flat = relu_in.reshape(-1, C)[:, m["perm"]]
+            y = jnp.where(computed, jax.nn.relu(relu_flat), 0.0)
+            inv = m["inv_perm"]
+            x = y[:, inv].reshape(B, H, W, C)
+            mstats.append({"frac_computed":
+                           computed.mean(dtype=jnp.float32)})
+        else:
+            x = jax.nn.relu(relu_in)
+        if cfg.residual and i % 2 == 0:
+            shortcut = x
+    pooled = x.mean((1, 2))
+    logits = pooled @ params["head"]
+    aux: Dict[str, Any] = {}
+    if with_taps:
+        aux["taps"] = taps
+    if mstats:
+        aux["mor_stats"] = mstats
+    return logits, {"bn": new_bn}, aux
+
+
+def _wmat(w) -> jnp.ndarray:
+    """(kh,kw,cin,cout) -> (kh*kw*cin, cout) neuron weight matrix."""
+    return w.reshape(-1, w.shape[-1])
+
+
+def _im2col(x, k: int, stride: int) -> jnp.ndarray:
+    """NHWC -> (B*H'*W', k*k*C) patches matching SAME conv."""
+    B, H, W, C = x.shape
+    pad = (k - 1) // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    Ho = (H + stride - 1) // stride
+    Wo = (W + stride - 1) // stride
+    patches = []
+    for di in range(k):
+        for dj in range(k):
+            patches.append(
+                jax.lax.slice(xp, (0, di, dj, 0),
+                              (B, di + H, dj + W, C),
+                              (1, stride, stride, 1)))
+    cols = jnp.concatenate(patches, axis=-1)   # (B,Ho,Wo,k*k*C)
+    return cols.reshape(B * Ho * Wo, k * k * C)
+
+
+def layer_weight_matrices(params: Dict) -> List[jnp.ndarray]:
+    """Per-conv-layer (K, N) matrices for clustering/calibration."""
+    return [_wmat(lp["w"]) for lp in params["layers"]]

@@ -1,0 +1,183 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one shared attention+MLP block
+re-applied every ``shared_attn_every`` layers (see configs/zamba2_7b.py for
+documented simplifications).  81 = 13 segments x 6 mamba layers + 3 tail.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding_rules import constrain
+from repro.models.layers import attention as attn
+from repro.models.layers.common import embed_init, dense_init, split_keys
+from repro.models.layers.mlp import mlp_init, mlp_apply
+from repro.models.layers.norms import norm_init, apply_norm
+from repro.models.layers.ssm import (
+    mamba2_init, mamba2_forward, mamba2_cache_init, mamba2_decode,
+)
+
+
+def _seg_counts(cfg: ModelConfig) -> Tuple[int, int, int]:
+    every = cfg.shared_attn_every
+    n_seg = cfg.n_layers // every
+    tail = cfg.n_layers - n_seg * every
+    return n_seg, every, tail
+
+
+def _mamba_layer_init(key, cfg: ModelConfig) -> Dict:
+    return {"ln": norm_init(cfg.norm, cfg.d_model),
+            "mamba": mamba2_init(key, cfg)}
+
+
+def init_params(key, cfg: ModelConfig) -> Dict:
+    ks = split_keys(key, 6)
+    n_seg, every, tail = _seg_counts(cfg)
+    seg_keys = jnp.stack(split_keys(ks[0], n_seg * every))
+    params: Dict[str, Any] = {
+        "embed": embed_init(ks[1], cfg.vocab_size, cfg.d_model,
+                            jnp.dtype(cfg.param_dtype)),
+        "mamba_layers": jax.vmap(lambda k: _mamba_layer_init(k, cfg))(seg_keys),
+        "shared": {
+            "ln1": norm_init(cfg.norm, cfg.d_model),
+            "attn": attn.gqa_init(ks[2], cfg),
+            "ln2": norm_init(cfg.norm, cfg.d_model),
+            "mlp": mlp_init(ks[3], cfg),
+        },
+        "final_norm": norm_init(cfg.norm, cfg.d_model),
+        "lm_head": dense_init(ks[4], cfg.d_model, cfg.vocab_size,
+                              jnp.dtype(cfg.param_dtype)),
+    }
+    if tail:
+        tail_keys = jnp.stack(split_keys(ks[5], tail))
+        params["tail_layers"] = jax.vmap(
+            lambda k: _mamba_layer_init(k, cfg))(tail_keys)
+    return params
+
+
+def _mamba_block(lp, cfg, x):
+    h = apply_norm(cfg.norm, lp["ln"], x)
+    return constrain(x + mamba2_forward(lp["mamba"], cfg, h), "residual")
+
+
+def _shared_block(sp, cfg, x, positions, mor, mor_mode):
+    h = apply_norm(cfg.norm, sp["ln1"], x)
+    swa_cfg = cfg.replace(sliding_window=cfg.shared_attn_window)
+    a = attn.gqa_forward(sp["attn"], swa_cfg, h, positions)
+    x = constrain(x + a, "residual")
+    h2 = apply_norm(cfg.norm, sp["ln2"], x)
+    f, stats = mlp_apply(sp["mlp"], cfg, h2, mor=mor, mor_mode=mor_mode)
+    return constrain(x + f, "residual"), stats
+
+
+def forward(params: Dict, cfg: ModelConfig, batch: Dict, *,
+            mor: Optional[Dict] = None, mor_mode: str = "dense",
+            with_taps: bool = False) -> Tuple[jnp.ndarray, Dict]:
+    dt = jnp.dtype(cfg.dtype)
+    n_seg, every, tail = _seg_counts(cfg)
+    x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dt)
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    x = constrain(x, "residual")
+
+    # reshape the 78 stacked mamba layers into (13, 6, ...) segments
+    seg_params = jax.tree_util.tree_map(
+        lambda a: a.reshape(n_seg, every, *a.shape[1:]),
+        params["mamba_layers"])
+    shared_mor = None if mor is None else mor.get("shared")
+
+    def seg_body(carry, seg_lp):
+        def inner(c, lp):
+            return _mamba_block(lp, cfg, c), None
+        if cfg.remat != "none":
+            inner = jax.checkpoint(
+                inner, policy=jax.checkpoint_policies.nothing_saveable)
+        c, _ = jax.lax.scan(inner, carry, seg_lp)
+        c, stats = _shared_block(params["shared"], cfg, c, positions,
+                                 shared_mor, mor_mode)
+        return c, stats
+
+    x, stats = jax.lax.scan(seg_body, x, seg_params)
+    if tail:
+        def inner(c, lp):
+            return _mamba_block(lp, cfg, c), None
+        x, _ = jax.lax.scan(inner, x, params["tail_layers"])
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = x @ params["lm_head"].astype(dt)
+    aux = {"mor_stats": stats} if stats else {}
+    return constrain(logits, "logits"), aux
+
+
+def cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict:
+    n_seg, every, tail = _seg_counts(cfg)
+    m1 = mamba2_cache_init(cfg, batch, dtype)
+    swa_cfg = cfg.replace(sliding_window=cfg.shared_attn_window)
+    a1 = attn.gqa_cache_init(swa_cfg, batch, max_len, dtype)
+
+    def stack(c, n):
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), c)
+
+    cache = {"pos": jnp.zeros((), jnp.int32),
+             "mamba": stack(m1, n_seg * every),
+             "shared_attn": stack(a1, n_seg)}
+    if tail:
+        cache["tail"] = stack(m1, tail)
+    return cache
+
+
+def decode_step(params: Dict, cfg: ModelConfig, tokens, cache: Dict, *,
+                mor: Optional[Dict] = None, mor_mode: str = "dense",
+                ) -> Tuple[jnp.ndarray, Dict]:
+    dt = jnp.dtype(cfg.dtype)
+    n_seg, every, tail = _seg_counts(cfg)
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)  # (B,1,d)
+    swa_cfg = cfg.replace(sliding_window=cfg.shared_attn_window)
+    shared_mor = None if mor is None else mor.get("shared")
+
+    seg_params = jax.tree_util.tree_map(
+        lambda a: a.reshape(n_seg, every, *a.shape[1:]),
+        params["mamba_layers"])
+    seg_caches = jax.tree_util.tree_map(
+        lambda a: a.reshape(n_seg, every, *a.shape[1:]), cache["mamba"])
+
+    def seg_body(carry, xs):
+        def inner(c, inner_xs):
+            lp, mc = inner_xs
+            h = apply_norm(cfg.norm, lp["ln"], c)
+            y, mc_new = mamba2_decode(lp["mamba"], cfg, h, mc)
+            return c + y, mc_new
+        c, mamba_new = jax.lax.scan(inner, carry, (xs["lp"], xs["mc"]))
+        h = apply_norm(cfg.norm, params["shared"]["ln1"], c)
+        a, ac_new = attn.gqa_decode(params["shared"]["attn"], swa_cfg, h,
+                                    xs["ac"], pos)
+        c = c + a
+        h2 = apply_norm(cfg.norm, params["shared"]["ln2"], c)
+        f, _ = mlp_apply(params["shared"]["mlp"], cfg, h2, mor=shared_mor,
+                         mor_mode=mor_mode)
+        return c + f, {"mamba": mamba_new, "attn": ac_new}
+
+    x, new = jax.lax.scan(seg_body, x,
+                          {"lp": seg_params, "mc": seg_caches,
+                           "ac": cache["shared_attn"]})
+    new_cache = {
+        "pos": pos + 1,
+        "mamba": jax.tree_util.tree_map(
+            lambda a: a.reshape(n_seg * every, *a.shape[2:]), new["mamba"]),
+        "shared_attn": new["attn"],
+    }
+    if tail:
+        def inner(c, inner_xs):
+            lp, mc = inner_xs
+            h = apply_norm(cfg.norm, lp["ln"], c)
+            y, mc_new = mamba2_decode(lp["mamba"], cfg, h, mc)
+            return c + y, mc_new
+        x, tail_new = jax.lax.scan(inner, x,
+                                   (params["tail_layers"], cache["tail"]))
+        new_cache["tail"] = tail_new
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = x[:, 0, :] @ params["lm_head"].astype(dt)
+    return logits, new_cache

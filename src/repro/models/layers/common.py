@@ -1,0 +1,36 @@
+"""Shared initialisation + activation helpers (pure-pytree params)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def activation_fn(name: str):
+    if name == "relu":
+        return jax.nn.relu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name == "gelu":
+        return jax.nn.gelu
+    if name in ("silu", "swiglu"):
+        return jax.nn.silu
+    if name == "relu_glu":
+        return jax.nn.relu
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def is_glu(name: str) -> bool:
+    return name in ("swiglu", "relu_glu")
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))

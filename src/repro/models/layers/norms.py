@@ -1,0 +1,30 @@
+"""RMSNorm / LayerNorm (fp32 statistics, cast back to input dtype)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def layernorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def norm_init(kind: str, d: int):
+    return rmsnorm_init(d) if kind == "rmsnorm" else layernorm_init(d)
+
+
+def apply_norm(kind: str, params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jnp.reciprocal(jnp.sqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps))
+        y = y * params["scale"]
+    else:
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+        y = (xf - mu) * jnp.reciprocal(jnp.sqrt(var + eps))
+        y = y * params["scale"] + params["bias"]
+    return y.astype(x.dtype)

@@ -1,0 +1,21 @@
+"""Rotary position embeddings (on-the-fly, no precomputed tables so the
+same code path serves 4k training and 500k decode without giant buffers)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D) with D even; positions: (..., S) int32."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                      # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv   # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)

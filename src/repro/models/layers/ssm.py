@@ -1,0 +1,161 @@
+"""Mamba2 (SSD) layer: chunked state-space dual form for training/prefill
+(O(S * chunk) with an inter-chunk scan) and O(1) recurrent decode.
+
+Follows the Mamba2 structure: in_proj -> [z | xBC | dt], causal depthwise
+conv on xBC, per-head scalar decay a_t = exp(-softplus(dt + bias) *
+exp(A_log)), SSD attention-like intra-chunk term + carried state, gated
+RMSNorm, out_proj.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers.common import dense_init, split_keys
+
+_D_CONV = 4
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    return d_in, H, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def mamba2_init(key, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    d_in, H, P, N = _dims(cfg)
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = split_keys(key, 3)
+    conv_ch = d_in + 2 * N
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_in + 2 * N + H, pd),
+        "conv_w": (jax.random.normal(ks[1], (_D_CONV, conv_ch), jnp.float32)
+                   * 0.1).astype(pd),
+        "conv_b": jnp.zeros((conv_ch,), pd),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[2], d_in, d, pd),
+    }
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    d_in, H, P, N = _dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:2 * d_in + 2 * N]
+    dt = zxbcdt[..., 2 * d_in + 2 * N:]
+    return z, xBC, dt
+
+
+def _gated_norm(y, z, scale, eps=1e-6):
+    g = y * jax.nn.silu(z.astype(jnp.float32))
+    r = jnp.reciprocal(jnp.sqrt(jnp.mean(g * g, -1, keepdims=True) + eps))
+    return g * r * scale
+
+
+def mamba2_forward(params: Dict, cfg: ModelConfig, x) -> jnp.ndarray:
+    """x: (B, S, d) -> (B, S, d).  S must be a multiple of ssm_chunk or
+    smaller than it (it is padded internally)."""
+    B, S, d = x.shape
+    d_in, H, P, N = _dims(cfg)
+    Q = min(cfg.ssm_chunk, S)
+    dt_ = x.dtype
+
+    zxbcdt = x @ params["in_proj"].astype(dt_)
+    z, xBC, dtd = _split_proj(zxbcdt, cfg)
+    # causal depthwise conv over time
+    xp = jnp.pad(xBC, ((0, 0), (_D_CONV - 1, 0), (0, 0)))
+    conv = sum(xp[:, i:i + S, :] * params["conv_w"][i].astype(dt_)
+               for i in range(_D_CONV)) + params["conv_b"].astype(dt_)
+    conv = jax.nn.silu(conv.astype(jnp.float32))
+    xs = conv[..., :d_in].reshape(B, S, H, P)
+    B_ = conv[..., d_in:d_in + N]
+    C_ = conv[..., d_in + N:]
+
+    dt_soft = jax.nn.softplus(dtd.astype(jnp.float32) + params["dt_bias"])
+    loga = -dt_soft * jnp.exp(params["A_log"])           # (B,S,H) <= 0
+    xbar = xs.astype(jnp.float32) * dt_soft[..., None]   # dt-scaled input
+
+    pad = (-S) % Q
+    if pad:
+        xbar = jnp.pad(xbar, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+        loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
+    nc = (S + pad) // Q
+    xbar = xbar.reshape(B, nc, Q, H, P)
+    Bc = B_.reshape(B, nc, Q, N).astype(jnp.float32)
+    Cc = C_.reshape(B, nc, Q, N).astype(jnp.float32)
+    la = loga.reshape(B, nc, Q, H)
+    cum = jnp.cumsum(la, axis=2)                         # (B,nc,Q,H)
+
+    # --- intra-chunk (quadratic within chunk) ---
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)       # shared across heads
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,i,j,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(rel), 0.0)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, L, xbar)
+
+    # --- inter-chunk state carry ---
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)      # (B,nc,Q,H)
+    S_local = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bc, decay_to_end, xbar)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])              # (B,nc,H)
+
+    def carry_fn(S_prev, inp):
+        S_loc, cdec = inp
+        S_new = S_prev * cdec[..., None, None] + S_loc
+        return S_new, S_prev
+
+    S0 = jnp.zeros((B, H, N, P), jnp.float32)
+    _, S_prevs = jax.lax.scan(
+        carry_fn, S0,
+        (S_local.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    S_prevs = S_prevs.transpose(1, 0, 2, 3, 4)           # (B,nc,H,N,P)
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp",
+                         Cc, jnp.exp(cum), S_prevs)
+
+    y = (y_intra + y_inter).reshape(B, S + pad, H, P)[:, :S]
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = _gated_norm(y.reshape(B, S, d_in), z, params["norm_scale"])
+    return (y.astype(dt_) @ params["out_proj"].astype(dt_))
+
+
+def mamba2_cache_init(cfg: ModelConfig, batch: int, dtype):
+    d_in, H, P, N = _dims(cfg)
+    conv_ch = d_in + 2 * N
+    return {
+        "conv": jnp.zeros((batch, _D_CONV - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, H, N, P), jnp.float32),
+    }
+
+
+def mamba2_decode(params: Dict, cfg: ModelConfig, x, cache) -> Tuple:
+    """x: (B, 1, d) single step."""
+    B = x.shape[0]
+    d_in, H, P, N = _dims(cfg)
+    dt_ = x.dtype
+    zxbcdt = x[:, 0] @ params["in_proj"].astype(dt_)
+    z, xBC, dtd = _split_proj(zxbcdt, cfg)
+    hist = jnp.concatenate([cache["conv"], xBC[:, None, :]], 1)  # (B,4,ch)
+    conv = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32),
+                      params["conv_w"].astype(jnp.float32)) \
+        + params["conv_b"].astype(jnp.float32)
+    conv = jax.nn.silu(conv)
+    xs = conv[:, :d_in].reshape(B, H, P)
+    B_ = conv[:, d_in:d_in + N]
+    C_ = conv[:, d_in + N:]
+    dt_soft = jax.nn.softplus(dtd.astype(jnp.float32) + params["dt_bias"])
+    a = jnp.exp(-dt_soft * jnp.exp(params["A_log"]))     # (B,H)
+    xbar = xs * dt_soft[..., None]
+    S_new = cache["ssm"] * a[..., None, None] \
+        + jnp.einsum("bn,bhp->bhnp", B_, xbar)
+    y = jnp.einsum("bn,bhnp->bhp", C_, S_new) \
+        + params["D"][None, :, None] * xs
+    y = _gated_norm(y.reshape(B, d_in), z, params["norm_scale"])
+    out = (y.astype(dt_) @ params["out_proj"].astype(dt_))[:, None, :]
+    return out, {"conv": hist[:, 1:], "ssm": S_new}

@@ -1,0 +1,119 @@
+"""RWKV6 model assembly (attention-free; family 'ssm')."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding_rules import constrain
+from repro.models.layers.common import embed_init, dense_init, split_keys
+from repro.models.layers.norms import norm_init, apply_norm
+from repro.models.layers import rwkv
+
+
+def _layer_init(key, cfg: ModelConfig) -> Dict:
+    ks = split_keys(key, 2)
+    return {"ln1": norm_init(cfg.norm, cfg.d_model),
+            "tm": rwkv.timemix_init(ks[0], cfg),
+            "ln2": norm_init(cfg.norm, cfg.d_model),
+            "cm": rwkv.chanmix_init(ks[1], cfg)}
+
+
+def init_params(key, cfg: ModelConfig) -> Dict:
+    ks = split_keys(key, 4)
+    keys = jnp.stack(split_keys(ks[0], cfg.n_layers))
+    return {
+        "embed": embed_init(ks[1], cfg.vocab_size, cfg.d_model,
+                            jnp.dtype(cfg.param_dtype)),
+        "in_norm": norm_init(cfg.norm, cfg.d_model),
+        "layers": jax.vmap(lambda k: _layer_init(k, cfg))(keys),
+        "final_norm": norm_init(cfg.norm, cfg.d_model),
+        "lm_head": dense_init(ks[2], cfg.d_model, cfg.vocab_size,
+                              jnp.dtype(cfg.param_dtype)),
+    }
+
+
+def forward(params: Dict, cfg: ModelConfig, batch: Dict, *,
+            mor: Optional[Dict] = None, mor_mode: str = "dense",
+            with_taps: bool = False) -> Tuple[jnp.ndarray, Dict]:
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dt)
+    x = apply_norm(cfg.norm, params["in_norm"], x)
+    x = constrain(x, "residual")
+
+    def body(carry, xs):
+        lp = xs["lp"]
+        h = apply_norm(cfg.norm, lp["ln1"], carry)
+        carry = carry + rwkv.timemix_forward(lp["tm"], cfg, h)
+        h2 = apply_norm(cfg.norm, lp["ln2"], carry)
+        h2_prev = jnp.pad(h2, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        f, stats = rwkv.chanmix_forward(lp["cm"], cfg, h2, h2_prev,
+                                        mor=xs.get("mor"), mor_mode=mor_mode)
+        carry = constrain(carry + f, "residual")
+        ys: Dict[str, Any] = {}
+        if stats:
+            ys["mor_stats"] = stats
+        if with_taps:
+            from repro.core.predictor import binary_preact
+            xk = h2 + (h2_prev - h2) * lp["cm"]["mu"][0].astype(h2.dtype)
+            x2 = xk.reshape(-1, xk.shape[-1])
+            w = lp["cm"]["w_up"]
+            ys["taps"] = {"p_bin": binary_preact(x2, w),
+                          "p_base": (x2 @ w.astype(x2.dtype)
+                                     ).astype(jnp.float32)}
+        return carry, ys
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, ys = jax.lax.scan(body, x, {"lp": params["layers"],
+                                   **({"mor": mor["layers"]} if mor else {})})
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return constrain(logits, "logits"), ys
+
+
+def cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict:
+    H = cfg.d_model // cfg.rwkv_head_size
+    hd = cfg.rwkv_head_size
+    L = cfg.n_layers
+    d = cfg.d_model
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "tm_shift": jnp.zeros((L, batch, d), dtype),
+        "wkv": jnp.zeros((L, batch, H, hd, hd), jnp.float32),
+        "cm_shift": jnp.zeros((L, batch, d), dtype),
+    }
+
+
+def decode_step(params: Dict, cfg: ModelConfig, tokens, cache: Dict, *,
+                mor: Optional[Dict] = None, mor_mode: str = "dense",
+                ) -> Tuple[jnp.ndarray, Dict]:
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens[:, 0], axis=0).astype(dt)  # (B, d)
+    x = apply_norm(cfg.norm, params["in_norm"], x)
+
+    def body(carry, xs):
+        lp = xs["lp"]
+        h = apply_norm(cfg.norm, lp["ln1"], carry)
+        y, tm_state = rwkv.timemix_decode(
+            lp["tm"], cfg, h, {"shift": xs["tm_shift"], "wkv": xs["wkv"]})
+        carry = carry + y
+        h2 = apply_norm(cfg.norm, lp["ln2"], carry)
+        f, _ = rwkv.chanmix_forward(lp["cm"], cfg, h2,
+                                    xs["cm_shift"].astype(dt),
+                                    mor=xs.get("mor"), mor_mode=mor_mode)
+        carry = carry + f
+        return carry, {"tm_shift": tm_state["shift"], "wkv": tm_state["wkv"],
+                       "cm_shift": h2}
+
+    xs = {"lp": params["layers"], "tm_shift": cache["tm_shift"],
+          "wkv": cache["wkv"], "cm_shift": cache["cm_shift"]}
+    if mor is not None:
+        xs["mor"] = mor["layers"]
+    x, new_states = jax.lax.scan(body, x, xs)
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = x @ params["lm_head"].astype(dt)
+    return logits, {"pos": cache["pos"] + 1, **new_states}

@@ -1,0 +1,105 @@
+"""Time-Depth-Separable ASR network (paper §3.1 Fig. 2a, Hannun et al.):
+per block, a 1-D conv over time with ReLU + residual + layernorm, then a
+two-layer FC bottleneck with ReLU + residual + layernorm.  Both ReLU
+pre-activations are MoR targets (the paper's primary benchmark: TDS gives
+46% of MACs in ReLU-activated CONV+FC layers, Fig. 3).
+
+Inputs are pre-processed audio frames (B, T, d) — the paper's pipeline
+also consumes filterbank features; synthetic frames suffice to exercise
+the mechanism.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers.common import dense_init, split_keys
+from repro.models.layers.norms import layernorm_init, apply_norm
+
+_KERNEL = 5
+
+
+def init_params(key, cfg: ModelConfig) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = split_keys(key, cfg.n_layers + 2)
+    layers = []
+    for i in range(cfg.n_layers):
+        lk = split_keys(ks[i], 3)
+        layers.append({
+            "conv_w": (jax.random.normal(lk[0], (_KERNEL, d, d), jnp.float32)
+                       * (_KERNEL * d) ** -0.5),
+            "conv_b": jnp.zeros((d,), jnp.float32),
+            "ln1": layernorm_init(d),
+            "fc1": dense_init(lk[1], d, f),
+            "fc1_b": jnp.zeros((f,), jnp.float32),
+            "fc2": dense_init(lk[2], f, d),
+            "ln2": layernorm_init(d),
+        })
+    return {"layers": layers,
+            "head": dense_init(ks[-1], d, cfg.vocab_size)}
+
+
+def _conv1d(x, w, b):
+    """x: (B,T,d), w: (K,d,d) causal-padded conv over time."""
+    B, T, d = x.shape
+    xp = jnp.pad(x, ((0, 0), (_KERNEL - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + T, :] @ w[i] for i in range(_KERNEL)) + b
+    return out
+
+
+def forward(params: Dict, cfg: ModelConfig, batch: Dict, *,
+            with_taps: bool = False, mor: Optional[List] = None,
+            mor_mode: str = "dense") -> Tuple[jnp.ndarray, Dict]:
+    x = batch["frames"]
+    taps: List[Dict] = []
+    mstats: List[Dict] = []
+    for i, lp in enumerate(params["layers"]):
+        # --- conv sub-block ---
+        pre = _conv1d(x, lp["conv_w"], lp["conv_b"])
+        if with_taps:
+            from repro.core.predictor import binarize
+            xs = jnp.where(x > 0, 1.0, -1.0)
+            wb = binarize(lp["conv_w"]).astype(x.dtype)
+            p_bin = _conv1d(xs, wb, jnp.zeros_like(lp["conv_b"]))
+            taps.append({"p_bin": p_bin.reshape(-1, pre.shape[-1]),
+                         "p_base": pre.reshape(-1, pre.shape[-1]),
+                         "relu_in": pre.reshape(-1, pre.shape[-1])})
+        x = apply_norm("layernorm", lp["ln1"], x + jax.nn.relu(pre))
+        # --- FC sub-block ---
+        if mor is not None and mor_mode != "dense" and mor[i] is not None:
+            from repro.core.masked_ffn import mor_relu_matmul
+            m = mor[i]
+            x2 = x.reshape(-1, x.shape[-1])
+            h, st = mor_relu_matmul(x2, lp["fc1"][:, m["perm"]], m,
+                                    activation="relu", mode=mor_mode,
+                                    tile_m=cfg.mor.tile_m,
+                                    tile_n=cfg.mor.tile_n)
+            mstats.append(st)
+            fc = (h @ lp["fc2"][m["perm"], :]).reshape(x.shape)
+        else:
+            pre_fc = x @ lp["fc1"] + lp["fc1_b"]
+            if with_taps:
+                from repro.core.predictor import binary_preact
+                x2 = x.reshape(-1, x.shape[-1])
+                taps.append({
+                    "p_bin": binary_preact(x2, lp["fc1"]),
+                    "p_base": (x2 @ lp["fc1"]).astype(jnp.float32),
+                    "relu_in": pre_fc.reshape(-1, pre_fc.shape[-1]),
+                })
+            fc = jax.nn.relu(pre_fc) @ lp["fc2"]
+        x = apply_norm("layernorm", lp["ln2"], x + fc)
+    logits = x @ params["head"]
+    aux: Dict[str, Any] = {}
+    if with_taps:
+        aux["taps"] = taps
+    if mstats:
+        aux["mor_stats"] = mstats
+    return logits, aux
+
+
+def layer_weight_matrices(params: Dict) -> List[jnp.ndarray]:
+    """(K,N) weight matrices of the FC1 ReLU layers (MoR targets)."""
+    return [lp["fc1"] for lp in params["layers"]]

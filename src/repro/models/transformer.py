@@ -1,0 +1,247 @@
+"""Decoder LM / encoder assembly for the dense, moe, vlm and audio
+families.  Layers are scan-stacked (leading L dim) so an 80-layer 110B
+model lowers to a single-layer HLO body — essential for dry-run compile
+times at 512 devices.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding_rules import constrain
+from repro.models.layers import attention as attn
+from repro.models.layers.common import embed_init, dense_init, split_keys
+from repro.models.layers.mlp import mlp_init, mlp_apply, mlp_taps
+from repro.models.layers.moe import moe_init, moe_apply
+from repro.models.layers.norms import norm_init, apply_norm
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    pol = {"dots_saveable": jax.checkpoint_policies.dots_saveable,
+           "nothing_saveable": jax.checkpoint_policies.nothing_saveable,
+           }[cfg.remat]
+    return jax.checkpoint(fn, policy=pol)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _attn_init(key, cfg: ModelConfig):
+    return attn.mla_init(key, cfg) if cfg.mla else attn.gqa_init(key, cfg)
+
+
+def _layer_init(key, cfg: ModelConfig, kind: str) -> Dict:
+    ks = split_keys(key, 2)
+    p = {"ln1": norm_init(cfg.norm, cfg.d_model),
+         "attn": _attn_init(ks[0], cfg),
+         "ln2": norm_init(cfg.norm, cfg.d_model)}
+    if kind == "moe":
+        p["moe"] = moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Dict:
+    ks = split_keys(key, 5)
+    L = cfg.n_layers
+    params: Dict[str, Any] = {}
+    if cfg.vocab_size:
+        params["embed"] = embed_init(ks[0], cfg.vocab_size, cfg.d_model,
+                                     jnp.dtype(cfg.param_dtype))
+    if cfg.frontend == "audio_stub":
+        params["in_norm"] = norm_init(cfg.norm, cfg.d_model)
+
+    if cfg.family == "moe":
+        kd = cfg.first_k_dense
+        if kd:
+            keys = jnp.stack(split_keys(ks[1], kd))
+            params["dense_layers"] = jax.vmap(
+                lambda k: _layer_init(k, cfg, "dense"))(keys)
+        keys = jnp.stack(split_keys(ks[2], L - kd))
+        params["moe_layers"] = jax.vmap(
+            lambda k: _layer_init(k, cfg, "moe"))(keys)
+    else:
+        keys = jnp.stack(split_keys(ks[1], L))
+        params["layers"] = jax.vmap(
+            lambda k: _layer_init(k, cfg, "dense"))(keys)
+
+    params["final_norm"] = norm_init(cfg.norm, cfg.d_model)
+    if cfg.vocab_size and not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[3], cfg.d_model, cfg.vocab_size,
+                                       jnp.dtype(cfg.param_dtype))
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def _block_apply(lp: Dict, cfg: ModelConfig, x, positions, kind: str,
+                 mor_layer, mor_mode: str, with_taps: bool):
+    h = constrain(apply_norm(cfg.norm, lp["ln1"], x), "attn_in")
+    if cfg.mla:
+        a = attn.mla_forward(lp["attn"], cfg, h, positions)
+    else:
+        a = attn.gqa_forward(lp["attn"], cfg, h, positions)
+    x = constrain(x + a, "residual")
+    h2 = apply_norm(cfg.norm, lp["ln2"], x)
+    ys: Dict[str, Any] = {}
+    if kind == "moe":
+        f, aux = moe_apply(lp["moe"], cfg, h2, mor=mor_layer,
+                           mor_mode=mor_mode)
+        ys["lb_loss"] = aux["lb_loss"]
+    else:
+        f, stats = mlp_apply(lp["mlp"], cfg, h2, mor=mor_layer,
+                             mor_mode=mor_mode)
+        if stats:
+            ys["mor_stats"] = stats
+        if with_taps:
+            ys["taps"] = mlp_taps(lp["mlp"], cfg, h2)
+    x = constrain(x + f, "residual")
+    return x, ys
+
+
+def _embed_inputs(params: Dict, cfg: ModelConfig, batch: Dict):
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.frontend == "audio_stub":
+        x = apply_norm(cfg.norm, params["in_norm"],
+                       batch["frames"].astype(dt))
+        return x
+    tok_emb = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dt)
+    if cfg.frontend == "vision_stub" and "patch_embeds" in batch:
+        x = jnp.concatenate([batch["patch_embeds"].astype(dt), tok_emb], 1)
+    else:
+        x = tok_emb
+    return x
+
+
+def forward(params: Dict, cfg: ModelConfig, batch: Dict, *,
+            mor: Optional[Dict] = None, mor_mode: str = "dense",
+            with_taps: bool = False) -> Tuple[jnp.ndarray, Dict]:
+    """-> (logits (B, S, V), aux)."""
+    x = _embed_inputs(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    x = constrain(x, "residual")
+
+    def run_stack(x, stacked, kind, mor_stack):
+        def body(carry, xs):
+            lp = xs["lp"]
+            ml = xs.get("mor", None)
+            return _block_apply(lp, cfg, carry, positions, kind, ml,
+                                mor_mode, with_taps)
+        body = _remat(body, cfg)
+        xs = {"lp": stacked}
+        if mor_stack is not None:
+            xs["mor"] = mor_stack
+        return jax.lax.scan(body, x, xs)
+
+    aux: Dict[str, Any] = {}
+    if cfg.family == "moe":
+        if cfg.first_k_dense:
+            x, ys = run_stack(x, params["dense_layers"], "dense",
+                              None if mor is None else mor.get("dense_layers"))
+            aux.update({f"dense_{k}": v for k, v in ys.items()})
+        x, ys = run_stack(x, params["moe_layers"], "moe",
+                          None if mor is None else mor.get("moe_layers"))
+        aux.update(ys)
+    else:
+        x, ys = run_stack(x, params["layers"], "dense",
+                          None if mor is None else mor.get("layers"))
+        aux.update(ys)
+
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    if not cfg.vocab_size:
+        return x, aux
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head.astype(x.dtype)
+    logits = constrain(logits, "logits")
+    return logits, aux
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+def _layer_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    if cfg.mla:
+        return attn.mla_cache_init(cfg, batch, max_len, dtype)
+    return attn.gqa_cache_init(cfg, batch, max_len, dtype)
+
+
+def _stack_cache(c, n: int):
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), c)
+
+
+def cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict:
+    c1 = _layer_cache(cfg, batch, max_len, dtype)
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.family == "moe":
+        if cfg.first_k_dense:
+            cache["dense_layers"] = _stack_cache(c1, cfg.first_k_dense)
+        cache["moe_layers"] = _stack_cache(c1, cfg.n_layers - cfg.first_k_dense)
+    else:
+        cache["layers"] = _stack_cache(c1, cfg.n_layers)
+    return cache
+
+
+def _block_decode(lp, cfg: ModelConfig, x, c, pos, kind, mor_layer, mor_mode):
+    h = apply_norm(cfg.norm, lp["ln1"], x)
+    if cfg.mla:
+        a, c_new = attn.mla_decode(lp["attn"], cfg, h, c, pos)
+    else:
+        a, c_new = attn.gqa_decode(lp["attn"], cfg, h, c, pos)
+    x = x + a
+    h2 = apply_norm(cfg.norm, lp["ln2"], x)
+    if kind == "moe":
+        f, _ = moe_apply(lp["moe"], cfg, h2, mor=mor_layer, mor_mode=mor_mode)
+    else:
+        f, _ = mlp_apply(lp["mlp"], cfg, h2, mor=mor_layer, mor_mode=mor_mode)
+    return x + f, c_new
+
+
+def decode_step(params: Dict, cfg: ModelConfig, tokens, cache: Dict, *,
+                mor: Optional[Dict] = None, mor_mode: str = "dense",
+                ) -> Tuple[jnp.ndarray, Dict]:
+    """tokens: (B, 1) -> (logits (B, V), new cache)."""
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    x = constrain(x, "residual_decode")
+
+    def run_stack(x, stacked, caches, kind, mor_stack):
+        def body(carry, xs):
+            y, c_new = _block_decode(xs["lp"], cfg, carry, xs["c"], pos,
+                                     kind, xs.get("mor"), mor_mode)
+            return y, c_new
+        xs = {"lp": stacked, "c": caches}
+        if mor_stack is not None:
+            xs["mor"] = mor_stack
+        return jax.lax.scan(body, x, xs)
+
+    new_cache: Dict[str, Any] = {"pos": pos + 1}
+    if cfg.family == "moe":
+        if cfg.first_k_dense:
+            x, nc = run_stack(x, params["dense_layers"],
+                              cache["dense_layers"], "dense",
+                              None if mor is None else mor.get("dense_layers"))
+            new_cache["dense_layers"] = nc
+        x, nc = run_stack(x, params["moe_layers"], cache["moe_layers"],
+                          "moe", None if mor is None else mor.get("moe_layers"))
+        new_cache["moe_layers"] = nc
+    else:
+        x, nc = run_stack(x, params["layers"], cache["layers"], "dense",
+                          None if mor is None else mor.get("layers"))
+        new_cache["layers"] = nc
+
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = (x[:, 0, :] @ head.astype(x.dtype))
+    return logits, new_cache

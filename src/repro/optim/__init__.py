@@ -1,0 +1,5 @@
+from repro.optim.adamw import adamw_init, adamw_update, OptConfig  # noqa: F401
+from repro.optim.schedules import cosine_schedule, linear_warmup  # noqa: F401
+from repro.optim.compression import (  # noqa: F401
+    compress_int8, decompress_int8, error_feedback_allreduce,
+)

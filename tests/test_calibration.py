@@ -1,0 +1,62 @@
+"""Streaming regression calibration tests (paper §3.2.1)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.calibration import (finalize_regression, init_accumulator,
+                                    update_accumulator)
+
+RNG = np.random.default_rng(2)
+
+
+def _reference_fit(x, y):
+    m = np.empty(x.shape[1])
+    b = np.empty(x.shape[1])
+    c = np.empty(x.shape[1])
+    for j in range(x.shape[1]):
+        m[j], b[j] = np.polyfit(x[:, j], y[:, j], 1)
+        c[j] = np.corrcoef(x[:, j], y[:, j])[0, 1]
+    return m, b, c
+
+
+def test_streaming_matches_polyfit():
+    T, N = 512, 9
+    x = RNG.normal(size=(T, N)).astype(np.float64)
+    y = 2.5 * x + 1.0 + 0.3 * RNG.normal(size=(T, N))
+    acc = init_accumulator(N)
+    # stream in 4 chunks — result must match a single-pass fit
+    for i in range(0, T, 128):
+        acc = update_accumulator(acc, jnp.asarray(x[i:i + 128]),
+                                 jnp.asarray(y[i:i + 128]))
+    m, b, c = finalize_regression(acc)
+    m_ref, b_ref, c_ref = _reference_fit(x, y)
+    np.testing.assert_allclose(np.asarray(m), m_ref, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(b), b_ref, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(c), c_ref, rtol=1e-3, atol=1e-3)
+
+
+def test_degenerate_neuron_gets_zero_correlation():
+    acc = init_accumulator(2)
+    x = jnp.asarray([[1.0, 5.0]] * 32)          # constant x -> no variance
+    y = jnp.asarray(RNG.normal(size=(32, 2)), jnp.float32)
+    acc = update_accumulator(acc, x, y)
+    _, _, c = finalize_regression(acc)
+    np.testing.assert_allclose(np.asarray(c), [0.0, 0.0], atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 64), st.integers(1, 8),
+       st.floats(-3, 3), st.floats(-2, 2))
+def test_perfect_line_recovered(t, n, slope, intercept):
+    """Property: exact linear data -> exact (m, b) and |c| = 1."""
+    x = RNG.normal(size=(t + 2, n))
+    y = slope * x + intercept
+    acc = init_accumulator(n)
+    acc = update_accumulator(acc, jnp.asarray(x), jnp.asarray(y))
+    m, b, c = finalize_regression(acc)
+    if abs(slope) > 1e-3:
+        np.testing.assert_allclose(np.asarray(m), slope, rtol=2e-2,
+                                   atol=2e-2)
+        np.testing.assert_allclose(np.asarray(b), intercept, rtol=2e-2,
+                                   atol=5e-2)
+        assert np.all(np.abs(np.asarray(c)) > 0.99)

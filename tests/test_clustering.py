@@ -1,0 +1,86 @@
+"""Angle-based clustering tests (paper §3.2.2)."""
+import numpy as np
+import pytest
+
+from repro.core.clustering import (closest_neighbor_graph, cluster_layer,
+                                   greedy_proxy_clustering,
+                                   montecarlo_sign_agreement,
+                                   pairwise_cosines)
+from repro.core.policy import build_permutation
+
+RNG = np.random.default_rng(1)
+
+
+def test_sign_disagreement_probability_matches_theory():
+    """Paper Eq. 3-4: P[sign(C.A) != sign(C.B)] = theta/180, any dim."""
+    for dim in (2, 16, 256):
+        for theta in (10.0, 45.0, 90.0, 150.0):
+            p = montecarlo_sign_agreement(theta, dim, 200_000)
+            assert abs(p - theta / 180.0) < 0.01, (dim, theta, p)
+
+
+def test_pairwise_cosines_blocked_equals_direct():
+    w = RNG.normal(size=(40, 70)).astype(np.float32)
+    got = pairwise_cosines(w, block=16)
+    wn = w / np.linalg.norm(w, axis=0, keepdims=True)
+    np.testing.assert_allclose(got, wn.T @ wn, atol=1e-5)
+
+
+def test_closest_neighbor_graph_finds_planted_pairs():
+    # plant pairs of nearly-parallel vectors
+    base = RNG.normal(size=(64, 10))
+    cols = []
+    for j in range(10):
+        cols.append(base[:, j])
+        cols.append(base[:, j] + 0.01 * RNG.normal(size=64))
+    w = np.stack(cols, 1)
+    nn, ang = closest_neighbor_graph(w)
+    for j in range(10):
+        assert nn[2 * j] == 2 * j + 1
+        assert nn[2 * j + 1] == 2 * j
+        assert ang[2 * j] < 5.0
+
+
+def test_closest_neighbor_angle_threshold():
+    w = np.eye(8).astype(np.float32)  # all mutually perpendicular
+    nn, ang = closest_neighbor_graph(w, max_angle_deg=80.0)
+    # nothing within 80 degrees -> everyone self-loops (unclustered)
+    np.testing.assert_array_equal(nn, np.arange(8))
+
+
+def test_greedy_proxy_clustering_invariants():
+    w = RNG.normal(size=(32, 100)).astype(np.float32)
+    # duplicate some columns so clusters exist
+    w[:, 50:] = w[:, :50] + 0.05 * RNG.normal(size=(32, 50))
+    cl = cluster_layer(w, max_angle_deg=89.0)
+    proxy_of, is_proxy = cl["proxy_of"], cl["is_proxy"]
+    # every neuron's proxy is a proxy; proxies are their own proxy
+    assert is_proxy[proxy_of].all()
+    assert (proxy_of[is_proxy] == np.where(is_proxy)[0]).all()
+    # members point at proxies only (no chains, paper's concern)
+    members = ~is_proxy
+    assert (~members[proxy_of[members]]).all()
+    assert cl["n_proxies"] >= 1
+
+
+def test_indegree_priority():
+    """Node with highest indegree becomes a proxy first (paper's order)."""
+    # star: nodes 1..4 all point at 0; node 5 points at 1
+    nn_idx = np.array([1, 0, 0, 0, 0, 1])
+    proxy_of, is_proxy = greedy_proxy_clustering(nn_idx)
+    assert is_proxy[0]
+    # 1..4 join cluster 0; 5 is left alone -> becomes its own proxy
+    assert all(proxy_of[j] == 0 for j in (1, 2, 3, 4))
+    assert proxy_of[5] == 5 and is_proxy[5]
+
+
+def test_build_permutation_is_valid_and_groups_members():
+    w = RNG.normal(size=(16, 40)).astype(np.float32)
+    w[:, 20:] = w[:, :20] + 0.02 * RNG.normal(size=(16, 20))
+    cl = cluster_layer(w)
+    perm = build_permutation(cl["proxy_of"], cl["is_proxy"])
+    assert sorted(perm) == list(range(40))
+    # proxies occupy the leading slots
+    n_p = cl["n_proxies"]
+    assert cl["is_proxy"][perm[:n_p]].all()
+    assert not cl["is_proxy"][perm[n_p:]].any()

@@ -1,0 +1,103 @@
+"""Distribution layer tests: sharding rules, straggler policy, elastic
+plans, overlapped collectives (multi-device via subprocess)."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.distributed.fault_tolerance import (ElasticPlan, StragglerConfig,
+                                               StragglerMonitor)
+from repro.distributed.sharding_rules import param_sharding
+from repro.launch.mesh import make_host_mesh
+from repro.models import param_shapes
+
+
+def test_param_sharding_divisibility_guard():
+    """Non-divisible dims must fall back to replicated, never crash."""
+    cfg = get_config("mixtral-8x7b")   # 8 experts, 16-way model axis
+    mesh = make_host_mesh(1)
+    p_sds = param_shapes(cfg)
+    sh = param_sharding(p_sds, mesh, moe_mode=cfg.expert_sharding)
+    # just materialising the full tree without error is the test on 1 dev;
+    # every leaf must be a NamedSharding
+    leaves = jax.tree_util.tree_leaves(
+        sh, is_leaf=lambda x: hasattr(x, "spec"))
+    assert len(leaves) > 10
+
+
+def test_straggler_monitor_flags_slow_host():
+    cfg = StragglerConfig(window=10, ratio_threshold=1.5, patience=3)
+    mon = StragglerMonitor(n_hosts=4, cfg=cfg)
+    actions = []
+    for step in range(10):
+        times = {h: 1.0 for h in range(4)}
+        times[2] = 2.5   # persistent straggler
+        actions += mon.record_step(times)
+    assert ("rebalance", 2) in actions
+    # share shifted away from the straggler
+    assert mon.microbatch_share[2] < 0.25
+    assert abs(sum(mon.microbatch_share.values()) - 1.0) < 1e-9
+
+
+def test_straggler_monitor_ignores_transients():
+    mon = StragglerMonitor(n_hosts=2, cfg=StragglerConfig(patience=5))
+    acts = mon.record_step({0: 1.0, 1: 9.0})   # single spike
+    acts += mon.record_step({0: 1.0, 1: 1.0})
+    assert acts == []
+
+
+def test_elastic_plan_keeps_tp_fixed():
+    p = ElasticPlan.plan(n_devices=256, model_parallel=16, global_batch=256)
+    assert p.mesh_shape == (16, 16)
+    # lose a host: 240 devices
+    p2 = ElasticPlan.plan(n_devices=240, model_parallel=16,
+                          global_batch=256)
+    assert p2.mesh_shape == (15, 16)
+    assert p2.global_batch % 15 == 0
+    with pytest.raises(ValueError):
+        ElasticPlan.plan(n_devices=250, model_parallel=16, global_batch=256)
+
+
+_OVERLAP_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.distributed.collectives import ag_matmul_overlapped, psum_scatter_matmul
+mesh = jax.make_mesh((8,), ("model",))
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.normal(size=(16, 64)), jnp.float32)
+w = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+got = ag_matmul_overlapped(x, w, mesh, axis="model")
+np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w), rtol=1e-4, atol=1e-4)
+got2 = psum_scatter_matmul(x, w, mesh, axis="model")
+np.testing.assert_allclose(np.asarray(got2), np.asarray(x @ w), rtol=1e-4, atol=1e-4)
+# the overlapped form must contain collective-permute, not one big all-gather
+hlo = jax.jit(lambda a, b: ag_matmul_overlapped(a, b, mesh)).lower(x, w).compile().as_text()
+assert "collective-permute" in hlo, "expected ring ppermute schedule"
+print("OVERLAP_OK")
+"""
+
+
+def test_overlapped_ag_matmul_multidevice():
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", _OVERLAP_SCRIPT],
+                       capture_output=True, text=True, env=env,
+                       cwd=os.getcwd())
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OVERLAP_OK" in r.stdout
+
+
+def test_overlapped_ag_matmul_single_device():
+    mesh = make_host_mesh(1)
+    from repro.distributed.collectives import ag_matmul_overlapped
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+    got = ag_matmul_overlapped(x, w, mesh, axis="model")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,116 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode on CPU; lowering targets TPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.predictor import make_identity_layer
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(3)
+
+SHAPES = [(8, 128, 128), (16, 256, 384), (48, 200, 300), (128, 512, 256),
+          (5, 64, 130)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_binary_dot_sweep(shape, dtype):
+    M, K, N = shape
+    x = jnp.asarray(RNG.normal(size=(M, K)), dtype)
+    w = jnp.asarray(RNG.normal(size=(K, N)), dtype)
+    got = ops.binary_dot(x, w)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.binary_dot_ref(x, w)))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_masked_matmul_sweep(shape, dtype):
+    M, K, N = shape
+    tm, tn = 8, 128
+    x = jnp.asarray(RNG.normal(size=(M, K)), dtype)
+    w = jnp.asarray(RNG.normal(size=(K, N)), dtype)
+    nm, nn = -(-M // tm), -(-N // tn)
+    mask = jnp.asarray(RNG.random((nm, nn)) > 0.5)
+    got = ops.masked_matmul(x, w, mask, tile_m=tm, tile_n=tn)
+    want = ref.masked_matmul_ref(x, w, mask, tm, tn)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 10)
+
+
+def test_masked_matmul_dead_tiles_exact_zero():
+    x = jnp.asarray(RNG.normal(size=(16, 64)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(64, 256)), jnp.float32)
+    mask = jnp.zeros((2, 2), bool).at[0, 0].set(True)
+    out = np.asarray(ops.masked_matmul(x, w, mask, tile_m=8, tile_n=128))
+    assert np.all(out[8:, :] == 0.0)
+    assert np.all(out[:, 128:] == 0.0)
+    assert np.any(out[:8, :128] != 0.0)
+
+
+@pytest.mark.parametrize("capacity_frac", [0.25, 0.5, 1.0])
+def test_gather_matmul_capacity(capacity_frac):
+    M, K, N = 32, 128, 512
+    tm, tn = 8, 128
+    x = jnp.asarray(RNG.normal(size=(M, K)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(K, N)), jnp.float32)
+    nm, nn = M // tm, N // tn
+    mask = jnp.asarray(RNG.random((nm, nn)) > 0.4)
+    cap = max(1, int(capacity_frac * nm * nn))
+    got = ops.gather_matmul(x, w, mask, capacity=cap, tile_m=tm, tile_n=tn)
+    want = ref.gather_matmul_ref(x, w, mask, tm, tn, cap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-4)
+
+
+def test_gather_matmul_all_live_fully_dense():
+    M, K, N = 16, 64, 256
+    x = jnp.asarray(RNG.normal(size=(M, K)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(K, N)), jnp.float32)
+    mask = jnp.ones((2, 2), bool)
+    got = ops.gather_matmul(x, w, mask, capacity=4, tile_m=8, tile_n=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w),
+                               rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("shape", [(16, 128, 256), (40, 96, 384)])
+def test_fused_mor_tile_mask(shape):
+    M, K, N = shape
+    x = jnp.asarray(RNG.normal(size=(M, K)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(K, N)), jnp.float32)
+    mor = make_identity_layer(N)
+    mor["enable"] = jnp.asarray(RNG.random(N) > 0.3)
+    mor["m"] = jnp.asarray(RNG.normal(1, 0.3, N), jnp.float32)
+    mor["b"] = jnp.asarray(RNG.normal(0, 2, N), jnp.float32)
+    mor["bn_scale"] = jnp.asarray(RNG.gamma(2, 1, N), jnp.float32)
+    mor["bn_bias"] = jnp.asarray(RNG.normal(0, 1, N), jnp.float32)
+    pn = jnp.asarray(RNG.random((M, N)) > 0.4)
+    got = ops.mor_tile_mask(x, w, mor, pn, tile_m=8, tile_n=128)
+    want = ref.mor_tile_mask_ref(x, w, mor["m"], mor["b"], mor["bn_scale"],
+                                 mor["bn_bias"], mor["enable"], pn, 8, 128)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("shape", [(16, 128, 256), (32, 512, 384)])
+def test_binary_dot_packed(shape):
+    """Bit-packed sign weights (8/byte, the binWeight-SRAM analogue)
+    reproduce the unpacked binary dot exactly."""
+    from repro.kernels.binary_dot_packed import (binary_dot_packed,
+                                                 pack_signs, unpack_signs)
+    M, K, N = shape
+    x = jnp.asarray(RNG.normal(size=(M, K)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(K, N)), jnp.float32)
+    packed = pack_signs(w)
+    assert packed.shape == (K // 8, N) and packed.dtype == jnp.uint8
+    # pack/unpack roundtrip
+    signs = unpack_signs(packed, K)
+    np.testing.assert_array_equal(
+        np.asarray(signs), np.where(np.asarray(w) < 0, -1, 1))
+    got = binary_dot_packed(x, packed, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.binary_dot_ref(x, w)))

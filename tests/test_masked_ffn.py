@@ -1,0 +1,133 @@
+"""Execution-mode consistency for the MoR FFN (dense/exact/tiled/kernel)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoRConfig
+from repro.core import (build_mor_layer, cluster_layer, finalize_regression,
+                        init_accumulator, update_accumulator)
+from repro.core.masked_ffn import mor_relu_matmul, mor_ffn_apply
+from repro.core.predictor import binary_preact
+
+RNG = np.random.default_rng(4)
+
+
+@pytest.fixture(scope="module")
+def calibrated():
+    K, N, T = 96, 256, 1024
+    base = RNG.normal(size=(K, 32))
+    w = np.stack([base[:, RNG.integers(32)] + 0.3 * RNG.normal(size=K)
+                  for _ in range(N)], 1).astype(np.float32)
+    x = RNG.normal(size=(T, K)).astype(np.float32)
+    acc = init_accumulator(N)
+    xj, wj = jnp.asarray(x[:768]), jnp.asarray(w)
+    acc = update_accumulator(acc, binary_preact(xj, wj), xj @ wj)
+    m, b, c = finalize_regression(acc)
+    cl = cluster_layer(w, 85.0)
+    mor = build_mor_layer(np.asarray(m), np.asarray(b), np.asarray(c), cl,
+                          MoRConfig(corr_threshold=0.5))
+    w_perm = wj[:, mor["perm"]]
+    xe = jnp.asarray(x[768:])
+    return xe, w_perm, mor
+
+
+def test_exact_zeroes_only_skipped(calibrated):
+    xe, w_perm, mor = calibrated
+    y_exact, st = mor_relu_matmul(xe, w_perm, mor, activation="relu",
+                                  mode="exact")
+    y_dense, _ = mor_relu_matmul(xe, w_perm, None, activation="relu",
+                                 mode="dense")
+    diff = np.asarray(y_exact) != np.asarray(y_dense)
+    # wherever outputs differ, the exact-mode output is zero (a skip)
+    assert np.all(np.asarray(y_exact)[diff] == 0.0)
+    assert 0.0 < float(st["frac_computed"]) <= 1.0
+
+
+def test_tiled_equals_kernel(calibrated):
+    xe, w_perm, mor = calibrated
+    y_t, st_t = mor_relu_matmul(xe, w_perm, mor, activation="relu",
+                                mode="tiled", tile_m=8, tile_n=128)
+    y_k, st_k = mor_relu_matmul(xe, w_perm, mor, activation="relu",
+                                mode="kernel", tile_m=8, tile_n=128)
+    np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_k),
+                               rtol=2e-4, atol=2e-3)
+    assert float(st_t["frac_tiles_live"]) == float(st_k["frac_tiles_live"])
+
+
+def test_tiled_is_superset_of_exact(calibrated):
+    """Tile granularity can only compute MORE neurons than exact mode
+    (a tile is live if any neuron in it is live)."""
+    xe, w_perm, mor = calibrated
+    _, st_e = mor_relu_matmul(xe, w_perm, mor, activation="relu",
+                              mode="exact")
+    _, st_t = mor_relu_matmul(xe, w_perm, mor, activation="relu",
+                              mode="tiled")
+    assert float(st_t["frac_tiles_live"]) >= float(st_e["frac_computed"]) - 1e-6
+
+
+def test_relu2_activation(calibrated):
+    xe, w_perm, mor = calibrated
+    y, _ = mor_relu_matmul(xe, w_perm, mor, activation="relu2", mode="exact")
+    assert np.all(np.asarray(y) >= 0.0)
+
+
+def test_glu_ffn_applies_same_mask_to_up(calibrated):
+    xe, w_perm, mor = calibrated
+    K, N = w_perm.shape
+    w_up = jnp.asarray(RNG.normal(size=(K, N)), jnp.float32)
+    w_down = jnp.asarray(RNG.normal(size=(N, K)), jnp.float32)
+    y, st = mor_ffn_apply(xe, w_up, w_down, mor, activation="relu",
+                          mode="tiled", w_gate=w_perm)
+    y_d, _ = mor_ffn_apply(xe, w_up, w_down, None, activation="relu",
+                           mode="dense", w_gate=w_perm)
+    assert y.shape == y_d.shape
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_bad_activation_raises():
+    x = jnp.ones((4, 8))
+    w = jnp.ones((8, 16))
+    from repro.core.predictor import make_identity_layer
+    with pytest.raises(ValueError):
+        mor_relu_matmul(x, w, make_identity_layer(16), activation="silu",
+                        mode="exact")
+
+
+def test_expert_level_mor_exact_mode():
+    """MoR inside routed experts (DESIGN §Arch-applicability): a vmapped
+    hybrid predictor zeroes predicted-dead expert neurons; router-dropped
+    experts are already the coarse zero prediction."""
+    import jax
+    from repro.configs import get_config, reduce_config
+    from repro.core.predictor import make_identity_layer
+    from repro.models.layers import moe
+
+    cfg = reduce_config(get_config("mixtral-8x7b")).replace(
+        n_shared_experts=0, capacity_factor=4.0)
+    key = jax.random.PRNGKey(0)
+    params = moe.moe_init(key, cfg)
+    x = jax.random.normal(key, (4, 8, cfg.d_model), jnp.float32)
+    f = cfg.moe_d_ff or cfg.d_ff
+    E = cfg.n_experts
+
+    one = make_identity_layer(f)
+    em = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (E,) + a.shape), one)
+    y_off, _ = moe.moe_apply(params, cfg, x)
+    # nothing enabled -> identical to dense
+    y_id, _ = moe.moe_apply(params, cfg, x, mor={"experts": em},
+                            mor_mode="exact")
+    np.testing.assert_allclose(np.asarray(y_off), np.asarray(y_id),
+                               rtol=1e-5, atol=1e-5)
+    # force the binary rookie to predict zero everywhere it can
+    # (m=0, b=-1 -> p_hat < 0; enable all; proxy sentinel -1 = binary-only)
+    em_on = dict(em)
+    em_on["enable"] = jnp.ones((E, f), bool)
+    em_on["m"] = jnp.zeros((E, f), jnp.float32)
+    em_on["b"] = jnp.full((E, f), -1.0, jnp.float32)
+    em_on["is_proxy"] = jnp.zeros((E, f), bool)
+    em_on["proxy_slot"] = jnp.full((E, f), -1, jnp.int32)
+    y_all_skip, _ = moe.moe_apply(params, cfg, x, mor={"experts": em_on},
+                                  mor_mode="exact")
+    # every gate neuron predicted zero -> relufied GLU output is zero
+    assert float(jnp.max(jnp.abs(y_all_skip))) < 1e-6

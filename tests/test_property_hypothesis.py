@@ -1,0 +1,85 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.policy import expand_tile_mask, tile_mask_from_neuron_mask
+from repro.core.predictor import binary_preact
+from repro.kernels.ref import binary_dot_ref
+from repro.optim.compression import (compress_int8, decompress_int8,
+                                     error_feedback_allreduce,
+                                     init_residuals)
+
+floats = st.floats(-100, 100, allow_nan=False, width=32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(hnp.arrays(np.float32, hnp.array_shapes(min_dims=2, max_dims=2,
+                                               min_side=1, max_side=24),
+                  elements=floats),
+       st.integers(1, 24))
+def test_binary_preact_equals_oracle_any_input(x, n):
+    """Including zeros, negatives, repeated values."""
+    k = x.shape[1]
+    w = np.linspace(-1, 1, k * n, dtype=np.float32).reshape(k, n)
+    got = np.asarray(binary_preact(jnp.asarray(x), jnp.asarray(w)))
+    want = np.asarray(binary_dot_ref(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(hnp.arrays(np.bool_, hnp.array_shapes(min_dims=2, max_dims=2,
+                                             min_side=1, max_side=64)),
+       st.sampled_from([1, 2, 8]), st.sampled_from([1, 4, 16]))
+def test_tile_mask_roundtrip_is_superset(mask, tm, tn):
+    """expand(reduce(mask)) >= mask pointwise: tile granularity may only
+    ADD computed neurons, never drop one (correctness invariant that
+    makes tiled mode safe)."""
+    m = jnp.asarray(mask)
+    tiles = tile_mask_from_neuron_mask(m, tm, tn)
+    back = expand_tile_mask(tiles, tm, tn, mask.shape[0], mask.shape[1])
+    assert bool(jnp.all(back >= m))
+    # and a tile is live only if some neuron in it was live
+    assert int(tiles.sum()) <= mask.sum() + tiles.size - 1 or mask.any()
+
+
+@settings(max_examples=40, deadline=None)
+@given(hnp.arrays(np.float32, st.integers(1, 257), elements=floats))
+def test_int8_compression_error_bound(x):
+    q, s = compress_int8(jnp.asarray(x))
+    deq = np.asarray(decompress_int8(q, s))
+    assert np.all(np.abs(deq - x) <= float(s) * 0.5 + 1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(hnp.arrays(np.float32, 33, elements=floats),
+       hnp.arrays(np.float32, 33, elements=floats))
+def test_error_feedback_conservation(g, r):
+    """deq + new_residual == grad + residual exactly (nothing lost)."""
+    grads = {"w": jnp.asarray(g)}
+    resid = {"w": jnp.asarray(r)}
+    red, r_new = error_feedback_allreduce(grads, resid, axis_name=None)
+    np.testing.assert_allclose(
+        np.asarray(red["w"]) + np.asarray(r_new["w"]),
+        g.astype(np.float64) + r.astype(np.float64), rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 6), st.floats(0.05, 1.0))
+def test_gather_capacity_never_exceeds(nm, nn, frac):
+    """gather_matmul computes at most `capacity` tiles, whatever the mask."""
+    from repro.kernels.ref import gather_matmul_ref, masked_matmul_ref
+    rng = np.random.default_rng(nm * 7 + nn)
+    tm = tn = 4
+    x = jnp.asarray(rng.normal(size=(nm * tm, 8)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(8, nn * tn)), jnp.float32)
+    mask = jnp.asarray(rng.random((nm, nn)) > 0.5)
+    cap = max(1, int(frac * nm * nn))
+    out = np.asarray(gather_matmul_ref(x, w, mask, tm, tn, cap))
+    nonzero_tiles = 0
+    for i in range(nm):
+        for j in range(nn):
+            if np.any(out[i * tm:(i + 1) * tm, j * tn:(j + 1) * tn] != 0):
+                nonzero_tiles += 1
+    assert nonzero_tiles <= cap
