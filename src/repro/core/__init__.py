@@ -11,12 +11,16 @@ Pipeline (paper §3.2):
      same 128-wide TPU tile, fitted-line coefficients, enable masks.
   4. online: ``predictor`` evaluates proxies at base precision, runs the
      binary rookie for proxy-negative neurons, and skips a neuron iff
-     BOTH rookies predict a zero ReLU output.  ``masked_ffn`` provides
-     dense/"exact"/tiled/Pallas execution modes.
+     BOTH rookies predict a zero ReLU output.  ``executor`` packages the
+     predictor into per-layer ``MoRExecutionPlan``s (ONE predictor pass
+     per FFN forward, reused by gate/up/down matmuls); ``masked_ffn`` is
+     the thin dense/"exact"/tiled/Pallas dispatcher over plans.
 """
 from repro.core.predictor import (  # noqa: F401
     MoRLayer, binarize, binary_preact, hybrid_predict, make_identity_layer,
+    predictor_eval_count, reset_predictor_eval_count,
 )
+from repro.core.executor import MoRExecutionPlan, as_plan  # noqa: F401
 from repro.core.calibration import (  # noqa: F401
     CalibAccumulator, init_accumulator, update_accumulator, finalize_regression,
 )

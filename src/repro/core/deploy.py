@@ -20,11 +20,43 @@ from repro.configs.base import ModelConfig
 from repro.core.calibration import (finalize_regression, init_accumulator,
                                     update_accumulator)
 from repro.core.clustering import cluster_layer
+from repro.core.executor import MoRExecutionPlan
 from repro.core.policy import build_mor_layer
 
 
 def _stack_mor(layers: List[Dict]) -> Dict:
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def attach_plans(mor, cfg: ModelConfig, mode: str):
+    """Wrap calibrated MoR layers in per-layer execution plans.
+
+    Replaces the old convention of threading bare ``(mor, mode, tile_m,
+    tile_n)`` tuples through every call site: the plan carries the mode,
+    tile geometry, and gather_matmul capacity from ``cfg.mor`` once, and
+    the runtime (``masked_ffn`` / ``executor``) consumes it as-is.
+
+    Accepts the shapes the calibrators emit — a dict of stacked layer
+    pytrees (``calibrate_lm``: plans ride through ``lax.scan`` because
+    MoRExecutionPlan is a registered pytree with static aux config) or a
+    list of per-layer MoRLayers (``calibrate_cnn`` / ``calibrate_tds``).
+    """
+    def wrap(layer):
+        if layer is None:
+            return None
+        return MoRExecutionPlan(layer, mode=mode, tile_m=cfg.mor.tile_m,
+                                tile_n=cfg.mor.tile_n,
+                                capacity_frac=cfg.mor.capacity)
+
+    if mor is None or mode == "dense":
+        return mor
+    if isinstance(mor, MoRExecutionPlan):
+        return mor
+    if isinstance(mor, list):
+        return [wrap(m) for m in mor]
+    if isinstance(mor, dict) and "enable" not in mor:
+        return {k: wrap(v) for k, v in mor.items()}
+    return wrap(mor)
 
 
 def calibrate_lm(params: Dict, cfg: ModelConfig, forward: Callable,

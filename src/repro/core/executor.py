@@ -1,0 +1,321 @@
+"""MoR execution plans: one predictor pass per layer call, reused
+everywhere downstream.
+
+The paper's speedup model (§4.1) runs the cheap binCU predictor strictly
+ahead of the heavy compute — once.  ``MoRExecutionPlan`` is the runtime
+embodiment of that contract: a per-layer, compile-once bundle of
+(MoRLayer, mode, tile geometry, capacity) whose ``predict`` method
+produces a single :class:`MoRPrediction`, and whose matmul helpers all
+consume that one prediction.  The GLU path in particular threads one
+tile mask through the gate matmul, the up-projection, AND the
+down-projection row skip — three savings from one predictor evaluation.
+
+Execution modes (see ``core/masked_ffn.py`` for the thin dispatcher):
+
+  dense  — plain matmul, predictor off.
+  exact  — full compute, then zero the neurons the hybrid predictor
+           would have skipped (bit-identical to the paper's accelerator
+           output; accuracy-evaluation mode).
+  tiled  — tile-granular skipping semantics in pure jnp: the oracle for
+           the Pallas kernels.
+  kernel — Pallas fast path: the fused ``kernels.ops.mor_tile_mask``
+           predictor (binary rookie int8 matmul + fitted line + proxy
+           AND, reduced to tile liveness in one kernel) feeds
+           ``gather_matmul``, which only DMAs live weight tiles, under a
+           static ``capacity`` budget; the down-projection skips dead
+           contraction blocks via ``masked_matmul_kdim``.
+
+Plans are registered pytrees: the MoRLayer is the only child, the mode /
+tile / capacity knobs are static aux data.  A plan built from a stacked
+(L-leading) MoRLayer pytree can therefore ride through ``jax.lax.scan``
+— each scan step sees a per-layer plan with identical static config,
+which is exactly how ``deploy.attach_plans`` wires calibrated models.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.predictor import MoRLayer, hybrid_predict
+from repro.core.policy import expand_tile_mask, tile_mask_from_neuron_mask
+
+MODES = ("dense", "exact", "tiled", "kernel")
+
+
+def _act(h, activation: str):
+    if activation == "relu":
+        return jax.nn.relu(h)
+    if activation == "relu2":
+        return jnp.square(jax.nn.relu(h))
+    raise ValueError(f"MoR requires a ReLU-family activation, got {activation!r}")
+
+
+def _dense_stats() -> Dict[str, jax.Array]:
+    z = jnp.zeros((), jnp.float32)
+    return {"frac_computed": jnp.ones((), jnp.float32),
+            "frac_tiles_live": jnp.ones((), jnp.float32),
+            "frac_mispredicted_zero": z}
+
+
+class MoRPrediction:
+    """The result of ONE predictor pass, shared by every consumer.
+
+    ``computed``: (T, N) bool neuron mask, or None in kernel mode (the
+    fused kernel reduces straight to tiles without materialising it).
+    ``tiles``: (T/tile_m, N/tile_n) bool tile-liveness mask.
+    ``kept``: tiles actually computed under the capacity budget (equals
+    ``tiles`` when capacity covers every live tile)."""
+
+    __slots__ = ("computed", "tiles", "kept")
+
+    def __init__(self, computed: Optional[jax.Array], tiles: jax.Array,
+                 kept: Optional[jax.Array] = None):
+        self.computed = computed
+        self.tiles = tiles
+        self.kept = tiles if kept is None else kept
+
+    def keep_mask(self, T: int, N: int, tile_m: int, tile_n: int):
+        return expand_tile_mask(self.kept, tile_m, tile_n, T, N)
+
+    def stats(self) -> Dict[str, jax.Array]:
+        tiles_live = self.tiles.mean(dtype=jnp.float32)
+        if self.computed is not None:
+            frac_computed = self.computed.mean(dtype=jnp.float32)
+        else:
+            # kernel mode: the neuron mask never exists; report the
+            # tile-level compute fraction (its tight upper bound).
+            frac_computed = tiles_live
+        return {"frac_computed": frac_computed,
+                "frac_tiles_live": tiles_live,
+                "frac_mispredicted_zero": jnp.zeros((), jnp.float32)}
+
+
+@jax.tree_util.register_pytree_node_class
+class MoRExecutionPlan:
+    """Per-layer, compile-once MoR execution plan.
+
+    Pytree contract: ``mor`` (a MoRLayer dict pytree, possibly stacked
+    over layers, possibly None) is the sole child; ``mode``/``tile_m``/
+    ``tile_n``/``capacity_frac`` are static aux data, so plans survive
+    ``tree_map``, ``lax.scan`` slicing, and jit boundaries unchanged.
+    """
+
+    def __init__(self, mor: Optional[MoRLayer], *, mode: str = "dense",
+                 tile_m: int = 8, tile_n: int = 128,
+                 capacity_frac: float = 1.0):
+        if mode not in MODES:
+            raise ValueError(f"unknown MoR mode {mode!r}")
+        self.mor = mor
+        self.mode = mode
+        self.tile_m = tile_m
+        self.tile_n = tile_n
+        self.capacity_frac = capacity_frac
+
+    # -- pytree plumbing ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.mor,), (self.mode, self.tile_m, self.tile_n,
+                             self.capacity_frac)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        mode, tile_m, tile_n, capacity_frac = aux
+        return cls(children[0], mode=mode, tile_m=tile_m, tile_n=tile_n,
+                   capacity_frac=capacity_frac)
+
+    def __repr__(self):
+        return (f"MoRExecutionPlan(mode={self.mode!r}, tile_m={self.tile_m},"
+                f" tile_n={self.tile_n}, capacity_frac={self.capacity_frac},"
+                f" calibrated={self.mor is not None})")
+
+    # -- predicates --------------------------------------------------------
+    @property
+    def active(self) -> bool:
+        """True when the predictor actually runs (calibrated + not dense)."""
+        return self.mor is not None and self.mode != "dense"
+
+    # -- the single predictor pass -----------------------------------------
+    def predict(self, x: jax.Array, w: jax.Array, *,
+                preact_full: Optional[jax.Array] = None,
+                residual: Optional[jax.Array] = None) -> MoRPrediction:
+        """Run the hybrid predictor exactly once -> MoRPrediction.
+
+        ``kernel`` mode routes through the fused Pallas
+        ``kernels.ops.mor_tile_mask`` (binary rookie + fitted line +
+        proxy AND + tile reduction in one pass over the activations);
+        every other mode uses the pure-jnp ``hybrid_predict`` oracle.
+        """
+        assert self.active, "predict() on an inactive plan"
+        mor = self.mor
+        if self.mode == "kernel" and preact_full is None and residual is None:
+            from repro.kernels import ops as kops
+            # proxy rookie at base precision (only the unique proxy
+            # columns are touched; they live in the always-computed
+            # leading tiles of the permuted layout)
+            slot = jnp.maximum(mor["proxy_slot"], 0)
+            proxy_cols = jnp.take(w, slot, axis=1)
+            proxy_pre = jax.lax.dot_general(
+                x, proxy_cols, (((x.ndim - 1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            proxy_relu_in = (proxy_pre * mor["bn_scale"][slot]
+                             + mor["bn_bias"][slot])
+            proxy_neg = (proxy_relu_in < 0.0) | (mor["proxy_slot"] < 0)
+            # proxies themselves are always computed: fold ~is_proxy into
+            # the kernel's enable row
+            mor_eff = dict(mor)
+            mor_eff["enable"] = mor["enable"] & ~mor["is_proxy"]
+            tiles = kops.mor_tile_mask(x, w, mor_eff, proxy_neg,
+                                       tile_m=self.tile_m, tile_n=self.tile_n)
+            return MoRPrediction(None, tiles,
+                                 kept=self._capacity_clip(tiles))
+        computed = hybrid_predict(x, w, mor, preact_full=preact_full,
+                                  residual=residual)
+        tiles = tile_mask_from_neuron_mask(
+            computed.reshape(-1, computed.shape[-1]), self.tile_m, self.tile_n)
+        kept = self._capacity_clip(tiles) if self.mode == "kernel" else None
+        return MoRPrediction(computed, tiles, kept=kept)
+
+    def _capacity_clip(self, tiles: jax.Array) -> jax.Array:
+        """Static-capacity truncation mirroring gather_matmul's slot list:
+        only the first ``capacity`` live tiles (row-major) are computed."""
+        if self.capacity_frac >= 1.0:
+            return tiles
+        n_tiles = tiles.shape[0] * tiles.shape[1]
+        capacity = max(1, int(self.capacity_frac * n_tiles))
+        flat = tiles.reshape(-1)
+        live_rank = jnp.cumsum(flat) - 1
+        return (flat & (live_rank < capacity)).reshape(tiles.shape)
+
+    # -- mask-consuming matmuls --------------------------------------------
+    def masked_matmul(self, x: jax.Array, w: jax.Array,
+                      pred: MoRPrediction) -> jax.Array:
+        """x @ w with ``pred``'s tile mask applied — dead tiles are exact
+        zeros.  kernel mode DMAs only live tiles (gather_matmul);
+        tiled/exact modes compute densely and select (the jnp oracle).
+        Returns float32 pre-activations."""
+        T, N = x.shape[0], w.shape[1]
+        if self.mode == "kernel":
+            from repro.kernels import ops as kops
+            # gather_matmul already selects dead/overflow tiles to exact
+            # zero internally (same capacity-clipped mask as pred.kept);
+            # re-applying the keep mask here would be a redundant (T, N)
+            # expansion + select on the serving hot path
+            pre = kops.gather_matmul(x, w, pred.tiles,
+                                     capacity_frac=self.capacity_frac,
+                                     tile_m=self.tile_m, tile_n=self.tile_n)
+            return pre.astype(jnp.float32)
+        pre = (x @ w).astype(jnp.float32)
+        keep = pred.keep_mask(T, N, self.tile_m, self.tile_n)
+        return jnp.where(keep, pre, 0.0)
+
+    def down_matmul(self, h: jax.Array, w_down: jax.Array,
+                    pred: Optional[MoRPrediction]) -> jax.Array:
+        """h @ w_down with dead hidden tiles skipped along the CONTRACTION
+        dim (the paper's 3x GLU saving: a dead gate tile kills the
+        matching up column and down row).  Dead h tiles are exact zeros,
+        so the skip is numerically exact.  kernel mode uses the
+        contraction-masked Pallas kernel; other modes rely on the zeros
+        (XLA sees a dense matmul — the skip is semantic only)."""
+        if pred is None or self.mode != "kernel":
+            return h @ w_down
+        from repro.kernels import ops as kops
+        return kops.masked_matmul_kdim(h, w_down, pred.kept,
+                                       tile_m=self.tile_m,
+                                       tile_k=self.tile_n).astype(h.dtype)
+
+    # -- the mor_relu_matmul / mor_ffn_apply entry points -------------------
+    def relu_matmul(self, x: jax.Array, w: jax.Array, *,
+                    activation: str = "relu",
+                    residual: Optional[jax.Array] = None,
+                    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """y = act(x @ w) with MoR skipping; x: (T, K), w: (K, N) permuted.
+        Exactly ONE predictor evaluation regardless of mode."""
+        y, pred, stats = self._relu_matmul_pred(x, w, activation=activation,
+                                                residual=residual)
+        return y, stats
+
+    def _relu_matmul_pred(self, x, w, *, activation: str,
+                          residual: Optional[jax.Array] = None):
+        """relu_matmul that also returns the MoRPrediction for reuse
+        (the GLU path threads it into the up/down projections)."""
+        T, N = x.shape[0], w.shape[1]
+        if not self.active:
+            pre = x @ w
+            y = _act(pre + (residual if residual is not None else 0.0),
+                     activation)
+            return y, None, _dense_stats()
+        mor = self.mor
+
+        if self.mode == "exact":
+            pre = (x @ w).astype(jnp.float32)
+            pre_bn = pre * mor["bn_scale"] + mor["bn_bias"]
+            if residual is not None:
+                pre_bn = pre_bn + residual
+            pred = self.predict(x, w, preact_full=pre, residual=residual)
+            y = jnp.where(pred.computed, _act(pre_bn, activation),
+                          0.0).astype(x.dtype)
+            truly_nonzero = pre_bn > 0
+            stats = pred.stats()
+            stats["frac_mispredicted_zero"] = (
+                ~pred.computed & truly_nonzero).mean(dtype=jnp.float32)
+            return y, pred, stats
+
+        # tiled / kernel: one predictor pass -> tile mask -> masked matmul
+        pred = self.predict(x, w, residual=residual)
+        pre = self.masked_matmul(x, w, pred)
+        pre_bn = pre * mor["bn_scale"] + mor["bn_bias"]
+        if residual is not None:
+            pre_bn = pre_bn + residual
+        keep = pred.keep_mask(T, N, self.tile_m, self.tile_n)
+        y = jnp.where(keep, _act(pre_bn, activation), 0.0).astype(x.dtype)
+        return y, pred, pred.stats()
+
+    def ffn(self, x: jax.Array, w_up: jax.Array, w_down: jax.Array, *,
+            activation: str, w_gate: Optional[jax.Array] = None,
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Full FFN with MoR on the ReLU pre-activation.
+
+        GLU case (relufied SwiGLU -> ReLU-GLU): h = relu(x@w_gate) *
+        (x@w_up).  The SINGLE gate prediction gates the up matmul (same
+        tile mask — a skipped gate neuron zeroes h, so its up column is
+        dead work) and the down matmul (dead h rows skipped along the
+        contraction).  One predictor evaluation total.
+        """
+        if w_gate is not None:
+            g, pred, stats = self._relu_matmul_pred(x, w_gate,
+                                                    activation=activation)
+            if pred is not None and self.mode in ("tiled", "kernel"):
+                u = self.masked_matmul(x, w_up, pred).astype(x.dtype)
+            else:
+                # dense / exact: g already zeroes h where skipped; the
+                # up matmul stays dense (exact mode is neuron-granular)
+                u = x @ w_up
+            h = (g * u).astype(x.dtype)
+        else:
+            h, pred, stats = self._relu_matmul_pred(x, w_up,
+                                                    activation=activation)
+        return self.down_matmul(h, w_down, pred), stats
+
+
+def as_plan(mor, *, mode: str = "dense", tile_m: int = 8, tile_n: int = 128,
+            capacity_frac: float = 1.0) -> MoRExecutionPlan:
+    """Coerce ``mor`` (a plan, a MoRLayer dict, or None) into a plan.
+
+    An existing plan wins outright — its own mode/tiling is authoritative
+    (it was attached offline by ``deploy.attach_plans``).  A bare
+    MoRLayer gets wrapped with the caller's knobs (the legacy
+    ``(mor, mode, tile_m, tile_n)`` tuple-passing path).
+    """
+    if isinstance(mor, MoRExecutionPlan):
+        return mor
+    if mor is not None and not _looks_like_mor_layer(mor):
+        # e.g. the expert-MoR pytree {"experts": ...} handled upstream
+        mor = None
+    return MoRExecutionPlan(mor, mode=mode if mor is not None else "dense",
+                            tile_m=tile_m, tile_n=tile_n,
+                            capacity_frac=capacity_frac)
+
+
+def _looks_like_mor_layer(mor) -> bool:
+    return isinstance(mor, dict) and "enable" in mor and "bn_scale" in mor

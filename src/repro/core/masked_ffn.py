@@ -1,15 +1,19 @@
-"""Execution modes for a MoR-guarded ReLU matmul / FFN.
+"""Thin dispatcher over :class:`repro.core.executor.MoRExecutionPlan`.
 
-Modes:
+Historically this module implemented the dense/exact/tiled/kernel
+execution modes inline (and, in the GLU path, re-ran the hybrid
+predictor for the up-projection).  The mode logic now lives in
+``executor.py`` as per-layer execution plans that run the predictor
+exactly once; these wrappers keep the long-standing call signatures for
+models and tests while routing everything through plans.
+
+Modes (see executor.py for the full contract):
   dense  — plain matmul (baseline, predictor off).
-  exact  — full compute, then zero the neurons the hybrid predictor would
-           have skipped.  Bit-identical to what the paper's accelerator
-           outputs; used for accuracy evaluation (paper Figs. 6/9/12).
-  tiled  — tile-granular skipping semantics in pure jnp (the oracle for
-           the Pallas kernels): a 128-col x tile_m-row block is skipped
-           iff every neuron in it is predicted zero.
-  kernel — Pallas: fused binary-rookie mask + gather_matmul that only
-           DMAs live weight tiles (see repro/kernels).
+  exact  — full compute, then zero predicted-dead neurons (accuracy
+           evaluation; bit-identical to the paper's accelerator).
+  tiled  — tile-granular skipping in pure jnp (the kernel oracle).
+  kernel — fused Pallas predictor (``mor_tile_mask``) + DMA-skipping
+           ``gather_matmul`` + contraction-masked down projection.
 
 All modes operate in *permuted* column space — the permutation is folded
 into the surrounding weights offline (policy.py), so callers never pay a
@@ -20,18 +24,9 @@ from __future__ import annotations
 from typing import Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.predictor import MoRLayer, hybrid_predict
-from repro.core.policy import expand_tile_mask, tile_mask_from_neuron_mask
-
-
-def _act(h, activation: str):
-    if activation == "relu":
-        return jax.nn.relu(h)
-    if activation == "relu2":
-        return jnp.square(jax.nn.relu(h))
-    raise ValueError(f"MoR requires a ReLU-family activation, got {activation!r}")
+from repro.core.executor import MoRExecutionPlan, as_plan
+from repro.core.predictor import MoRLayer
 
 
 def mor_relu_matmul(x: jax.Array, w: jax.Array, mor: Optional[MoRLayer],
@@ -41,71 +36,12 @@ def mor_relu_matmul(x: jax.Array, w: jax.Array, mor: Optional[MoRLayer],
                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """y = act(x @ w) with MoR skipping.  x: (T, K), w: (K, N) permuted.
 
+    ``mor`` may be a bare MoRLayer (wrapped with the given mode/tiling)
+    or an already-attached MoRExecutionPlan (its config wins).
     Returns (y, stats) where stats carries the realised skip fractions
     (stats are jnp scalars, jit-safe)."""
-    T = x.shape[0]
-    N = w.shape[1]
-    if mode == "dense" or mor is None:
-        pre = x @ w
-        y = _act(pre + (residual if residual is not None else 0.0), activation)
-        z = jnp.zeros((), jnp.float32)
-        return y, {"frac_computed": jnp.ones((), jnp.float32),
-                   "frac_tiles_live": jnp.ones((), jnp.float32),
-                   "frac_mispredicted_zero": z}
-
-    if mode == "exact":
-        pre = (x @ w).astype(jnp.float32)
-        pre_bn = pre * mor["bn_scale"] + mor["bn_bias"]
-        if residual is not None:
-            pre_bn = pre_bn + residual
-        computed = hybrid_predict(x, w, mor, preact_full=pre,
-                                  residual=residual)
-        y = jnp.where(computed, _act(pre_bn, activation), 0.0).astype(x.dtype)
-        truly_nonzero = pre_bn > 0
-        stats = {
-            "frac_computed": computed.mean(dtype=jnp.float32),
-            "frac_tiles_live": tile_mask_from_neuron_mask(
-                computed.reshape(-1, N), tile_m, tile_n
-            ).mean(dtype=jnp.float32),
-            "frac_mispredicted_zero":
-                (~computed & truly_nonzero).mean(dtype=jnp.float32),
-        }
-        return y, stats
-
-    if mode == "tiled":
-        computed = hybrid_predict(x, w, mor, residual=residual)  # (T, N)
-        tiles = tile_mask_from_neuron_mask(computed, tile_m, tile_n)
-        keep = expand_tile_mask(tiles, tile_m, tile_n, T, N)
-        pre = (x @ w).astype(jnp.float32)
-        pre_bn = pre * mor["bn_scale"] + mor["bn_bias"]
-        if residual is not None:
-            pre_bn = pre_bn + residual
-        y = jnp.where(keep, _act(pre_bn, activation), 0.0).astype(x.dtype)
-        stats = {
-            "frac_computed": computed.mean(dtype=jnp.float32),
-            "frac_tiles_live": tiles.mean(dtype=jnp.float32),
-            "frac_mispredicted_zero": jnp.zeros((), jnp.float32),
-        }
-        return y, stats
-
-    if mode == "kernel":
-        from repro.kernels import ops as kops
-        computed = hybrid_predict(x, w, mor, residual=residual)
-        tiles = tile_mask_from_neuron_mask(computed, tile_m, tile_n)
-        pre = kops.masked_matmul(x, w, tiles, tile_m=tile_m, tile_n=tile_n)
-        pre_bn = pre.astype(jnp.float32) * mor["bn_scale"] + mor["bn_bias"]
-        if residual is not None:
-            pre_bn = pre_bn + residual
-        keep = expand_tile_mask(tiles, tile_m, tile_n, T, N)
-        y = jnp.where(keep, _act(pre_bn, activation), 0.0).astype(x.dtype)
-        stats = {
-            "frac_computed": computed.mean(dtype=jnp.float32),
-            "frac_tiles_live": tiles.mean(dtype=jnp.float32),
-            "frac_mispredicted_zero": jnp.zeros((), jnp.float32),
-        }
-        return y, stats
-
-    raise ValueError(f"unknown MoR mode {mode!r}")
+    plan = as_plan(mor, mode=mode, tile_m=tile_m, tile_n=tile_n)
+    return plan.relu_matmul(x, w, activation=activation, residual=residual)
 
 
 def mor_ffn_apply(x: jax.Array, w_up: jax.Array, w_down: jax.Array,
@@ -117,30 +53,11 @@ def mor_ffn_apply(x: jax.Array, w_up: jax.Array, w_down: jax.Array,
 
     GLU case (relufied SwiGLU -> ReLU-GLU): h = relu(x@w_gate) * (x@w_up).
     A skipped gate neuron zeroes h, so the up-projection column and the
-    down-projection row are skipped too (3x the per-neuron saving) — in
-    tiled/kernel mode the same tile mask gates the up matmul.
+    down-projection row are skipped too (3x the per-neuron saving) — the
+    plan's ONE gate prediction gates all three matmuls.
     """
-    if w_gate is not None:
-        g, stats = mor_relu_matmul(x, w_gate, mor, activation=activation,
-                                   mode=mode, tile_m=tile_m, tile_n=tile_n)
-        if mode in ("tiled", "kernel") and mor is not None:
-            computed = hybrid_predict(x, w_gate, mor)
-            tiles = tile_mask_from_neuron_mask(computed, tile_m, tile_n)
-            if mode == "kernel":
-                from repro.kernels import ops as kops
-                u = kops.masked_matmul(x, w_up, tiles,
-                                       tile_m=tile_m, tile_n=tile_n)
-                keep = expand_tile_mask(tiles, tile_m, tile_n,
-                                        x.shape[0], w_up.shape[1])
-                u = jnp.where(keep, u, 0.0).astype(x.dtype)
-            else:
-                keep = expand_tile_mask(tiles, tile_m, tile_n,
-                                        x.shape[0], w_up.shape[1])
-                u = jnp.where(keep, x @ w_up, 0.0).astype(x.dtype)
-        else:
-            u = x @ w_up
-        h = (g * u).astype(x.dtype)
-    else:
-        h, stats = mor_relu_matmul(x, w_up, mor, activation=activation,
-                                   mode=mode, tile_m=tile_m, tile_n=tile_n)
-    return h @ w_down, stats
+    plan = as_plan(mor, mode=mode, tile_m=tile_m, tile_n=tile_n)
+    return plan.ffn(x, w_up, w_down, activation=activation, w_gate=w_gate)
+
+
+__all__ = ["mor_relu_matmul", "mor_ffn_apply", "MoRExecutionPlan", "as_plan"]

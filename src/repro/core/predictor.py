@@ -23,6 +23,24 @@ import jax.numpy as jnp
 #                      identity (1, 0) when the layer has no BN.
 MoRLayer = Dict[str, jax.Array]
 
+# Predictor-evaluation counter (trace-time): incremented once per
+# ``hybrid_predict`` call and once per fused ``kernels.ops.mor_tile_mask``
+# call.  The MoRExecutionPlan contract is ONE evaluation per FFN forward;
+# tests assert it through this counter.
+_PREDICTOR_EVALS = [0]
+
+
+def note_predictor_eval() -> None:
+    _PREDICTOR_EVALS[0] += 1
+
+
+def predictor_eval_count() -> int:
+    return _PREDICTOR_EVALS[0]
+
+
+def reset_predictor_eval_count() -> None:
+    _PREDICTOR_EVALS[0] = 0
+
 
 def make_identity_layer(n: int) -> MoRLayer:
     """A no-op MoRLayer (nothing enabled, identity permutation)."""
@@ -100,6 +118,7 @@ def hybrid_predict(x: jax.Array, w_perm: jax.Array, mor: MoRLayer,
     columns are ever needed — in the tiled path they live in the leading
     tiles and are computed anyway).
     """
+    note_predictor_eval()
     # proxy_slot == -1 is the "binary rookie alone" sentinel (no spatial
     # predictor): the proxy test passes unconditionally.
     slot = jnp.maximum(mor["proxy_slot"], 0)

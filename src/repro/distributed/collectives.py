@@ -21,7 +21,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 
-def _ring_ag_matmul(x, w, axis_name: str):
+def _ring_ag_matmul(x, w, axis_name: str, axis_size: int):
     """Per-shard body: x is the *local* activation shard (M_local, K);
     w is the local K-shard of the weight (K, N) split along K across the
     axis: w_local (K/P, N).  Computes x @ w_full with the x K-dim gathered
@@ -29,8 +29,12 @@ def _ring_ag_matmul(x, w, axis_name: str):
 
     Layout convention: x: (M, K/P) sharded on K; w: (K/P, N) sharded on K.
     Result: (M, N) partial-sum all-reduced over the axis.
+
+    ``axis_size`` is threaded statically from the mesh (jax 0.4.x has no
+    ``jax.lax.axis_size``; the ring schedule needs it at trace time to
+    pick the step count anyway).
     """
-    p = jax.lax.axis_size(axis_name)
+    p = axis_size
     idx = jax.lax.axis_index(axis_name)
     kb = w.shape[0]
 
@@ -68,7 +72,8 @@ def ag_matmul_overlapped(x: jax.Array, w: jax.Array, mesh: Mesh,
     w shards while each is consumed against its matching x column block.
     Returns (M, N) replicated over ``axis``."""
     fn = shard_map(
-        functools.partial(_ring_ag_matmul, axis_name=axis),
+        functools.partial(_ring_ag_matmul, axis_name=axis,
+                          axis_size=mesh.shape[axis]),
         mesh=mesh,
         in_specs=(P(None, None), P(axis, None)),
         out_specs=P(None, None),

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 
 def _kernel(x_ref, w_ref, coef_ref, pn_ref, o_ref, acc_ref):
     k = pl.program_id(2)
@@ -36,7 +38,11 @@ def _kernel(x_ref, w_ref, coef_ref, pn_ref, o_ref, acc_ref):
         sc, bi = coef_ref[2, :], coef_ref[3, :]
         en = coef_ref[4, :]
         p_hat = (m[None, :] * p_bin + b[None, :]) * sc[None, :] + bi[None, :]
-        skip = (p_hat < 0.0) & (en[None, :] > 0.5) & (pn_ref[...] > 0)
+        pn = pn_ref[...]
+        # pn: 0 = proxy predicted non-zero, 1 = proxy predicted zero,
+        # 2 = padded row/col (forced skip, so padding never marks a tile
+        # live — matches the oracle's pad-with-False reduction)
+        skip = ((p_hat < 0.0) & (en[None, :] > 0.5) & (pn == 1)) | (pn > 1)
         o_ref[0, 0] = jnp.any(~skip).astype(jnp.int32)
 
 
@@ -47,7 +53,8 @@ def mor_tile_mask(x: jax.Array, w: jax.Array, coef: jax.Array,
                   tile_n: int = 128, bk: int = 512,
                   interpret: bool = False) -> jax.Array:
     """x: (M, K); w: (K, N); coef: (5, N) float32 rows = [m, b, bn_scale,
-    bn_bias, enable]; proxy_neg: (M, N) int8 (1 = proxy predicted zero).
+    bn_bias, enable]; proxy_neg: (M, N) int8 (0 = proxy predicted
+    non-zero, 1 = proxy predicted zero, 2 = padding: forced skip).
     -> (M/tile_m, N/tile_n) int32 tile liveness."""
     M, K = x.shape
     _, N = w.shape
@@ -66,7 +73,7 @@ def mor_tile_mask(x: jax.Array, w: jax.Array, coef: jax.Array,
         out_specs=pl.BlockSpec((1, 1), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((grid[0], grid[1]), jnp.int32),
         scratch_shapes=[pltpu.VMEM((tile_m, tile_n), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w, coef, proxy_neg)

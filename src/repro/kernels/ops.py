@@ -99,11 +99,40 @@ def gather_matmul(x: jax.Array, w: jax.Array, tile_mask: jax.Array, *,
     return out[:M, :N]
 
 
+def masked_matmul_kdim(x: jax.Array, w: jax.Array, tile_mask: jax.Array, *,
+                       tile_m: int = 8, tile_k: int = 128,
+                       bn: int = 128) -> jax.Array:
+    """Contraction-masked matmul (MoR down projection): tile_mask[i, k]
+    gates the (tile_m x tile_k) block of x rows feeding output row-block
+    i — dead FFN hidden tiles (exact zeros) are skipped, never MAC'd."""
+    M, K = x.shape
+    N = w.shape[1]
+    bn_ = min(bn, N)
+    xp = _pad_to(x, tile_m, tile_k)
+    wp = _pad_to(w, tile_k, bn_)
+    nm = xp.shape[0] // tile_m
+    nk = xp.shape[1] // tile_k
+    mask = tile_mask
+    if mask.shape != (nm, nk):
+        # padded x blocks are zero -> mark them dead (skip is exact)
+        mask = jnp.pad(mask.astype(jnp.int32),
+                       ((0, nm - mask.shape[0]), (0, nk - mask.shape[1])))
+    out = _mm.masked_matmul_kdim(xp, wp, mask, tile_m=tile_m, tile_k=tile_k,
+                                 bn=bn_, interpret=_interpret())
+    return out[:M, :N]
+
+
 def mor_tile_mask(x: jax.Array, w_perm: jax.Array, mor, proxy_neg: jax.Array,
                   *, tile_m: int = 8, tile_n: int = 128,
                   bk: int = 512) -> jax.Array:
     """Fused predictor: build the (5, N) coef table from a MoRLayer and
-    run the fused kernel.  proxy_neg: (M, N) bool."""
+    run the fused kernel.  proxy_neg: (M, N) bool.
+
+    Counts as ONE predictor evaluation (same counter as the jnp
+    ``hybrid_predict`` oracle — the MoRExecutionPlan once-per-forward
+    contract is asserted across both paths)."""
+    from repro.core.predictor import note_predictor_eval
+    note_predictor_eval()
     M, K = x.shape
     N = w_perm.shape[1]
     coef = jnp.stack([mor["m"], mor["b"], mor["bn_scale"], mor["bn_bias"],
@@ -120,8 +149,11 @@ def mor_tile_mask(x: jax.Array, w_perm: jax.Array, mor, proxy_neg: jax.Array,
     n_pad = wp.shape[1] - N
     if n_pad:
         coef = jnp.pad(coef, ((0, 0), (0, n_pad)))
+    # padded rows/cols must never mark a tile live (the jnp oracle pads
+    # the neuron mask with False): encode them as proxy_neg = 2, the
+    # kernel's forced-skip sentinel
     pn = jnp.pad(proxy_neg.astype(jnp.int8),
-                 ((0, xp.shape[0] - M), (0, n_pad)))
+                 ((0, xp.shape[0] - M), (0, n_pad)), constant_values=2)
     mask = _mp.mor_tile_mask(xp, wp, coef, pn, tile_m=tile_m, tile_n=tile_n,
                              bk=bk_, interpret=_interpret())
     return mask.astype(bool)

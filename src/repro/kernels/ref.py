@@ -41,6 +41,17 @@ def gather_matmul_ref(x: jax.Array, w: jax.Array, tile_mask: jax.Array,
     return masked_matmul_ref(x, w, kept, tile_m, tile_n)
 
 
+def masked_matmul_kdim_ref(x: jax.Array, w: jax.Array,
+                           tile_mask: jax.Array, tile_m: int, tile_k: int
+                           ) -> jax.Array:
+    """x @ w with dead (row-block, k-block) pairs of x zeroed before the
+    contraction — the oracle for the contraction-masked down matmul."""
+    keep = _expand_mask(tile_mask.astype(bool), tile_m, tile_k,
+                        x.shape[0], x.shape[1])
+    xz = jnp.where(keep, x, 0.0)
+    return (xz.astype(jnp.float32) @ w.astype(jnp.float32)).astype(x.dtype)
+
+
 def mor_tile_mask_ref(x: jax.Array, w: jax.Array, m: jax.Array,
                       b: jax.Array, bn_scale: jax.Array, bn_bias: jax.Array,
                       enable: jax.Array, proxy_neg: jax.Array,

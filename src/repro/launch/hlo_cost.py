@@ -110,13 +110,34 @@ def parse_hlo(text: str) -> Dict[str, List[Op]]:
     return comps
 
 
+# operand = optional inline "f32[8,16]{1,0} " type prefix + %name.
+# Optimized HLO text comes in both spellings (types inline at the op line,
+# or name-only with the type on the operand's own def line), so parse both.
+_OPERAND_RE = re.compile(
+    r"(?:([a-z][a-z0-9]*\[[0-9,]*\](?:\{[0-9,:TS()]*\})?)\s+)?"
+    r"%([\w\.\-]+)")
+
+
+def _operand_type(op: Op, idx: int, shapes: Dict[str, str]) -> str:
+    """Type string of the op's idx-th operand: inline type when the HLO
+    dialect spells it at the call site, else looked up by operand name
+    (naive comma-splitting breaks on shape commas like f32[128,256]).
+
+    Scans the whole rest-of-line rather than truncating at the first
+    ')': tiled layout annotations like {1,0:T(8,128)} contain parens.
+    Operands precede attributes, so low indices stay correct."""
+    ops_ = _OPERAND_RE.findall(op.rest)
+    if idx >= len(ops_):
+        return ""
+    inline, name = ops_[idx]
+    return inline if inline else shapes.get(name, "")
+
+
 def _dot_flops(op: Op, comps, shapes: Dict[str, str]) -> float:
     """2 * prod(result) * prod(lhs contracting dims)."""
     out = _shape_elems(op.result_type)
     m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
-    lhs_name = op.rest.split(",")[0].strip().lstrip("%")
-    lhs_type = shapes.get(lhs_name, "")
-    sm = _SHAPE_TOKEN.search(lhs_type)
+    sm = _SHAPE_TOKEN.search(_operand_type(op, 0, shapes))
     if not (m and sm):
         return 2.0 * out  # fallback: K unknown
     dims = [int(d) for d in sm.group(2).split(",") if d]
@@ -129,11 +150,7 @@ def _dot_flops(op: Op, comps, shapes: Dict[str, str]) -> float:
 
 def _conv_flops(op: Op, shapes: Dict[str, str]) -> float:
     out = _shape_elems(op.result_type)
-    parts = [p.strip().lstrip("%") for p in op.rest.split(",")[:2]]
-    if len(parts) < 2:
-        return 2.0 * out
-    k_type = shapes.get(parts[1], "")
-    sm = _SHAPE_TOKEN.search(k_type)
+    sm = _SHAPE_TOKEN.search(_operand_type(op, 1, shapes))
     if not sm:
         return 2.0 * out
     kdims = [int(d) for d in sm.group(2).split(",") if d]

@@ -98,6 +98,42 @@ def make_prefill(cfg: ModelConfig, mor=None, mor_mode: str = "dense"
     return prefill
 
 
+def make_prefill_step(cfg: ModelConfig, mor=None, mor_mode: str = "dense"
+                      ) -> Callable:
+    """prefill_step(params, cache, prompts (B, P)) -> (next_tokens (B,),
+    cache): the ENTIRE prompt in one jitted call.
+
+    Transformer families run a true batched prefill (parallel causal
+    attention + one cache write per layer).  Recurrent families (ssm /
+    hybrid) and prompts longer than the KV ring buffer fall back to a
+    ``lax.scan`` over the single-token decode step — still one compiled
+    step, so the per-token Python dispatch of the old serve loop is gone
+    either way."""
+    api = get_model(cfg)
+    assert api.decode_step is not None, f"{cfg.name} has no decode step"
+
+    def scan_prefill(params, cache, prompts):
+        def body(c, tok):
+            logits, c = api.decode_step(params, cfg, tok[:, None], c,
+                                        mor=mor, mor_mode=mor_mode)
+            return c, logits
+        cache, logits = jax.lax.scan(body, cache, prompts.T)
+        return jnp.argmax(logits[-1], axis=-1).astype(jnp.int32), cache
+
+    def prefill_step(params, cache, prompts):
+        P = prompts.shape[1]
+        batched = api.prefill is not None
+        if batched and cfg.sliding_window and P > cfg.sliding_window:
+            batched = False     # prompt would wrap the kv ring buffer
+        if not batched:
+            return scan_prefill(params, cache, prompts)
+        logits, cache = api.prefill(params, cfg, prompts, cache,
+                                    mor=mor, mor_mode=mor_mode)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return prefill_step
+
+
 def make_serve_step(cfg: ModelConfig, mor=None, mor_mode: str = "dense"
                     ) -> Callable:
     """serve_step(params, cache, tokens (B,1)) -> (next_tokens, cache)."""

@@ -22,13 +22,18 @@ class ModelAPI:
     cache_init: Optional[Callable] = None
     decode_step: Optional[Callable] = None
     has_decode: bool = True
+    # batched prefill: (params, cfg, tokens (B,S), cache, *, mor, mor_mode)
+    # -> (last-position logits, cache).  Families without one fall back to
+    # a lax.scan over decode_step (see launch.steps.make_prefill_step).
+    prefill: Optional[Callable] = None
 
 
 def get_model(cfg: ModelConfig) -> ModelAPI:
     fam = cfg.family
     if fam in ("dense", "moe", "vlm"):
         from repro.models import transformer as t
-        return ModelAPI(t.init_params, t.forward, t.cache_init, t.decode_step)
+        return ModelAPI(t.init_params, t.forward, t.cache_init, t.decode_step,
+                        prefill=t.prefill)
     if fam == "audio":
         from repro.models import transformer as t
         return ModelAPI(t.init_params, t.forward, None, None,

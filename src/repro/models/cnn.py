@@ -122,19 +122,22 @@ def forward(params: Dict, state: Dict, cfg: ModelConfig, images, *,
             })
 
         if mor is not None and mor_mode != "dense" and mor[i] is not None:
-            from repro.core.masked_ffn import mor_relu_matmul
+            from repro.core.executor import as_plan
             # conv-as-matmul view for the predictor: flatten spatial dims
-            m = mor[i]
+            plan = as_plan(mor[i], mode=mor_mode, tile_m=cfg.mor.tile_m,
+                           tile_n=cfg.mor.tile_n)
+            m = plan.mor
             B, H, W, C = pre.shape
             pre_flat = pre.reshape(-1, C)
             res_flat = (res_in.reshape(-1, C) if res_in is not None else None)
-            # exact mode on the *true* preacts (conv already computed)
-            from repro.core.predictor import hybrid_predict
-            computed = hybrid_predict(
+            # ONE predictor pass on the *true* preacts (conv already
+            # computed — conv layers always evaluate exact-style)
+            computed = plan.predict(
                 _im2col(x, lp["w"].shape[0], strides[i]),
-                _wmat(lp["w"])[:, m["perm"]], m,
+                _wmat(lp["w"])[:, m["perm"]],
                 preact_full=pre_flat[:, m["perm"]],
-                residual=None if res_flat is None else res_flat[:, m["perm"]])
+                residual=None if res_flat is None else res_flat[:, m["perm"]],
+            ).computed
             relu_flat = relu_in.reshape(-1, C)[:, m["perm"]]
             y = jnp.where(computed, jax.nn.relu(relu_flat), 0.0)
             inv = m["inv_perm"]

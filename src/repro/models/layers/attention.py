@@ -269,6 +269,30 @@ def gqa_decode(params, cfg: ModelConfig, x, cache, pos):
     return y, {"k": ck, "v": cv, "pos": cp}
 
 
+def gqa_prefill(params, cfg: ModelConfig, x, cache):
+    """Batched prefill: consume the whole (B, S, d) prompt in one step,
+    attending within the prompt (forward-style causal attention) while
+    writing all S kv rows into the FRESH decode cache at once.  Replaces
+    S single-token decode dispatches with one compiled step.
+
+    Assumes the cache is empty (pos == 0) and S fits the ring buffer
+    (S <= cache length); ``launch.steps.make_prefill_step`` falls back to
+    a scanned decode when that doesn't hold."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(params, cfg, x)
+    pvec = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    q = apply_rope(q, pvec, cfg.rope_theta)
+    k = apply_rope(k, pvec, cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=1)
+    cp = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.arange(S, dtype=jnp.int32), 0, axis=0)
+    pos1 = jnp.arange(S, dtype=jnp.int32)
+    o = attend(q, k, v, pos1, pos1, causal=True, window=cfg.sliding_window)
+    y = o.reshape(B, S, -1) @ params["wo"].astype(x.dtype)
+    return y, {"k": ck, "v": cv, "pos": cp}
+
+
 # ===========================================================================
 # MLA (DeepSeek-V2): low-rank joint kv compression + decoupled RoPE head
 # ===========================================================================
@@ -338,6 +362,30 @@ def mla_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype):
         "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
         "k_pe": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
     }
+
+
+def mla_prefill(params, cfg: ModelConfig, x, cache):
+    """Batched MLA prefill: run the expanded (forward-style) attention
+    over the whole prompt while writing the latent kv cache rows [0, S)
+    in one shot.  Assumes a fresh cache (pos == 0)."""
+    B, S, _ = x.shape
+    h = cfg.n_heads
+    nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    dt = x.dtype
+    pvec = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    q_nope, q_pe = _mla_q(params, cfg, x, pvec)
+    c_kv, k_pe = _mla_kv_compress(params, cfg, x, pvec)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv, 0, axis=1)
+    cp = jax.lax.dynamic_update_slice_in_dim(cache["k_pe"], k_pe, 0, axis=1)
+    k_nope = (c_kv @ params["wk_b"].astype(dt)).reshape(B, S, h, nd)
+    v = (c_kv @ params["wv_b"].astype(dt)).reshape(B, S, h, vd)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (B, S, h, rd))], -1)
+    q_full = jnp.concatenate([q_nope, q_pe], -1)
+    pos1 = jnp.arange(S, dtype=jnp.int32)
+    o = attend(q_full, k_full, v, pos1, pos1, causal=True, window=0)
+    y = o.reshape(B, S, h * vd) @ params["wo"].astype(dt)
+    return y, {"c_kv": ck, "k_pe": cp}
 
 
 def mla_decode(params, cfg: ModelConfig, x, cache, pos):

@@ -81,20 +81,18 @@ def mlp_apply(params: Dict, cfg: ModelConfig, x, *,
     x2 = x.reshape(-1, x.shape[-1])
     stats: Dict = {}
 
-    use_mor = (mor is not None and mor_mode != "dense"
-               and act_name in ("relu", "relu2", "relu_glu"))
+    from repro.core.executor import as_plan
+    plan = as_plan(mor, mode=mor_mode, tile_m=cfg.mor.tile_m,
+                   tile_n=cfg.mor.tile_n, capacity_frac=cfg.mor.capacity)
+    use_mor = plan.active and act_name in ("relu", "relu2", "relu_glu")
     if use_mor:
-        from repro.core.masked_ffn import mor_ffn_apply
         base = "relu" if act_name == "relu_glu" else act_name
-        y, stats = mor_ffn_apply(
+        y, stats = plan.ffn(
             x2,
             params["w_up"].astype(dt),
             params["w_down"].astype(dt),
-            mor,
             activation=base,
-            mode=mor_mode,
             w_gate=params.get("w_gate", None) if is_glu(act_name) else None,
-            tile_m=cfg.mor.tile_m, tile_n=cfg.mor.tile_n,
         )
         return y.reshape(*lead, -1).astype(dt), stats
 

@@ -226,15 +226,19 @@ def moe_apply(params: Dict, cfg: ModelConfig, x, *,
         g_pre = jnp.einsum("ecd,edf->ecf", eb, params["w_gate"].astype(dt))
         if (mor is not None and mor_mode != "dense"
                 and "experts" in (mor or {})):
-            # expert-level MoR (exact mode): the hybrid predictor runs
-            # per expert on its routed token buffer (vmapped over E);
-            # the router itself already acts as the coarse zero
-            # predictor for the (E - top_k) unrouted experts.
-            from repro.core.predictor import hybrid_predict
+            # expert-level MoR (exact mode): ONE vmapped predictor pass
+            # per expert over its routed token buffer; the router itself
+            # already acts as the coarse zero predictor for the
+            # (E - top_k) unrouted experts.
+            from repro.core.executor import MoRExecutionPlan, as_plan
             em = mor["experts"]
+            if isinstance(em, MoRExecutionPlan):
+                em = em.mor
 
             def one(eb_e, w_e, pre_e, m_e):
-                return hybrid_predict(eb_e, w_e, m_e, preact_full=pre_e)
+                plan = as_plan(m_e, mode="exact", tile_m=cfg.mor.tile_m,
+                               tile_n=cfg.mor.tile_n)
+                return plan.predict(eb_e, w_e, preact_full=pre_e).computed
 
             computed = jax.vmap(one)(eb, params["w_gate"].astype(dt),
                                      g_pre, em)

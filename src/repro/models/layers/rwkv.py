@@ -226,13 +226,14 @@ def chanmix_forward(params: Dict, cfg: ModelConfig, x, x_prev, *,
     xr = _mix(x, x_prev, mu[1])
     gate = jax.nn.sigmoid((xr @ params["Wr"].astype(dt)).astype(jnp.float32))
     stats: Dict = {}
-    if mor is not None and mor_mode != "dense":
-        from repro.core.masked_ffn import mor_relu_matmul
+    from repro.core.executor import as_plan
+    plan = as_plan(mor, mode=mor_mode, tile_m=cfg.mor.tile_m,
+                   tile_n=cfg.mor.tile_n, capacity_frac=cfg.mor.capacity)
+    if plan.active:
         lead = xk.shape[:-1]
-        h, stats = mor_relu_matmul(
-            xk.reshape(-1, xk.shape[-1]), params["w_up"].astype(dt), mor,
-            activation="relu2", mode=mor_mode,
-            tile_m=cfg.mor.tile_m, tile_n=cfg.mor.tile_n)
+        h, stats = plan.relu_matmul(
+            xk.reshape(-1, xk.shape[-1]), params["w_up"].astype(dt),
+            activation="relu2")
         h = h.reshape(*lead, -1)
     else:
         h = jnp.square(jax.nn.relu(xk @ params["w_up"].astype(dt)))

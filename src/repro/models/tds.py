@@ -70,13 +70,14 @@ def forward(params: Dict, cfg: ModelConfig, batch: Dict, *,
         x = apply_norm("layernorm", lp["ln1"], x + jax.nn.relu(pre))
         # --- FC sub-block ---
         if mor is not None and mor_mode != "dense" and mor[i] is not None:
-            from repro.core.masked_ffn import mor_relu_matmul
-            m = mor[i]
+            from repro.core.executor import as_plan
+            plan = as_plan(mor[i], mode=mor_mode, tile_m=cfg.mor.tile_m,
+                           tile_n=cfg.mor.tile_n,
+                           capacity_frac=cfg.mor.capacity)
+            m = plan.mor
             x2 = x.reshape(-1, x.shape[-1])
-            h, st = mor_relu_matmul(x2, lp["fc1"][:, m["perm"]], m,
-                                    activation="relu", mode=mor_mode,
-                                    tile_m=cfg.mor.tile_m,
-                                    tile_n=cfg.mor.tile_n)
+            h, st = plan.relu_matmul(x2, lp["fc1"][:, m["perm"]],
+                                     activation="relu")
             mstats.append(st)
             fc = (h @ lp["fc2"][m["perm"], :]).reshape(x.shape)
         else:

@@ -167,6 +167,74 @@ def forward(params: Dict, cfg: ModelConfig, batch: Dict, *,
 
 
 # --------------------------------------------------------------------------
+# batched prefill: whole prompt in ONE step, writing the decode cache
+# --------------------------------------------------------------------------
+
+def _block_prefill(lp, cfg: ModelConfig, x, c, kind, mor_layer, mor_mode):
+    # same sharding constraints as _block_apply: prefill is the large-S
+    # serving dispatch, exactly where GSPMD needs the layout hints
+    h = constrain(apply_norm(cfg.norm, lp["ln1"], x), "attn_in")
+    if cfg.mla:
+        a, c_new = attn.mla_prefill(lp["attn"], cfg, h, c)
+    else:
+        a, c_new = attn.gqa_prefill(lp["attn"], cfg, h, c)
+    x = constrain(x + a, "residual")
+    h2 = apply_norm(cfg.norm, lp["ln2"], x)
+    if kind == "moe":
+        f, _ = moe_apply(lp["moe"], cfg, h2, mor=mor_layer, mor_mode=mor_mode)
+    else:
+        f, _ = mlp_apply(lp["mlp"], cfg, h2, mor=mor_layer, mor_mode=mor_mode)
+    return constrain(x + f, "residual"), c_new
+
+
+def prefill(params: Dict, cfg: ModelConfig, tokens, cache: Dict, *,
+            mor: Optional[Dict] = None, mor_mode: str = "dense",
+            ) -> Tuple[jnp.ndarray, Dict]:
+    """tokens: (B, S) prompt -> (last-position logits (B, V), cache).
+
+    One compiled step consumes the entire prompt: forward-style causal
+    attention over the batch while every layer writes its S kv rows into
+    the decode cache in one dynamic-update (vs. S Python-dispatched
+    decode steps).  The MoR predictor runs once per layer over all S
+    positions, so serving throughput reflects the predictor's benefit
+    rather than dispatch overhead.  Requires a fresh cache (pos == 0)
+    and S <= the KV ring-buffer length."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    x = constrain(x, "residual")
+
+    def run_stack(x, stacked, caches, kind, mor_stack):
+        def body(carry, xs):
+            y, c_new = _block_prefill(xs["lp"], cfg, carry, xs["c"], kind,
+                                      xs.get("mor"), mor_mode)
+            return y, c_new
+        xs = {"lp": stacked, "c": caches}
+        if mor_stack is not None:
+            xs["mor"] = mor_stack
+        return jax.lax.scan(body, x, xs)
+
+    new_cache: Dict[str, Any] = {"pos": cache["pos"] + S}
+    if cfg.family == "moe":
+        if cfg.first_k_dense:
+            x, nc = run_stack(x, params["dense_layers"],
+                              cache["dense_layers"], "dense",
+                              None if mor is None else mor.get("dense_layers"))
+            new_cache["dense_layers"] = nc
+        x, nc = run_stack(x, params["moe_layers"], cache["moe_layers"],
+                          "moe", None if mor is None else mor.get("moe_layers"))
+        new_cache["moe_layers"] = nc
+    else:
+        x, nc = run_stack(x, params["layers"], cache["layers"], "dense",
+                          None if mor is None else mor.get("layers"))
+        new_cache["layers"] = nc
+
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x[:, -1, :] @ head.astype(x.dtype)
+    return logits, new_cache
+
+
+# --------------------------------------------------------------------------
 # decode
 # --------------------------------------------------------------------------
 

@@ -1,6 +1,9 @@
 """Streaming regression calibration tests (paper §3.2.1)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core.calibration import (finalize_regression, init_accumulator,

@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) on the system's invariants."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 from hypothesis.extra import numpy as hnp
 
