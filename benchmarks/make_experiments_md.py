@@ -160,6 +160,75 @@ behaves exactly like the paper's Fig. 6/9.
 """
 
 
+def serving_section(path: str = "BENCH_serve.json") -> str:
+    """§Serving: the mixed-length-workload rows from the continuous-
+    batching engine benchmark (benchmarks/run.py --scenario serve-engine)."""
+    if not os.path.exists(path):
+        return ""
+    data = json.load(open(path))
+    tr = data["trace"]
+    rows = []
+    for mode, r in data["modes"].items():
+        extra = []
+        if "engine_speedup_vs_static" in r:
+            extra.append(f"{r['engine_speedup_vs_static']:.2f}x vs static "
+                         f"batch ({r['static_batch_tokens_per_s']:.0f})")
+        if "token_agreement_vs_dense" in r:
+            extra.append(f"agreement {r['token_agreement_vs_dense']:.3f}")
+        if "calibrated_tokens_per_s" in r:
+            extra.append(f"capacity-calibrated "
+                         f"{r['calibrated_tokens_per_s']:.0f} tok/s")
+        rows.append(f"| {mode} | {r['tokens_per_s']:.0f} | "
+                    f"{r['decode_tokens_per_s']:.0f} | "
+                    f"{'; '.join(extra) or '-'} |")
+    gmin = tr.get("gen_min", tr["gen_len"])
+    arch = tr.get("arch", "granite-3-2b (reduced)")
+    quantile = tr.get("quantile", 0.95)
+    d256_note = ""
+    if tr.get("compute_scale") or any("@d256" in m for m in data["modes"]):
+        d256_note = """\
+at toy dims (d=128, L=2, sub-ms dispatches) Python dispatch overhead
+dominates and the two paths are near parity; the `dense@d256` row
+(d_model=256, d_ff=1024, L=4) is the smallest compute-dominated scale,
+where continuous batching wins outright and the margin grows with model
+size."""
+    else:
+        d256_note = """\
+at these reduced dims Python dispatch overhead dominates; run without
+--no-compute-scale for the compute-dominated d256 comparison row."""
+    return f"""\
+## §Serving (continuous-batching engine, mixed-length workload)
+
+`repro.serving.Engine` on a fixed mixed trace — heterogeneous on BOTH
+axes: {tr['n_requests']} requests, prompts
+{tr['prompt_min']}-{tr['prompt_max']} tokens and generations
+{gmin}-{tr['gen_len']} tokens (log-uniform), {tr['n_slots']} slots,
+chunk {tr.get('chunk', '-')}; {arch} on this CPU
+container (kernel mode runs the Pallas bodies in interpret mode, so its
+wall clock is a correctness datapoint, not a speed one).  Chunked
+prefill mixes into decode dispatches, finished sequences are evicted
+and slots recycled mid-flight, and the hot loop is fully device-
+resident (sampled tokens + telemetry are fetched once at flush — the
+scheduler is count-based).  Timing is best-of-3 after a compile warmup
+for BOTH the engine and the static baseline.  Per-layer gather
+capacities are provisioned at the q={quantile} observed tile-liveness
+quantile (`per_layer_capacity` in the serve report).
+
+| config | tok/s (total) | tok/s (decode) | notes |
+|---|---|---|---|
+{chr(10).join(rows)}
+
+The static baseline pads every prompt to the trace max and convoys each
+group to its longest generation, but runs one big batched-prefill
+dispatch per group — {d256_note}
+
+Reproduce: `PYTHONPATH=src python -m benchmarks.run --scenario
+serve-engine` (writes BENCH_serve.json; the CI `serve-engine-smoke` job
+runs it reduced-size on every push).
+
+"""
+
+
 def main():
     bench = {}
     if os.path.exists("experiments/bench_results.json"):
@@ -226,7 +295,7 @@ Dominant-bottleneck notes (one line per arch, train_4k):
 
 """
     with open("EXPERIMENTS.md", "w") as f:
-        f.write(header + dry + PERF_LOG)
+        f.write(header + dry + serving_section() + PERF_LOG)
     print("wrote EXPERIMENTS.md")
 
 

@@ -1,8 +1,16 @@
 """Benchmark harness: one entry per paper table/figure + the roofline
 aggregation.  Prints ``name,us_per_call,derived`` CSV (timing = wall time
-of the reproduction; derived = the figure's headline number)."""
+of the reproduction; derived = the figure's headline number).
+
+``--scenario serve-engine`` instead benchmarks the continuous-batching
+serving engine on a fixed mixed prompt-length trace (dense vs tiled vs
+kernel execution, engine vs static-batch), emitting ``BENCH_serve.json``
+— the CI smoke job runs it reduced-size."""
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 import time
 
@@ -16,7 +24,92 @@ def _run(name, fn):
             "detail": detail}
 
 
+QUANTILE = 0.95     # tile-liveness quantile for capacity calibration
+
+
+def scenario_serve_engine(modes=("dense", "tiled", "kernel"),
+                          n_requests: int = 16, prompt_min: int = 8,
+                          prompt_max: int = 96, gen_min: int = 4,
+                          gen_len: int = 96, n_slots: int = 4,
+                          chunk: int = 16, compute_scale: bool = True,
+                          out: str = "BENCH_serve.json") -> dict:
+    """Fixed mixed-length trace (heterogeneous prompts AND generation
+    lengths) through the serving engine, per mode, plus the static-batch
+    baseline for the tiled mode.  ``compute_scale`` adds one row at
+    d_model=256/d_ff=1024/L=4 — the scale where per-dispatch compute
+    dominates Python dispatch overhead, i.e. what the engine-vs-static
+    comparison looks like off the toy config."""
+    from repro.launch.serve import main as serve_main
+
+    def run_mode(mode, extra, label):
+        argv = ["--arch", "granite-3-2b", "--reduced",
+                "--batch", str(n_slots), "--requests", str(n_requests),
+                "--prompt-min", str(prompt_min),
+                "--prompt-max", str(prompt_max),
+                "--gen-min", str(gen_min),
+                "--gen-len", str(gen_len), "--chunk", str(chunk),
+                "--mor", mode, "--calib-steps", "2"] + extra
+        rep = serve_main(argv)
+        row = {
+            "tokens_per_s": rep["tokens_per_s"],
+            "decode_tokens_per_s": rep["decode_tokens_per_s"],
+            "requests": rep["requests_finished"],
+            "dispatches": rep["dispatches"],
+        }
+        for k in ("static_batch_tokens_per_s", "engine_speedup_vs_static",
+                  "token_agreement_vs_dense", "per_layer_capacity",
+                  "calibrated_tokens_per_s", "per_layer_frac_tiles_live"):
+            if k in rep:
+                row[k] = rep[k]
+        print(f"serve_engine_{label},0,{rep['tokens_per_s']:.1f}",
+              flush=True)
+        return row
+
+    rows = {}
+    for mode in modes:
+        extra = []
+        if mode != "dense":
+            extra += ["--calibrate-capacity", str(QUANTILE)]
+        if mode == "tiled":
+            extra += ["--baseline", "--compare"]
+        rows[mode] = run_mode(mode, extra, mode)
+    if compute_scale:
+        rows["dense@d256"] = run_mode(
+            "dense", ["--dims", "256,1024,4", "--chunk", "32",
+                      "--baseline"], "dense_d256")
+    result = {"trace": {"n_requests": n_requests, "prompt_min": prompt_min,
+                        "prompt_max": prompt_max, "gen_min": gen_min,
+                        "gen_len": gen_len, "n_slots": n_slots,
+                        "chunk": chunk, "arch": "granite-3-2b (reduced)",
+                        "quantile": QUANTILE,
+                        "compute_scale": compute_scale},
+              "modes": rows}
+    with open(out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"wrote {out}")
+    return result
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", default="figures",
+                    choices=("figures", "serve-engine"))
+    ap.add_argument("--modes", default="dense,tiled,kernel")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-max", type=int, default=96)
+    ap.add_argument("--gen-len", type=int, default=96)
+    ap.add_argument("--no-compute-scale", action="store_true",
+                    help="skip the d256 compute-dominated row (CI smoke)")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    if args.scenario == "serve-engine":
+        scenario_serve_engine(modes=tuple(args.modes.split(",")),
+                              n_requests=args.requests,
+                              prompt_max=args.prompt_max,
+                              gen_len=args.gen_len,
+                              compute_scale=not args.no_compute_scale,
+                              out=args.out)
+        return
     from benchmarks import figures
     results = []
     results.append(_run("fig1_negative_relu_input_fraction",

@@ -110,6 +110,10 @@ class ModelConfig:
     param_layout: str = "fsdp_tp"   # "contract_tp" | "fsdp_tp"
     flash_threshold: int = 4096     # kv length above which attention chunks
 
+    # --- serving (repro.serving continuous-batching engine) ---
+    serve_chunk: int = 32           # chunked-prefill chunk length; also the
+                                    # kv ring-buffer margin above the window
+
     # --- numerics / training ---
     dtype: str = "bfloat16"
     # params live in bf16 (compute copy); the fp32 master lives in the
@@ -328,4 +332,5 @@ def reduce_config(cfg: ModelConfig) -> ModelConfig:
     if cfg.family == "tds":
         kw = dict(n_layers=2, d_model=64, d_ff=128, vocab_size=64,
                   dtype="float32", remat="none")
+    kw.setdefault("serve_chunk", 8)
     return cfg.replace(**kw)

@@ -28,7 +28,8 @@ def _stack_mor(layers: List[Dict]) -> Dict:
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers)
 
 
-def attach_plans(mor, cfg: ModelConfig, mode: str):
+def attach_plans(mor, cfg: ModelConfig, mode: str,
+                 capacities: Optional[Dict] = None):
     """Wrap calibrated MoR layers in per-layer execution plans.
 
     Replaces the old convention of threading bare ``(mor, mode, tile_m,
@@ -36,17 +37,31 @@ def attach_plans(mor, cfg: ModelConfig, mode: str):
     tile geometry, and gather_matmul capacity from ``cfg.mor`` once, and
     the runtime (``masked_ffn`` / ``executor``) consumes it as-is.
 
+    ``capacities`` (optional, {layer group -> (L,) fractions or scalar})
+    attaches PER-LAYER calibrated gather_matmul capacities as the plan's
+    traced ``cap_live`` leaf (``serving.telemetry.calibrate_capacity``'s
+    output): a stacked plan rides through ``lax.scan`` with one static
+    provisioning while every layer clamps to its own observed budget.
+
     Accepts the shapes the calibrators emit — a dict of stacked layer
     pytrees (``calibrate_lm``: plans ride through ``lax.scan`` because
     MoRExecutionPlan is a registered pytree with static aux config) or a
     list of per-layer MoRLayers (``calibrate_cnn`` / ``calibrate_tds``).
     """
-    def wrap(layer):
+    def wrap(layer, caps=None):
         if layer is None:
             return None
+        cap_live = None
+        if caps is not None:
+            cap_live = jnp.asarray(caps, jnp.float32)
+            if cap_live.ndim > 0 and layer["m"].ndim == 1:
+                # a single shared layer (hybrid) observed at several
+                # call sites: provision for the worst of them
+                cap_live = cap_live.max()
         return MoRExecutionPlan(layer, mode=mode, tile_m=cfg.mor.tile_m,
                                 tile_n=cfg.mor.tile_n,
-                                capacity_frac=cfg.mor.capacity)
+                                capacity_frac=cfg.mor.capacity,
+                                cap_live=cap_live)
 
     if mor is None or mode == "dense":
         return mor
@@ -55,8 +70,15 @@ def attach_plans(mor, cfg: ModelConfig, mode: str):
     if isinstance(mor, list):
         return [wrap(m) for m in mor]
     if isinstance(mor, dict) and "enable" not in mor:
-        return {k: wrap(v) for k, v in mor.items()}
-    return wrap(mor)
+        caps = capacities or {}
+        return {k: wrap(v, caps.get(k)) for k, v in mor.items()}
+    # bare single layer: only an unambiguous capacity spec is accepted
+    caps = capacities
+    if isinstance(caps, dict):
+        assert len(caps) <= 1, \
+            f"ambiguous capacities for a single MoR layer: {sorted(caps)}"
+        caps = next(iter(caps.values())) if caps else None
+    return wrap(mor, caps)
 
 
 def calibrate_lm(params: Dict, cfg: ModelConfig, forward: Callable,

@@ -56,6 +56,7 @@ def _dense_stats() -> Dict[str, jax.Array]:
     z = jnp.zeros((), jnp.float32)
     return {"frac_computed": jnp.ones((), jnp.float32),
             "frac_tiles_live": jnp.ones((), jnp.float32),
+            "frac_tiles_computed": jnp.ones((), jnp.float32),
             "frac_mispredicted_zero": z}
 
 
@@ -66,21 +67,34 @@ class MoRPrediction:
     fused kernel reduces straight to tiles without materialising it).
     ``tiles``: (T/tile_m, N/tile_n) bool tile-liveness mask.
     ``kept``: tiles actually computed under the capacity budget (equals
-    ``tiles`` when capacity covers every live tile)."""
+    ``tiles`` when capacity covers every live tile).
+    ``kernel_counts``: (n_live, n_computed) tile counters reported by
+    ``gather_matmul`` itself in kernel mode — the authoritative source
+    for the serving telemetry's realised-skip stats on that path."""
 
-    __slots__ = ("computed", "tiles", "kept")
+    __slots__ = ("computed", "tiles", "kept", "kernel_counts")
 
     def __init__(self, computed: Optional[jax.Array], tiles: jax.Array,
                  kept: Optional[jax.Array] = None):
         self.computed = computed
         self.tiles = tiles
         self.kept = tiles if kept is None else kept
+        self.kernel_counts = None
 
     def keep_mask(self, T: int, N: int, tile_m: int, tile_n: int):
         return expand_tile_mask(self.kept, tile_m, tile_n, T, N)
 
     def stats(self) -> Dict[str, jax.Array]:
-        tiles_live = self.tiles.mean(dtype=jnp.float32)
+        n_tiles = float(self.tiles.size)
+        if self.kernel_counts is not None:
+            n_live, n_comp = self.kernel_counts
+            tiles_live = n_live.astype(jnp.float32) / n_tiles
+            tiles_computed = n_comp.astype(jnp.float32) / n_tiles
+        else:
+            tiles_live = self.tiles.mean(dtype=jnp.float32)
+            # realised compute after the capacity clamp — the number the
+            # serving telemetry compares against the demand
+            tiles_computed = self.kept.mean(dtype=jnp.float32)
         if self.computed is not None:
             frac_computed = self.computed.mean(dtype=jnp.float32)
         else:
@@ -89,6 +103,7 @@ class MoRPrediction:
             frac_computed = tiles_live
         return {"frac_computed": frac_computed,
                 "frac_tiles_live": tiles_live,
+                "frac_tiles_computed": tiles_computed,
                 "frac_mispredicted_zero": jnp.zeros((), jnp.float32)}
 
 
@@ -97,14 +112,22 @@ class MoRExecutionPlan:
     """Per-layer, compile-once MoR execution plan.
 
     Pytree contract: ``mor`` (a MoRLayer dict pytree, possibly stacked
-    over layers, possibly None) is the sole child; ``mode``/``tile_m``/
-    ``tile_n``/``capacity_frac`` are static aux data, so plans survive
-    ``tree_map``, ``lax.scan`` slicing, and jit boundaries unchanged.
+    over layers, possibly None) and ``cap_live`` (optional TRACED
+    per-layer capacity fraction, possibly (L,)-stacked) are the
+    children; ``mode``/``tile_m``/``tile_n``/``capacity_frac`` are
+    static aux data, so plans survive ``tree_map``, ``lax.scan``
+    slicing, and jit boundaries unchanged.
+
+    ``capacity_frac`` (static) provisions the gather_matmul slot list —
+    one compiled body for a whole layer scan.  ``cap_live`` (traced) is
+    the telemetry-calibrated PER-LAYER budget clamped under it
+    (``serving.telemetry.calibrate_capacity``): updating its values
+    re-provisions every layer without recompiling the serving step.
     """
 
     def __init__(self, mor: Optional[MoRLayer], *, mode: str = "dense",
                  tile_m: int = 8, tile_n: int = 128,
-                 capacity_frac: float = 1.0):
+                 capacity_frac: float = 1.0, cap_live=None):
         if mode not in MODES:
             raise ValueError(f"unknown MoR mode {mode!r}")
         self.mor = mor
@@ -112,22 +135,24 @@ class MoRExecutionPlan:
         self.tile_m = tile_m
         self.tile_n = tile_n
         self.capacity_frac = capacity_frac
+        self.cap_live = cap_live
 
     # -- pytree plumbing ---------------------------------------------------
     def tree_flatten(self):
-        return (self.mor,), (self.mode, self.tile_m, self.tile_n,
-                             self.capacity_frac)
+        return (self.mor, self.cap_live), (self.mode, self.tile_m,
+                                           self.tile_n, self.capacity_frac)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         mode, tile_m, tile_n, capacity_frac = aux
         return cls(children[0], mode=mode, tile_m=tile_m, tile_n=tile_n,
-                   capacity_frac=capacity_frac)
+                   capacity_frac=capacity_frac, cap_live=children[1])
 
     def __repr__(self):
         return (f"MoRExecutionPlan(mode={self.mode!r}, tile_m={self.tile_m},"
                 f" tile_n={self.tile_n}, capacity_frac={self.capacity_frac},"
-                f" calibrated={self.mor is not None})")
+                f" calibrated={self.mor is not None},"
+                f" per_layer_capacity={self.cap_live is not None})")
 
     # -- predicates --------------------------------------------------------
     @property
@@ -148,7 +173,7 @@ class MoRExecutionPlan:
         """
         assert self.active, "predict() on an inactive plan"
         mor = self.mor
-        if self.mode == "kernel" and preact_full is None and residual is None:
+        if self.mode == "kernel" and preact_full is None:
             from repro.kernels import ops as kops
             # proxy rookie at base precision (only the unique proxy
             # columns are touched; they live in the always-computed
@@ -160,12 +185,16 @@ class MoRExecutionPlan:
                 preferred_element_type=jnp.float32)
             proxy_relu_in = (proxy_pre * mor["bn_scale"][slot]
                              + mor["bn_bias"][slot])
+            if residual is not None:
+                proxy_relu_in = proxy_relu_in + jnp.take(
+                    residual.astype(jnp.float32), slot, axis=-1)
             proxy_neg = (proxy_relu_in < 0.0) | (mor["proxy_slot"] < 0)
             # proxies themselves are always computed: fold ~is_proxy into
             # the kernel's enable row
             mor_eff = dict(mor)
             mor_eff["enable"] = mor["enable"] & ~mor["is_proxy"]
             tiles = kops.mor_tile_mask(x, w, mor_eff, proxy_neg,
+                                       residual=residual,
                                        tile_m=self.tile_m, tile_n=self.tile_n)
             return MoRPrediction(None, tiles,
                                  kept=self._capacity_clip(tiles))
@@ -173,16 +202,25 @@ class MoRExecutionPlan:
                                   residual=residual)
         tiles = tile_mask_from_neuron_mask(
             computed.reshape(-1, computed.shape[-1]), self.tile_m, self.tile_n)
-        kept = self._capacity_clip(tiles) if self.mode == "kernel" else None
+        kept = (self._capacity_clip(tiles)
+                if self.mode == "kernel" or self.cap_live is not None
+                else None)
         return MoRPrediction(computed, tiles, kept=kept)
 
     def _capacity_clip(self, tiles: jax.Array) -> jax.Array:
-        """Static-capacity truncation mirroring gather_matmul's slot list:
-        only the first ``capacity`` live tiles (row-major) are computed."""
-        if self.capacity_frac >= 1.0:
+        """Capacity truncation mirroring gather_matmul's slot list: only
+        the first ``capacity`` live tiles (row-major) are computed.  The
+        static ``capacity_frac`` provisions; the traced ``cap_live``
+        (per-layer calibrated fraction) clamps under it."""
+        if self.capacity_frac >= 1.0 and self.cap_live is None:
             return tiles
         n_tiles = tiles.shape[0] * tiles.shape[1]
-        capacity = max(1, int(self.capacity_frac * n_tiles))
+        capacity = jnp.asarray(max(1, int(self.capacity_frac * n_tiles)),
+                               jnp.int32)
+        if self.cap_live is not None:
+            capacity = jnp.minimum(capacity, jnp.maximum(1, jnp.ceil(
+                jnp.asarray(self.cap_live, jnp.float32) * n_tiles)
+            ).astype(jnp.int32))
         flat = tiles.reshape(-1)
         live_rank = jnp.cumsum(flat) - 1
         return (flat & (live_rank < capacity)).reshape(tiles.shape)
@@ -201,9 +239,12 @@ class MoRExecutionPlan:
             # zero internally (same capacity-clipped mask as pred.kept);
             # re-applying the keep mask here would be a redundant (T, N)
             # expansion + select on the serving hot path
-            pre = kops.gather_matmul(x, w, pred.tiles,
-                                     capacity_frac=self.capacity_frac,
-                                     tile_m=self.tile_m, tile_n=self.tile_n)
+            pre, n_live, n_comp = kops.gather_matmul(
+                x, w, pred.tiles, capacity_frac=self.capacity_frac,
+                capacity_frac_live=self.cap_live, tile_m=self.tile_m,
+                tile_n=self.tile_n, with_counts=True)
+            # the kernel's own tile counters feed the serving telemetry
+            pred.kernel_counts = (n_live, n_comp)
             return pre.astype(jnp.float32)
         pre = (x @ w).astype(jnp.float32)
         keep = pred.keep_mask(T, N, self.tile_m, self.tile_n)

@@ -46,12 +46,25 @@ def _kernel(meta_ref, x_ref, w_ref, o_ref, acc_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("tile_m", "tile_n", "bk",
-                                             "capacity", "interpret"))
+                                             "capacity", "interpret",
+                                             "return_counts"))
 def gather_matmul(x: jax.Array, w: jax.Array, tile_mask: jax.Array, *,
                   capacity: int, tile_m: int = 128, tile_n: int = 128,
-                  bk: int = 512, interpret: bool = False) -> jax.Array:
+                  bk: int = 512, cap_live=None, interpret: bool = False,
+                  return_counts: bool = False):
     """x: (M, K) @ w: (K, N); only the first ``capacity`` live tiles (in
-    row-major order) are computed.  Dead/overflow tiles are exact zeros."""
+    row-major order) are computed.  Dead/overflow tiles are exact zeros.
+
+    ``capacity`` is the STATIC slot provisioning (it sizes the grid, so
+    it bounds the DMA issue).  ``cap_live`` is an optional TRACED int32
+    budget clamped under it — the telemetry-calibrated per-layer
+    capacity: scan-stacked layers share one compiled body (one static
+    capacity) while each layer's realised compute is cut to its own
+    observed liveness quantile.
+
+    ``return_counts`` additionally returns (n_live_total, n_computed) —
+    the tile-liveness counters the executor stashes on its prediction
+    (``MoRPrediction.kernel_counts``) for the serving telemetry."""
     M, K = x.shape
     _, N = w.shape
     tile_m, bk, tile_n = min(tile_m, M), min(bk, K), min(tile_n, N)
@@ -65,7 +78,11 @@ def gather_matmul(x: jax.Array, w: jax.Array, tile_mask: jax.Array, *,
     # live tiles first (stable), then dead tiles (used for slot padding)
     order = jnp.argsort(~flat, stable=True).astype(jnp.int32)
     n_live_total = jnp.sum(flat).astype(jnp.int32)
-    n_live = jnp.minimum(n_live_total, capacity)
+    cap_eff = jnp.asarray(capacity, jnp.int32)
+    if cap_live is not None:
+        cap_eff = jnp.minimum(cap_eff, jnp.maximum(
+            jnp.asarray(cap_live, jnp.int32), 1))
+    n_live = jnp.minimum(n_live_total, cap_eff)
     # padded slots point at the first dead tile; if everything is live,
     # they point at live tiles already computed (harmless re-compute).
     first_dead = order[jnp.minimum(n_live_total, n_tiles - 1)]
@@ -99,6 +116,9 @@ def gather_matmul(x: jax.Array, w: jax.Array, tile_mask: jax.Array, *,
     # to zero with the (cheap, VPU) mask expansion.  jnp.where (a select)
     # is garbage-safe, unlike multiplying by 0.
     live_rank = jnp.cumsum(flat) - 1
-    kept = (flat & (live_rank < capacity)).reshape(nm, nn)
+    kept = (flat & (live_rank < cap_eff)).reshape(nm, nn)
     keep = jnp.repeat(jnp.repeat(kept, tile_m, 0), tile_n, 1)
-    return jnp.where(keep, out, jnp.zeros((), out.dtype))
+    out = jnp.where(keep, out, jnp.zeros((), out.dtype))
+    if return_counts:
+        return out, n_live_total, n_live
+    return out

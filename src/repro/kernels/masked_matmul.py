@@ -39,11 +39,16 @@ def _kernel(mask_ref, x_ref, w_ref, o_ref, acc_ref):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("tile_m", "tile_n", "bk", "interpret"))
+                   static_argnames=("tile_m", "tile_n", "bk", "interpret",
+                                    "return_counts"))
 def masked_matmul(x: jax.Array, w: jax.Array, tile_mask: jax.Array, *,
                   tile_m: int = 128, tile_n: int = 128, bk: int = 512,
-                  interpret: bool = False) -> jax.Array:
-    """x: (M, K) @ w: (K, N) with (M/tile_m, N/tile_n) bool tile mask."""
+                  interpret: bool = False, return_counts: bool = False):
+    """x: (M, K) @ w: (K, N) with (M/tile_m, N/tile_n) bool tile mask.
+
+    ``return_counts`` additionally returns the live-tile count — the
+    liveness counter for the compute-skip path (gather_matmul's
+    counters are the ones the executor wires into serving telemetry)."""
     M, K = x.shape
     _, N = w.shape
     tile_m, bk, tile_n = min(tile_m, M), min(bk, K), min(tile_n, N)
@@ -51,6 +56,10 @@ def masked_matmul(x: jax.Array, w: jax.Array, tile_mask: jax.Array, *,
     grid = (M // tile_m, N // tile_n, K // bk)
     assert tile_mask.shape == (grid[0], grid[1]), (tile_mask.shape, grid)
     mask_flat = tile_mask.reshape(-1).astype(jnp.int32)
+    if return_counts:
+        out = masked_matmul(x, w, tile_mask, tile_m=tile_m, tile_n=tile_n,
+                            bk=bk, interpret=interpret)
+        return out, jnp.sum(mask_flat)
     return pl.pallas_call(
         _kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(

@@ -1,10 +1,19 @@
 """Pallas TPU kernel: fused MoR tile-mask predictor.
 
 One pass over the activations produces the per-tile liveness mask:
-int8 sign matmul (binary rookie) -> fitted line + BN fold -> AND with the
-proxy rookie's verdict -> any() reduction over the tile.  The mask feeds
-``gather_matmul`` for the main matmul, so the predictor runs ahead of the
-heavy compute exactly like the paper's binCUs overlap the CUs (§4.1).
+int8 sign matmul (binary rookie) -> fitted line + BN fold (+ optional
+per-element residual input) -> AND with the proxy rookie's verdict ->
+any() reduction over the tile.  The mask feeds ``gather_matmul`` for the
+main matmul, so the predictor runs ahead of the heavy compute exactly
+like the paper's binCUs overlap the CUs (§4.1).
+
+The coef table carries SIX rows: [m, b, bn_scale, bn_bias, enable,
+res_scale].  Rows 0-4 are per-column; row 5 scales the (M, N)
+``residual`` tensor input (1.0 when a residual is attached, 0.0 rows
+make the input a no-op) — per-element residual inputs (paper §3.2.1:
+"the residual input is added") cannot ride in a per-column table, so
+they arrive as a second VMEM input with the same block tiling as the
+proxy verdicts.
 """
 from __future__ import annotations
 
@@ -17,8 +26,14 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import tpu_compiler_params
 
+N_COEF_ROWS = 6
 
-def _kernel(x_ref, w_ref, coef_ref, pn_ref, o_ref, acc_ref):
+
+def _kernel(has_res, x_ref, w_ref, coef_ref, pn_ref, *rest):
+    if has_res:
+        res_ref, o_ref, acc_ref = rest
+    else:
+        o_ref, acc_ref = rest
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -38,6 +53,8 @@ def _kernel(x_ref, w_ref, coef_ref, pn_ref, o_ref, acc_ref):
         sc, bi = coef_ref[2, :], coef_ref[3, :]
         en = coef_ref[4, :]
         p_hat = (m[None, :] * p_bin + b[None, :]) * sc[None, :] + bi[None, :]
+        if has_res:
+            p_hat = p_hat + coef_ref[5, :][None, :] * res_ref[...]
         pn = pn_ref[...]
         # pn: 0 = proxy predicted non-zero, 1 = proxy predicted zero,
         # 2 = padded row/col (forced skip, so padding never marks a tile
@@ -49,31 +66,41 @@ def _kernel(x_ref, w_ref, coef_ref, pn_ref, o_ref, acc_ref):
 @functools.partial(jax.jit, static_argnames=("tile_m", "tile_n", "bk",
                                              "interpret"))
 def mor_tile_mask(x: jax.Array, w: jax.Array, coef: jax.Array,
-                  proxy_neg: jax.Array, *, tile_m: int = 8,
+                  proxy_neg: jax.Array, residual=None, *, tile_m: int = 8,
                   tile_n: int = 128, bk: int = 512,
                   interpret: bool = False) -> jax.Array:
-    """x: (M, K); w: (K, N); coef: (5, N) float32 rows = [m, b, bn_scale,
-    bn_bias, enable]; proxy_neg: (M, N) int8 (0 = proxy predicted
-    non-zero, 1 = proxy predicted zero, 2 = padding: forced skip).
+    """x: (M, K); w: (K, N); coef: (6, N) float32 rows = [m, b, bn_scale,
+    bn_bias, enable, res_scale]; proxy_neg: (M, N) int8 (0 = proxy
+    predicted non-zero, 1 = proxy predicted zero, 2 = padding: forced
+    skip); residual: optional (M, N) float32 per-element ReLU-input
+    residual (scaled by coef row 5).
     -> (M/tile_m, N/tile_n) int32 tile liveness."""
     M, K = x.shape
     _, N = w.shape
     tile_m, bk, tile_n = min(tile_m, M), min(bk, K), min(tile_n, N)
     assert M % tile_m == 0 and K % bk == 0 and N % tile_n == 0
+    assert coef.shape[0] == N_COEF_ROWS
     grid = (M // tile_m, N // tile_n, K // bk)
+    has_res = residual is not None
+    in_specs = [
+        pl.BlockSpec((tile_m, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk, tile_n), lambda i, j, k: (k, j)),
+        pl.BlockSpec((N_COEF_ROWS, tile_n), lambda i, j, k: (0, j)),
+        pl.BlockSpec((tile_m, tile_n), lambda i, j, k: (i, j)),
+    ]
+    args = [x, w, coef, proxy_neg]
+    if has_res:
+        in_specs.append(pl.BlockSpec((tile_m, tile_n),
+                                     lambda i, j, k: (i, j)))
+        args.append(residual.astype(jnp.float32))
     return pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, has_res),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((tile_m, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, tile_n), lambda i, j, k: (k, j)),
-            pl.BlockSpec((5, tile_n), lambda i, j, k: (0, j)),
-            pl.BlockSpec((tile_m, tile_n), lambda i, j, k: (i, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((grid[0], grid[1]), jnp.int32),
         scratch_shapes=[pltpu.VMEM((tile_m, tile_n), jnp.int32)],
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(x, w, coef, proxy_neg)
+    )(*args)

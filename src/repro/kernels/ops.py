@@ -55,7 +55,8 @@ def binary_dot(x: jax.Array, w: jax.Array, *, bm: int = 128, bk: int = 512,
 
 def masked_matmul(x: jax.Array, w: jax.Array, tile_mask: jax.Array, *,
                   tile_m: int = 8, tile_n: int = 128,
-                  bk: int = 512) -> jax.Array:
+                  bk: int = 512, with_counts: bool = False):
+    """``with_counts`` also returns the live-tile count (telemetry)."""
     M, K = x.shape
     N = w.shape[1]
     bk_ = min(bk, K)
@@ -70,14 +71,23 @@ def masked_matmul(x: jax.Array, w: jax.Array, tile_mask: jax.Array, *,
         mask = jnp.pad(mask.astype(jnp.int32),
                        ((0, nm - mask.shape[0]), (0, nn - mask.shape[1])))
     out = _mm.masked_matmul(xp, wp, mask, tile_m=tile_m, tile_n=tile_n,
-                            bk=bk_, interpret=_interpret())
+                            bk=bk_, interpret=_interpret(),
+                            return_counts=with_counts)
+    if with_counts:
+        out, n_live = out
+        return out[:M, :N], n_live
     return out[:M, :N]
 
 
 def gather_matmul(x: jax.Array, w: jax.Array, tile_mask: jax.Array, *,
                   capacity: Optional[int] = None, capacity_frac: float = 1.0,
-                  tile_m: int = 8, tile_n: int = 128,
-                  bk: int = 512) -> jax.Array:
+                  capacity_frac_live=None, tile_m: int = 8, tile_n: int = 128,
+                  bk: int = 512, with_counts: bool = False):
+    """``capacity``/``capacity_frac`` provision the STATIC slot list;
+    ``capacity_frac_live`` (traced scalar fraction, e.g. the serving
+    telemetry's per-layer calibrated budget) clamps the realised live
+    count under it without recompiling.  ``with_counts`` also returns
+    (n_live_total, n_computed) tile counters."""
     M, K = x.shape
     N = w.shape[1]
     bk_ = min(bk, K)
@@ -94,8 +104,18 @@ def gather_matmul(x: jax.Array, w: jax.Array, tile_mask: jax.Array, *,
     if capacity is None:
         capacity = max(1, int(capacity_frac * nm * nn))
     capacity = min(capacity, nm * nn)
+    cap_live = None
+    if capacity_frac_live is not None:
+        cap_live = jnp.maximum(1, jnp.ceil(
+            jnp.asarray(capacity_frac_live, jnp.float32) * nm * nn)
+        ).astype(jnp.int32)
     out = _gm.gather_matmul(xp, wp, mask, capacity=capacity, tile_m=tile_m,
-                            tile_n=tile_n, bk=bk_, interpret=_interpret())
+                            tile_n=tile_n, bk=bk_, cap_live=cap_live,
+                            interpret=_interpret(),
+                            return_counts=with_counts)
+    if with_counts:
+        out, n_live, n_comp = out
+        return out[:M, :N], n_live, n_comp
     return out[:M, :N]
 
 
@@ -123,10 +143,13 @@ def masked_matmul_kdim(x: jax.Array, w: jax.Array, tile_mask: jax.Array, *,
 
 
 def mor_tile_mask(x: jax.Array, w_perm: jax.Array, mor, proxy_neg: jax.Array,
-                  *, tile_m: int = 8, tile_n: int = 128,
+                  *, residual=None, tile_m: int = 8, tile_n: int = 128,
                   bk: int = 512) -> jax.Array:
-    """Fused predictor: build the (5, N) coef table from a MoRLayer and
-    run the fused kernel.  proxy_neg: (M, N) bool.
+    """Fused predictor: build the (6, N) coef table from a MoRLayer and
+    run the fused kernel.  proxy_neg: (M, N) bool.  ``residual``:
+    optional (M, N) per-element ReLU-input residual — enabled through
+    the coef table's 6th row (res_scale = 1), so kernel-mode masks with
+    a residual input no longer fall back to the jnp predictor.
 
     Counts as ONE predictor evaluation (same counter as the jnp
     ``hybrid_predict`` oracle — the MoRExecutionPlan once-per-forward
@@ -135,8 +158,10 @@ def mor_tile_mask(x: jax.Array, w_perm: jax.Array, mor, proxy_neg: jax.Array,
     note_predictor_eval()
     M, K = x.shape
     N = w_perm.shape[1]
+    res_row = (jnp.ones((N,), jnp.float32) if residual is not None
+               else jnp.zeros((N,), jnp.float32))
     coef = jnp.stack([mor["m"], mor["b"], mor["bn_scale"], mor["bn_bias"],
-                      mor["enable"].astype(jnp.float32)], 0)
+                      mor["enable"].astype(jnp.float32), res_row], 0)
     bk_ = min(bk, K)
     if K % bk_ != 0:
         bk_ = K
@@ -154,6 +179,10 @@ def mor_tile_mask(x: jax.Array, w_perm: jax.Array, mor, proxy_neg: jax.Array,
     # kernel's forced-skip sentinel
     pn = jnp.pad(proxy_neg.astype(jnp.int8),
                  ((0, xp.shape[0] - M), (0, n_pad)), constant_values=2)
-    mask = _mp.mor_tile_mask(xp, wp, coef, pn, tile_m=tile_m, tile_n=tile_n,
-                             bk=bk_, interpret=_interpret())
+    res = None
+    if residual is not None:
+        res = jnp.pad(residual.astype(jnp.float32),
+                      ((0, xp.shape[0] - M), (0, n_pad)))
+    mask = _mp.mor_tile_mask(xp, wp, coef, pn, res, tile_m=tile_m,
+                             tile_n=tile_n, bk=bk_, interpret=_interpret())
     return mask.astype(bool)

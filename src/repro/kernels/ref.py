@@ -55,15 +55,19 @@ def masked_matmul_kdim_ref(x: jax.Array, w: jax.Array,
 def mor_tile_mask_ref(x: jax.Array, w: jax.Array, m: jax.Array,
                       b: jax.Array, bn_scale: jax.Array, bn_bias: jax.Array,
                       enable: jax.Array, proxy_neg: jax.Array,
-                      tile_m: int, tile_n: int) -> jax.Array:
-    """Oracle for the fused predictor kernel: binary rookie line + BN fold,
-    AND with the proxy rookie, reduce to a tile-liveness mask.
+                      tile_m: int, tile_n: int,
+                      residual=None) -> jax.Array:
+    """Oracle for the fused predictor kernel: binary rookie line + BN fold
+    (+ optional per-element residual input), AND with the proxy rookie,
+    reduce to a tile-liveness mask.
 
     proxy_neg: (M, N) bool — True where the neuron's proxy predicted zero
     (for proxies themselves this is False: they are always computed).
     -> (ceil(M/tile_m), ceil(N/tile_n)) bool."""
     p_bin = binary_dot_ref(x, w)
     p_hat = (m * p_bin + b) * bn_scale + bn_bias
+    if residual is not None:
+        p_hat = p_hat + residual
     skip = (p_hat < 0.0) & enable & proxy_neg
     computed = ~skip
     M, N = computed.shape

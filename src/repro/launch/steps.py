@@ -98,40 +98,76 @@ def make_prefill(cfg: ModelConfig, mor=None, mor_mode: str = "dense"
     return prefill
 
 
-def make_prefill_step(cfg: ModelConfig, mor=None, mor_mode: str = "dense"
-                      ) -> Callable:
+def make_prefill_step(cfg: ModelConfig, mor=None, mor_mode: str = "dense",
+                      chunk: int = 0) -> Callable:
     """prefill_step(params, cache, prompts (B, P)) -> (next_tokens (B,),
-    cache): the ENTIRE prompt in one jitted call.
+    cache) on the serving slot-pool cache (``serving.kv_pool.init``).
 
-    Transformer families run a true batched prefill (parallel causal
-    attention + one cache write per layer).  Recurrent families (ssm /
-    hybrid) and prompts longer than the KV ring buffer fall back to a
-    ``lax.scan`` over the single-token decode step — still one compiled
-    step, so the per-token Python dispatch of the old serve loop is gone
-    either way."""
+    Transformer families whose prompt fits the kv ring run ONE batched
+    dispatch (``api.prefill``).  Recurrent families (ssm / hybrid) and
+    prompts longer than the sliding-window ring run CHUNKED prefill —
+    state-carrying fixed-shape (B, C) dispatches of ``api.prefill_chunk``
+    (one compiled step reused across chunks).  The old scanned-decode
+    fallback (P sequential single-token steps inside a lax.scan) is
+    gone: both paths produce logits identical to the teacher-forced
+    forward."""
     api = get_model(cfg)
-    assert api.decode_step is not None, f"{cfg.name} has no decode step"
+    chunk = chunk or cfg.serve_chunk
+    assert api.prefill_chunk is not None, f"{cfg.name} has no chunk step"
 
-    def scan_prefill(params, cache, prompts):
-        def body(c, tok):
-            logits, c = api.decode_step(params, cfg, tok[:, None], c,
+    batched = None
+    if api.prefill is not None:
+        def _batched(params, cache, prompts):
+            logits, cache = api.prefill(params, cfg, prompts, cache,
                                         mor=mor, mor_mode=mor_mode)
-            return c, logits
-        cache, logits = jax.lax.scan(body, cache, prompts.T)
-        return jnp.argmax(logits[-1], axis=-1).astype(jnp.int32), cache
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+        batched = jax.jit(_batched, donate_argnums=(1,))
+
+    def _chunk(params, cache, toks, n_valid):
+        logits, cache, _ = api.prefill_chunk(params, cfg, toks, cache,
+                                             n_valid=n_valid, mor=mor,
+                                             mor_mode=mor_mode)
+        last = jnp.clip(n_valid - 1, 0)
+        lg = jnp.take_along_axis(logits, last[:, None, None], axis=1)[:, 0]
+        return jnp.argmax(lg, axis=-1).astype(jnp.int32), cache
+    chunk_step = jax.jit(_chunk, donate_argnums=(1,))
 
     def prefill_step(params, cache, prompts):
-        P = prompts.shape[1]
-        batched = api.prefill is not None
-        if batched and cfg.sliding_window and P > cfg.sliding_window:
-            batched = False     # prompt would wrap the kv ring buffer
-        if not batched:
-            return scan_prefill(params, cache, prompts)
-        logits, cache = api.prefill(params, cfg, prompts, cache,
-                                    mor=mor, mor_mode=mor_mode)
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+        B, P = prompts.shape
+        if batched is not None and \
+                (not cfg.sliding_window or P <= cfg.sliding_window):
+            return batched(params, cache, prompts)
+        off = 0
+        while off < P:
+            take = min(chunk, P - off)
+            toks = jnp.pad(prompts[:, off:off + take],
+                           ((0, 0), (0, chunk - take)))
+            nxt, cache = chunk_step(params, cache, toks,
+                                    jnp.full((B,), take, jnp.int32))
+            off += take
+        return nxt, cache
 
     return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mor=None, mor_mode: str = "dense"
+                     ) -> Callable:
+    """decode_step(params, cache, tokens (B, 1)) -> (next_tokens, cache,
+    aux) on the slot-pool cache: a chunk dispatch of width 1, so decode
+    shares the compiled path (and the MoR telemetry stats in ``aux``)
+    with chunked prefill."""
+    api = get_model(cfg)
+    assert api.prefill_chunk is not None, f"{cfg.name} has no chunk step"
+
+    def decode_step(params, cache, tokens):
+        B = tokens.shape[0]
+        logits, cache, aux = api.prefill_chunk(
+            params, cfg, tokens, cache, n_valid=jnp.ones((B,), jnp.int32),
+            mor=mor, mor_mode=mor_mode)
+        return (jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32), cache,
+                aux)
+
+    return decode_step
 
 
 def make_serve_step(cfg: ModelConfig, mor=None, mor_mode: str = "dense"

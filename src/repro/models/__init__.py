@@ -23,9 +23,15 @@ class ModelAPI:
     decode_step: Optional[Callable] = None
     has_decode: bool = True
     # batched prefill: (params, cfg, tokens (B,S), cache, *, mor, mor_mode)
-    # -> (last-position logits, cache).  Families without one fall back to
-    # a lax.scan over decode_step (see launch.steps.make_prefill_step).
+    # -> (last-position logits, cache).  Families without one run chunked
+    # prefill instead (see launch.steps.make_prefill_step).
     prefill: Optional[Callable] = None
+    # serving chunk step: (params, cfg, tokens (B,C), cache, *, n_valid
+    # (B,), mor, mor_mode) -> (logits (B,C,V), cache, aux) on the slot-
+    # pool cache layout (repro.serving.kv_pool): per-slot positions,
+    # validity-masked cache writes.  The continuous-batching engine's
+    # single compiled dispatch (prefill chunks AND decode steps).
+    prefill_chunk: Optional[Callable] = None
 
 
 def get_model(cfg: ModelConfig) -> ModelAPI:
@@ -33,17 +39,19 @@ def get_model(cfg: ModelConfig) -> ModelAPI:
     if fam in ("dense", "moe", "vlm"):
         from repro.models import transformer as t
         return ModelAPI(t.init_params, t.forward, t.cache_init, t.decode_step,
-                        prefill=t.prefill)
+                        prefill=t.prefill, prefill_chunk=t.prefill_chunk)
     if fam == "audio":
         from repro.models import transformer as t
         return ModelAPI(t.init_params, t.forward, None, None,
                         has_decode=False)
     if fam == "ssm":
         from repro.models import rwkv_model as r
-        return ModelAPI(r.init_params, r.forward, r.cache_init, r.decode_step)
+        return ModelAPI(r.init_params, r.forward, r.cache_init, r.decode_step,
+                        prefill_chunk=r.prefill_chunk)
     if fam == "hybrid":
         from repro.models import hybrid as h
-        return ModelAPI(h.init_params, h.forward, h.cache_init, h.decode_step)
+        return ModelAPI(h.init_params, h.forward, h.cache_init, h.decode_step,
+                        prefill_chunk=h.prefill_chunk)
     if fam == "cnn":
         from repro.models import cnn
         return ModelAPI(cnn.init_params,

@@ -16,7 +16,8 @@ from repro.models.layers.common import embed_init, dense_init, split_keys
 from repro.models.layers.mlp import mlp_init, mlp_apply
 from repro.models.layers.norms import norm_init, apply_norm
 from repro.models.layers.ssm import (
-    mamba2_init, mamba2_forward, mamba2_cache_init, mamba2_decode,
+    mamba2_init, mamba2_forward, mamba2_cache_init, mamba2_chunk,
+    mamba2_decode,
 )
 
 
@@ -126,6 +127,73 @@ def cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict:
     if tail:
         cache["tail"] = stack(m1, tail)
     return cache
+
+
+def prefill_chunk(params: Dict, cfg: ModelConfig, tokens, cache: Dict, *,
+                  n_valid, mor: Optional[Dict] = None,
+                  mor_mode: str = "dense") -> Tuple[jnp.ndarray, Dict, Dict]:
+    """tokens: (B, C) -> (logits (B, C, V) f32, cache, aux).
+
+    The serving chunk step for the hybrid family: mamba layers carry
+    their SSD + conv state across chunks (``mamba2_chunk``), the shared
+    attention block scatters into its per-slot sliding-window ring
+    (``gqa_chunk``).  Replaces the old scanned-decode prefill fallback."""
+    dt = jnp.dtype(cfg.dtype)
+    n_seg, every, tail = _seg_counts(cfg)
+    B, C = tokens.shape
+    pos = cache["pos"]
+    valid = jnp.arange(C, dtype=jnp.int32)[None, :] < n_valid[:, None]
+    vm = valid[..., None]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = jnp.where(vm, x, 0.0).astype(dt)
+    x = constrain(x, "residual")
+    swa_cfg = cfg.replace(sliding_window=cfg.shared_attn_window)
+    shared_mor = None if mor is None else mor.get("shared")
+
+    seg_params = jax.tree_util.tree_map(
+        lambda a: a.reshape(n_seg, every, *a.shape[1:]),
+        params["mamba_layers"])
+    seg_caches = jax.tree_util.tree_map(
+        lambda a: a.reshape(n_seg, every, *a.shape[1:]), cache["mamba"])
+
+    def mamba_inner(c, inner_xs):
+        lp, mc = inner_xs
+        h = apply_norm(cfg.norm, lp["ln"], c)
+        y, mc_new = mamba2_chunk(lp["mamba"], cfg, h, mc, valid)
+        return c + jnp.where(vm, y, 0.0).astype(dt), mc_new
+
+    def seg_body(carry, xs):
+        c, mamba_new = jax.lax.scan(mamba_inner, carry, (xs["lp"], xs["mc"]))
+        h = apply_norm(cfg.norm, params["shared"]["ln1"], c)
+        a, ac_new = attn.gqa_chunk(params["shared"]["attn"], swa_cfg, h,
+                                   xs["ac"], pos, valid)
+        c = c + jnp.where(vm, a, 0.0).astype(dt)
+        h2 = apply_norm(cfg.norm, params["shared"]["ln2"], c)
+        f, stats = mlp_apply(params["shared"]["mlp"], cfg, h2,
+                             mor=shared_mor, mor_mode=mor_mode)
+        c = c + jnp.where(vm, f, 0.0).astype(dt)
+        ys = {"mamba": mamba_new, "attn": ac_new}
+        if stats:
+            ys["mor_stats"] = stats
+        return c, ys
+
+    x, new = jax.lax.scan(seg_body, x,
+                          {"lp": seg_params, "mc": seg_caches,
+                           "ac": cache["shared_attn"]})
+    new_cache: Dict[str, Any] = {
+        "pos": pos + n_valid,
+        "mamba": jax.tree_util.tree_map(
+            lambda a: a.reshape(n_seg * every, *a.shape[2:]), new["mamba"]),
+        "shared_attn": new["attn"],
+    }
+    if tail:
+        x, tail_new = jax.lax.scan(mamba_inner, x,
+                                   (params["tail_layers"], cache["tail"]))
+        new_cache["tail"] = tail_new
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = (x @ params["lm_head"].astype(dt)).astype(jnp.float32)
+    aux = {"mor_stats": new["mor_stats"]} if "mor_stats" in new else {}
+    return logits, new_cache, aux
 
 
 def decode_step(params: Dict, cfg: ModelConfig, tokens, cache: Dict, *,

@@ -171,6 +171,23 @@ def attend(q, k, v, q_pos, kv_pos, *, causal: bool, window: int = 0):
     return _sdpa(q, k, v, bias)
 
 
+def attend_batched(q, k, v, q_pos, kv_pos, *, causal: bool = True,
+                   window: int = 0):
+    """Attention with PER-BATCH-ROW positions: q_pos (B, Sq), kv_pos
+    (B, Skv).  This is the continuous-batching slot-pool case — every
+    slot sits at its own position, so the additive bias carries a batch
+    dim instead of being shared.  kv entries tagged -1 are masked."""
+    rel = q_pos[:, :, None] - kv_pos[:, None, :]
+    ok = jnp.ones(rel.shape, bool)
+    if causal:
+        ok &= rel >= 0
+    if window > 0:
+        ok &= rel < window
+    ok &= kv_pos[:, None, :] >= 0
+    bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+    return _sdpa(q, k, v, bias[:, None, None])
+
+
 def gqa_forward(params, cfg: ModelConfig, x, positions):
     q, k, v = _qkv(params, cfg, x)
     q = apply_rope(q, positions, cfg.rope_theta)
@@ -285,11 +302,44 @@ def gqa_prefill(params, cfg: ModelConfig, x, cache):
     k = apply_rope(k, pvec, cfg.rope_theta)
     ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=1)
     cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=1)
-    cp = jax.lax.dynamic_update_slice_in_dim(
-        cache["pos"], jnp.arange(S, dtype=jnp.int32), 0, axis=0)
+    tags = jnp.arange(S, dtype=jnp.int32)
+    if cache["pos"].ndim == 2:      # slot-pool layout: per-slot (B, Lr) tags
+        cp = jax.lax.dynamic_update_slice(
+            cache["pos"], jnp.broadcast_to(tags[None], (B, S)), (0, 0))
+    else:
+        cp = jax.lax.dynamic_update_slice_in_dim(cache["pos"], tags, 0,
+                                                 axis=0)
     pos1 = jnp.arange(S, dtype=jnp.int32)
     o = attend(q, k, v, pos1, pos1, causal=True, window=cfg.sliding_window)
     y = o.reshape(B, S, -1) @ params["wo"].astype(x.dtype)
+    return y, {"k": ck, "v": cv, "pos": cp}
+
+
+def gqa_chunk(params, cfg: ModelConfig, x, cache, pos, valid):
+    """Slot-pool chunk step: consume x (B, C, d) starting at PER-SLOT
+    positions ``pos`` (B,), with ``valid`` (B, C) marking real tokens
+    (a slot mid-prompt has a full row; an idle or decoding slot has
+    n_valid 0 or 1).  Invalid tokens are dropped from the ring-buffer
+    write (out-of-range scatter index), so an idle slot's cache is
+    bit-identical before and after the dispatch.
+
+    The ring must have ≥ chunk-length slack above the attention window
+    (``serving.kv_pool`` allocates window + serve_chunk) so that the
+    oldest in-window entries are not overwritten by the chunk itself."""
+    B, C, _ = x.shape
+    q, k, v = _qkv(params, cfg, x)
+    qpos = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    q = apply_rope(q, qpos, cfg.rope_theta)
+    k = apply_rope(k, qpos, cfg.rope_theta)
+    Lr = cache["k"].shape[1]
+    slot = jnp.where(valid, qpos % Lr, Lr)          # Lr is OOB -> dropped
+    bidx = jnp.arange(B)[:, None]
+    ck = cache["k"].at[bidx, slot].set(k, mode="drop")
+    cv = cache["v"].at[bidx, slot].set(v, mode="drop")
+    cp = cache["pos"].at[bidx, slot].set(qpos, mode="drop")
+    o = attend_batched(q, ck, cv, qpos, cp, causal=True,
+                       window=cfg.sliding_window)
+    y = o.reshape(B, C, -1) @ params["wo"].astype(x.dtype)
     return y, {"k": ck, "v": cv, "pos": cp}
 
 
@@ -385,7 +435,48 @@ def mla_prefill(params, cfg: ModelConfig, x, cache):
     pos1 = jnp.arange(S, dtype=jnp.int32)
     o = attend(q_full, k_full, v, pos1, pos1, causal=True, window=0)
     y = o.reshape(B, S, h * vd) @ params["wo"].astype(dt)
-    return y, {"c_kv": ck, "k_pe": cp}
+    new_cache = {"c_kv": ck, "k_pe": cp}
+    if "pos" in cache:              # slot-pool layout carries kv pos tags
+        new_cache["pos"] = jax.lax.dynamic_update_slice(
+            cache["pos"], jnp.broadcast_to(pos1[None], (B, S)), (0, 0))
+    return y, new_cache
+
+
+def mla_chunk(params, cfg: ModelConfig, x, cache, pos, valid):
+    """Slot-pool chunk step for MLA (absorbed latent attention): x
+    (B, C, d) at per-slot positions ``pos`` (B,); ``valid`` (B, C) gates
+    the cache scatter.  The cache carries per-slot position tags
+    (``cache["pos"]``, (B, max_len), -1 = empty) so each slot only
+    attends to its own written prefix."""
+    B, C, _ = x.shape
+    h, nd, vd = cfg.n_heads, cfg.qk_nope_head_dim, cfg.v_head_dim
+    kr, rd = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    dt = x.dtype
+    qpos = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    q_nope, q_pe = _mla_q(params, cfg, x, qpos)          # (B,C,h,nd/rd)
+    c_kv_t, k_pe_t = _mla_kv_compress(params, cfg, x, qpos)
+    ML = cache["c_kv"].shape[1]
+    idx = jnp.where(valid, qpos, ML)                     # ML is OOB -> drop
+    bidx = jnp.arange(B)[:, None]
+    ck = cache["c_kv"].at[bidx, idx].set(c_kv_t, mode="drop")
+    cpe = cache["k_pe"].at[bidx, idx].set(k_pe_t, mode="drop")
+    cp = cache["pos"].at[bidx, idx].set(qpos, mode="drop")
+    wk_b = params["wk_b"].astype(dt).reshape(kr, h, nd)
+    wv_b = params["wv_b"].astype(dt).reshape(kr, h, vd)
+    q_lat = jnp.einsum("bchd,khd->bchk", q_nope, wk_b)   # absorb W_uk
+    s = (jnp.einsum("bchk,btk->bhct", q_lat, ck,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bchr,btr->bhct", q_pe, cpe,
+                      preferred_element_type=jnp.float32))
+    s = s * ((nd + rd) ** -0.5)
+    ok = (cp[:, None, None, :] <= qpos[:, None, :, None]) & \
+        (cp[:, None, None, :] >= 0)
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(dt)
+    o_lat = jnp.einsum("bhct,btk->bchk", p, ck)
+    o = jnp.einsum("bchk,khv->bchv", o_lat, wv_b)        # absorb W_uv
+    y = o.reshape(B, C, h * vd) @ params["wo"].astype(dt)
+    return y, {"c_kv": ck, "k_pe": cpe, "pos": cp}
 
 
 def mla_decode(params, cfg: ModelConfig, x, cache, pos):

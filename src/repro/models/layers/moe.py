@@ -176,9 +176,18 @@ def moe_apply_a2a(params: Dict, cfg: ModelConfig, x) -> Tuple:
 
 
 def moe_apply(params: Dict, cfg: ModelConfig, x, *,
-              mor=None, mor_mode: str = "dense") -> Tuple[jnp.ndarray, Dict]:
-    """x: (..., d) -> (y, aux).  aux carries the load-balance loss."""
-    if cfg.expert_sharding == "ep_shmap":
+              mor=None, mor_mode: str = "dense",
+              token_mask=None) -> Tuple[jnp.ndarray, Dict]:
+    """x: (..., d) -> (y, aux).  aux carries the load-balance loss.
+
+    ``token_mask`` (broadcastable to x's leading dims) marks REAL tokens:
+    masked-out rows are excluded from routing entirely (their expert id
+    is set to the out-of-range sentinel E, so they never claim capacity
+    slots).  The serving engine's chunk steps pass their validity mask —
+    without it, a co-scheduled slot's padding rows would flood an
+    expert's capacity buffer and displace real tokens (capacity is
+    assigned by token index, earlier wins)."""
+    if cfg.expert_sharding == "ep_shmap" and token_mask is None:
         out = moe_apply_a2a(params, cfg, x)
         if out is not None:
             y, aux = out
@@ -203,6 +212,11 @@ def moe_apply(params: Dict, cfg: ModelConfig, x, *,
     probs = jax.nn.softmax(logits, axis=-1)
     top_p, top_idx = jax.lax.top_k(probs, k)
     top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    if token_mask is not None:
+        tm = jnp.broadcast_to(token_mask, lead).reshape(-1)
+        # sentinel expert E: sorts last, drops from bincount/capacity,
+        # and lands every masked (token, k) pair on the zero row
+        top_idx = jnp.where(tm[:, None], top_idx, E)
 
     slot = _dispatch_indices(top_idx, E, C)             # (T, k)
     # dispatch = GATHER, not scatter-of-vectors: scattering (T*k, d) rows

@@ -72,7 +72,8 @@ def _group_norm(y, scale, eps=1e-6):
     return out * scale
 
 
-def _wkv6_chunked(r, k, v, w, u, chunk: int = 8):
+def _wkv6_chunked(r, k, v, w, u, chunk: int = 8, initial_state=None,
+                  return_state: bool = False):
     """GLA-style chunked-parallel wkv6 (exact, tested vs the scan).
 
     With per-channel decay w_t and A_t = sum_{i<=t} log w_i, the intra-
@@ -129,13 +130,16 @@ def _wkv6_chunked(r, k, v, w, u, chunk: int = 8):
         S_new = Sst * dec[..., None] + S_loc
         return S_new, Sst
 
-    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
-    _, S_prevs = jax.lax.scan(
+    S0 = (jnp.zeros((B, H, hd, hd), jnp.float32) if initial_state is None
+          else initial_state)
+    S_last, S_prevs = jax.lax.scan(
         carry, S0, (S_local.transpose(1, 0, 2, 3, 4),
                     decay_end.transpose(1, 0, 2, 3)))
     S_prevs = S_prevs.transpose(1, 0, 2, 3, 4)             # (B,nc,H,hd,hd)
     y_inter = jnp.einsum("bcthk,bchkv->bcthv", r_sc, S_prevs)
     y = (y_intra + y_inter).reshape(B, nc * C, H, hd)[:, :S]
+    if return_state:
+        return y, S_last
     return y
 
 
@@ -186,6 +190,31 @@ def timemix_forward(params: Dict, cfg: ModelConfig, x, *,
     y = ys.transpose(1, 0, 2, 3)                   # (B,S,H,hd)
     y = _group_norm(y, params["ln_scale"]) * g
     return y.astype(dt) @ params["Wo"].astype(dt)
+
+
+def timemix_chunk(params: Dict, cfg: ModelConfig, x, shift0, wkv0,
+                  valid) -> Tuple:
+    """State-carrying chunk: x (B, C, d) continues from ``shift0`` (B, d)
+    token-shift state and ``wkv0`` (B, H, hd, hd) wkv state; ``valid``
+    (B, C) marks real tokens (the valid prefix of each row — serving's
+    chunked prefill contract).  Invalid positions are identity updates on
+    the state (k -> 0, w -> 1), so the returned state equals the state
+    after exactly the valid tokens.  -> (y (B, C, d), shift_new, wkv_new)."""
+    dt = x.dtype
+    x_prev = jnp.concatenate([shift0[:, None, :].astype(dt), x[:, :-1]], 1)
+    r, k, v, g, w = _timemix_inputs(params, cfg, x, x_prev)
+    vm = valid[:, :, None, None]
+    k = jnp.where(vm, k, 0.0).astype(k.dtype)
+    w = jnp.where(vm, w, 1.0)
+    y, S_last = _wkv6_chunked(r, k, v, w, params["u"],
+                              initial_state=wkv0, return_state=True)
+    y = _group_norm(y, params["ln_scale"]) * g
+    y = y.astype(dt) @ params["Wo"].astype(dt)
+    nv = valid.sum(1)
+    last = jnp.clip(nv - 1, 0)
+    x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+    shift_new = jnp.where((nv > 0)[:, None], x_last, shift0.astype(dt))
+    return y, shift_new, S_last
 
 
 def timemix_decode(params: Dict, cfg: ModelConfig, x, state) -> Tuple:

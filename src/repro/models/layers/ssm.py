@@ -58,6 +58,40 @@ def _gated_norm(y, z, scale, eps=1e-6):
     return g * r * scale
 
 
+def _ssd(xbar, Bc, Cc, la, S0):
+    """Chunked SSD core: xbar (B, nc, Q, H, P); Bc/Cc (B, nc, Q, N); la
+    (B, nc, Q, H) log-decays; S0 (B, H, N, P) initial state.  Returns
+    (y (B, nc, Q, H, P), S_last) — S_last is the state after the final
+    position, so chaining calls is exact (serving's chunked prefill)."""
+    B, nc, Q, H, P = xbar.shape
+    cum = jnp.cumsum(la, axis=2)                         # (B,nc,Q,H)
+
+    # --- intra-chunk (quadratic within chunk) ---
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)       # shared across heads
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,i,j,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(rel), 0.0)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, L, xbar)
+
+    # --- inter-chunk state carry ---
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)      # (B,nc,Q,H)
+    S_local = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bc, decay_to_end, xbar)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])              # (B,nc,H)
+
+    def carry_fn(S_prev, inp):
+        S_loc, cdec = inp
+        S_new = S_prev * cdec[..., None, None] + S_loc
+        return S_new, S_prev
+
+    S_last, S_prevs = jax.lax.scan(
+        carry_fn, S0,
+        (S_local.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    S_prevs = S_prevs.transpose(1, 0, 2, 3, 4)           # (B,nc,H,N,P)
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp",
+                         Cc, jnp.exp(cum), S_prevs)
+    return y_intra + y_inter, S_last
+
+
 def mamba2_forward(params: Dict, cfg: ModelConfig, x) -> jnp.ndarray:
     """x: (B, S, d) -> (B, S, d).  S must be a multiple of ssm_chunk or
     smaller than it (it is padded internally)."""
@@ -88,38 +122,13 @@ def mamba2_forward(params: Dict, cfg: ModelConfig, x) -> jnp.ndarray:
         C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
         loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
     nc = (S + pad) // Q
-    xbar = xbar.reshape(B, nc, Q, H, P)
-    Bc = B_.reshape(B, nc, Q, N).astype(jnp.float32)
-    Cc = C_.reshape(B, nc, Q, N).astype(jnp.float32)
-    la = loga.reshape(B, nc, Q, H)
-    cum = jnp.cumsum(la, axis=2)                         # (B,nc,Q,H)
+    y, _ = _ssd(xbar.reshape(B, nc, Q, H, P),
+                B_.reshape(B, nc, Q, N).astype(jnp.float32),
+                C_.reshape(B, nc, Q, N).astype(jnp.float32),
+                loga.reshape(B, nc, Q, H),
+                jnp.zeros((B, H, N, P), jnp.float32))
 
-    # --- intra-chunk (quadratic within chunk) ---
-    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)       # shared across heads
-    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,i,j,H)
-    tri = jnp.tril(jnp.ones((Q, Q), bool))
-    L = jnp.where(tri[None, None, :, :, None], jnp.exp(rel), 0.0)
-    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, L, xbar)
-
-    # --- inter-chunk state carry ---
-    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)      # (B,nc,Q,H)
-    S_local = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bc, decay_to_end, xbar)
-    chunk_decay = jnp.exp(cum[:, :, -1, :])              # (B,nc,H)
-
-    def carry_fn(S_prev, inp):
-        S_loc, cdec = inp
-        S_new = S_prev * cdec[..., None, None] + S_loc
-        return S_new, S_prev
-
-    S0 = jnp.zeros((B, H, N, P), jnp.float32)
-    _, S_prevs = jax.lax.scan(
-        carry_fn, S0,
-        (S_local.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
-    S_prevs = S_prevs.transpose(1, 0, 2, 3, 4)           # (B,nc,H,N,P)
-    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp",
-                         Cc, jnp.exp(cum), S_prevs)
-
-    y = (y_intra + y_inter).reshape(B, S + pad, H, P)[:, :S]
+    y = y.reshape(B, S + pad, H, P)[:, :S]
     y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
     y = _gated_norm(y.reshape(B, S, d_in), z, params["norm_scale"])
     return (y.astype(dt_) @ params["out_proj"].astype(dt_))
@@ -132,6 +141,56 @@ def mamba2_cache_init(cfg: ModelConfig, batch: int, dtype):
         "conv": jnp.zeros((batch, _D_CONV - 1, conv_ch), dtype),
         "ssm": jnp.zeros((batch, H, N, P), jnp.float32),
     }
+
+
+def mamba2_chunk(params: Dict, cfg: ModelConfig, x, cache, valid) -> Tuple:
+    """State-carrying chunk: x (B, C, d) continues from ``cache`` ({conv
+    (B, 3, ch), ssm (B, H, N, P)}); ``valid`` (B, C) marks the real-token
+    prefix of each row.  Invalid positions contribute nothing to the SSD
+    state (xbar -> 0, log-decay -> 0) and the conv history advances by
+    exactly the valid count, so chaining chunks equals one long forward.
+    -> (y (B, C, d), new_cache)."""
+    B, C, d = x.shape
+    d_in, H, P, N = _dims(cfg)
+    dt_ = x.dtype
+    zxbcdt = x @ params["in_proj"].astype(dt_)
+    z, xBC, dtd = _split_proj(zxbcdt, cfg)
+    hist = jnp.concatenate([cache["conv"].astype(dt_), xBC], 1)  # (B,C+3,ch)
+    conv = sum(hist[:, i:i + C, :] * params["conv_w"][i].astype(dt_)
+               for i in range(_D_CONV)) + params["conv_b"].astype(dt_)
+    conv = jax.nn.silu(conv.astype(jnp.float32))
+    xs = conv[..., :d_in].reshape(B, C, H, P)
+    B_ = conv[..., d_in:d_in + N].astype(jnp.float32)
+    C_ = conv[..., d_in + N:].astype(jnp.float32)
+
+    dt_soft = jax.nn.softplus(dtd.astype(jnp.float32) + params["dt_bias"])
+    loga = -dt_soft * jnp.exp(params["A_log"])
+    xbar = xs * dt_soft[..., None]
+    xbar = jnp.where(valid[:, :, None, None], xbar, 0.0)
+    loga = jnp.where(valid[:, :, None], loga, 0.0)
+
+    Q = min(cfg.ssm_chunk, C)
+    pad = (-C) % Q
+    if pad:
+        xbar = jnp.pad(xbar, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+        loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
+    nc = (C + pad) // Q
+    y, S_last = _ssd(xbar.reshape(B, nc, Q, H, P), B_.reshape(B, nc, Q, N),
+                     C_.reshape(B, nc, Q, N), loga.reshape(B, nc, Q, H),
+                     cache["ssm"])
+    y = y.reshape(B, C + pad, H, P)[:, :C]
+    y = y + params["D"][None, None, :, None] * xs
+    y = _gated_norm(y.reshape(B, C, d_in), z, params["norm_scale"])
+    out = y.astype(dt_) @ params["out_proj"].astype(dt_)
+    # conv history = the last (_D_CONV - 1) VALID inputs: rows
+    # [n_valid, n_valid + 3) of the (history ++ chunk) concatenation
+    nv = valid.sum(1)
+    idx = nv[:, None] + jnp.arange(_D_CONV - 1, dtype=jnp.int32)[None, :]
+    conv_new = jnp.take_along_axis(hist, idx[:, :, None], axis=1)
+    return out, {"conv": conv_new.astype(cache["conv"].dtype),
+                 "ssm": S_last}
 
 
 def mamba2_decode(params: Dict, cfg: ModelConfig, x, cache) -> Tuple:

@@ -88,6 +88,63 @@ def cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict:
     }
 
 
+def prefill_chunk(params: Dict, cfg: ModelConfig, tokens, cache: Dict, *,
+                  n_valid, mor: Optional[Dict] = None,
+                  mor_mode: str = "dense") -> Tuple[jnp.ndarray, Dict, Dict]:
+    """tokens: (B, C) -> (logits (B, C, V) f32, cache, aux).
+
+    The serving chunk step for RWKV: each slot consumes its next
+    ``n_valid[b]`` tokens, carrying the wkv state, the time-mix token
+    shift, and the channel-mix token shift across chunk boundaries —
+    the recurrent-family replacement for the old scanned-decode prefill
+    fallback (one compiled (B, C) dispatch per chunk instead of P
+    single-token steps)."""
+    dt = jnp.dtype(cfg.dtype)
+    B, C = tokens.shape
+    valid = jnp.arange(C, dtype=jnp.int32)[None, :] < n_valid[:, None]
+    vm = valid[..., None]
+    nv = n_valid
+    last = jnp.clip(nv - 1, 0)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = apply_norm(cfg.norm, params["in_norm"], x)
+    x = jnp.where(vm, x, 0.0).astype(dt)
+
+    def body(carry, xs):
+        lp = xs["lp"]
+        h = apply_norm(cfg.norm, lp["ln1"], carry)
+        y, tm_new, wkv_new = rwkv.timemix_chunk(
+            lp["tm"], cfg, h, xs["tm_shift"].astype(dt), xs["wkv"], valid)
+        carry = carry + jnp.where(vm, y, 0.0).astype(dt)
+        h2 = apply_norm(cfg.norm, lp["ln2"], carry)
+        h2_prev = jnp.concatenate(
+            [xs["cm_shift"].astype(dt)[:, None], h2[:, :-1]], 1)
+        f, stats = rwkv.chanmix_forward(lp["cm"], cfg, h2, h2_prev,
+                                        mor=xs.get("mor"), mor_mode=mor_mode)
+        carry = carry + jnp.where(vm, f, 0.0).astype(dt)
+        h2_last = jnp.take_along_axis(h2, last[:, None, None], axis=1)[:, 0]
+        cm_new = jnp.where((nv > 0)[:, None], h2_last,
+                           xs["cm_shift"].astype(dt))
+        ys = {"tm_shift": tm_new.astype(xs["tm_shift"].dtype),
+              "wkv": wkv_new,
+              "cm_shift": cm_new.astype(xs["cm_shift"].dtype)}
+        if stats:
+            ys["mor_stats"] = stats
+        return carry, ys
+
+    xs = {"lp": params["layers"], "tm_shift": cache["tm_shift"],
+          "wkv": cache["wkv"], "cm_shift": cache["cm_shift"]}
+    if mor is not None:
+        xs["mor"] = mor["layers"]
+    x, new = jax.lax.scan(body, x, xs)
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = (x @ params["lm_head"].astype(dt)).astype(jnp.float32)
+    aux = {}
+    if "mor_stats" in new:
+        aux["mor_stats"] = new.pop("mor_stats")
+    new_cache = {"pos": cache["pos"] + n_valid, **new}
+    return logits, new_cache, aux
+
+
 def decode_step(params: Dict, cfg: ModelConfig, tokens, cache: Dict, *,
                 mor: Optional[Dict] = None, mor_mode: str = "dense",
                 ) -> Tuple[jnp.ndarray, Dict]:

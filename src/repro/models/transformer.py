@@ -235,6 +235,93 @@ def prefill(params: Dict, cfg: ModelConfig, tokens, cache: Dict, *,
 
 
 # --------------------------------------------------------------------------
+# chunked prefill: C tokens per slot at per-slot positions (serving pool)
+# --------------------------------------------------------------------------
+
+def _block_chunk(lp, cfg: ModelConfig, x, c, pos, valid, kind, mor_layer,
+                 mor_mode):
+    vm = valid[..., None]
+    h = apply_norm(cfg.norm, lp["ln1"], x)
+    if cfg.mla:
+        a, c_new = attn.mla_chunk(lp["attn"], cfg, h, c, pos, valid)
+    else:
+        a, c_new = attn.gqa_chunk(lp["attn"], cfg, h, c, pos, valid)
+    x = x + jnp.where(vm, a, 0.0).astype(x.dtype)
+    h2 = apply_norm(cfg.norm, lp["ln2"], x)
+    ys: Dict[str, Any] = {}
+    if kind == "moe":
+        # invalid rows must not claim expert capacity (slot isolation)
+        f, _ = moe_apply(lp["moe"], cfg, h2, mor=mor_layer,
+                         mor_mode=mor_mode, token_mask=valid)
+    else:
+        f, stats = mlp_apply(lp["mlp"], cfg, h2, mor=mor_layer,
+                             mor_mode=mor_mode)
+        if stats:
+            ys["mor_stats"] = stats
+    x = x + jnp.where(vm, f, 0.0).astype(x.dtype)
+    return x, c_new, ys
+
+
+def prefill_chunk(params: Dict, cfg: ModelConfig, tokens, cache: Dict, *,
+                  n_valid, mor: Optional[Dict] = None,
+                  mor_mode: str = "dense") -> Tuple[jnp.ndarray, Dict, Dict]:
+    """tokens: (B, C) -> (logits (B, C, V) f32, cache, aux).
+
+    The serving engine's ONE compiled step: every slot consumes its next
+    ``n_valid[b]`` tokens (0 for idle slots, 1 for decoding slots, up to
+    C for prompt chunks) starting at its own ``cache["pos"][b]``.  The
+    invalid tail of each row is masked out of the residual stream and
+    dropped from the cache writes, so idle slots are untouched; chaining
+    chunks reproduces the teacher-forced forward exactly (incl. prompts
+    longer than the sliding-window ring, given the kv_pool's chunk-margin
+    ring).  aux["mor_stats"] carries the per-layer (L-stacked) realised
+    skip statistics that feed ``serving.telemetry``."""
+    B, C = tokens.shape
+    pos = cache["pos"]
+    valid = jnp.arange(C, dtype=jnp.int32)[None, :] < n_valid[:, None]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    x = jnp.where(valid[..., None], x, 0.0).astype(x.dtype)
+    x = constrain(x, "residual")
+
+    def run_stack(x, stacked, caches, kind, mor_stack):
+        def body(carry, xs):
+            y, c_new, ys = _block_chunk(xs["lp"], cfg, carry, xs["c"], pos,
+                                        valid, kind, xs.get("mor"), mor_mode)
+            return y, {"c": c_new, **ys}
+        xs = {"lp": stacked, "c": caches}
+        if mor_stack is not None:
+            xs["mor"] = mor_stack
+        y, out = jax.lax.scan(body, x, xs)
+        ys = {k: v for k, v in out.items() if k != "c"}
+        return y, out["c"], ys
+
+    new_cache: Dict[str, Any] = {"pos": pos + n_valid}
+    aux: Dict[str, Any] = {}
+    if cfg.family == "moe":
+        if cfg.first_k_dense:
+            x, nc, ys = run_stack(
+                x, params["dense_layers"], cache["dense_layers"], "dense",
+                None if mor is None else mor.get("dense_layers"))
+            new_cache["dense_layers"] = nc
+            aux.update({f"dense_{k}": v for k, v in ys.items()})
+        x, nc, ys = run_stack(x, params["moe_layers"], cache["moe_layers"],
+                              "moe",
+                              None if mor is None else mor.get("moe_layers"))
+        new_cache["moe_layers"] = nc
+        aux.update(ys)
+    else:
+        x, nc, ys = run_stack(x, params["layers"], cache["layers"], "dense",
+                              None if mor is None else mor.get("layers"))
+        new_cache["layers"] = nc
+        aux.update(ys)
+
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+    return logits, new_cache, aux
+
+
+# --------------------------------------------------------------------------
 # decode
 # --------------------------------------------------------------------------
 

@@ -1,0 +1,23 @@
+"""repro.serving — continuous-batching MoR serving engine.
+
+The paper's deployment target is an inference accelerator serving real
+traffic; this package embeds the MoR predictor in a serving loop that
+*measures and exploits* the sparsity it predicts:
+
+  kv_pool    — slot-pool cache layout (per-slot positions, per-slot kv
+               position tags, window + chunk ring margin) + slot recycle.
+  scheduler  — continuous-batching policy: admit requests with
+               heterogeneous prompt/gen lengths into a fixed slot pool,
+               chunk prompts, mix prefill chunks and decode steps in one
+               dispatch, evict finished sequences mid-flight.
+  engine     — the driver: one compiled chunk step per dispatch shape,
+               request queue -> token streams + a serving report.
+  telemetry  — per-layer tile-liveness histograms + predictor hit/miss
+               counters accumulated during serving; feeds
+               ``calibrate_capacity`` (liveness-quantile provisioning of
+               each layer's gather_matmul capacity).
+"""
+from repro.serving.engine import Engine, Request
+from repro.serving.telemetry import ServingTelemetry, calibrate_capacity
+
+__all__ = ["Engine", "Request", "ServingTelemetry", "calibrate_capacity"]

@@ -1,0 +1,90 @@
+"""Slot-pool cache: the serving engine's per-slot decode-cache layout.
+
+``models.*.cache_init`` builds UNIFORM-batch caches: one scalar clock
+(``cache["pos"]``) and, for attention families, one shared (L,) ring of
+kv position tags — fine when every sequence in the batch advances in
+lockstep, wrong for continuous batching where each slot sits at its own
+position.  ``init`` upgrades that layout in place:
+
+  * top-level ``pos``: scalar -> (n_slots,) per-slot positions;
+  * attention ring tags: (stack, L) -> (stack, n_slots, L);
+  * MLA latent caches gain per-slot (stack, n_slots, max_len) tags
+    (the uniform layout masks by the scalar clock instead);
+  * sliding-window rings are allocated with a ``serve_chunk`` margin
+    above the window so a prefill chunk never overwrites kv rows still
+    inside another in-chunk token's window.
+
+Every stacked leaf keeps the batch dim at axis 1 (axis 0 = layer stack)
+and the top-level ``pos`` at axis 0 — ``reset_slots`` relies on exactly
+this invariant to recycle evicted slots in one masked select.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import get_model
+
+
+def ring_cfg(cfg: ModelConfig, chunk: int) -> ModelConfig:
+    """Config used ONLY for cache allocation: window + chunk ring slack."""
+    if cfg.sliding_window:
+        cfg = cfg.replace(sliding_window=cfg.sliding_window + chunk)
+    if cfg.family == "hybrid" and cfg.shared_attn_window:
+        cfg = cfg.replace(shared_attn_window=cfg.shared_attn_window + chunk)
+    return cfg
+
+
+def _upgrade(node, n_slots: int):
+    if not isinstance(node, dict):
+        return node
+    if "k" in node and "pos" in node:           # attention ring cache
+        out = dict(node)
+        lead, L = node["pos"].shape[:-1], node["pos"].shape[-1]
+        out["pos"] = jnp.full(lead + (n_slots, L), -1, jnp.int32)
+        return out
+    if "c_kv" in node:                          # MLA latent cache
+        out = dict(node)
+        out["pos"] = jnp.full(node["c_kv"].shape[:-1], -1, jnp.int32)
+        return out
+    return {k: _upgrade(v, n_slots) for k, v in node.items()}
+
+
+def init(cfg: ModelConfig, n_slots: int, max_len: int,
+         chunk: int = 0, dtype=None) -> Dict:
+    """Allocate the slot-pool cache for ``n_slots`` sequences of up to
+    ``max_len`` positions, consumable by the ``prefill_chunk`` steps."""
+    chunk = chunk or cfg.serve_chunk
+    api = get_model(cfg)
+    assert api.cache_init is not None, f"{cfg.name} has no decode cache"
+    cache = api.cache_init(ring_cfg(cfg, chunk), n_slots, max_len,
+                           dtype or cfg.jdtype)
+    out = {k: _upgrade(v, n_slots) for k, v in cache.items()}
+    out["pos"] = jnp.zeros((n_slots,), jnp.int32)
+    return out
+
+
+def reset_slots(cache: Dict, slots) -> Dict:
+    """Recycle cache slots: zero state / -1 kv tags / 0 position for every
+    slot where ``slots`` (n_slots,) bool is True, leaving the rest
+    untouched.  jit-safe (one select per leaf)."""
+    slots = jnp.asarray(slots)
+
+    def leaf(key, a):
+        fill = -1 if key == "pos" else 0
+        m = slots.reshape((1, -1) + (1,) * (a.ndim - 2))
+        return jnp.where(m, jnp.full((), fill, a.dtype), a)
+
+    def walk(node):
+        out = {}
+        for k, v in node.items():
+            out[k] = walk(v) if isinstance(v, dict) else leaf(k, v)
+        return out
+
+    out = {k: (walk(v) if isinstance(v, dict) else leaf(k, v))
+           for k, v in cache.items() if k != "pos"}
+    out["pos"] = jnp.where(slots, 0, cache["pos"])
+    return out

@@ -1,0 +1,134 @@
+"""Continuous-batching scheduler: the policy half of the engine.
+
+Requests with heterogeneous prompt/generation lengths share a fixed pool
+of ``n_slots`` cache slots.  Prompts are consumed in fixed-size chunks;
+a dispatch is MIXED — every prefilling slot contributes its next chunk
+while every decoding slot contributes its one pending token in the same
+(B, C) batch — so ongoing generations never stall behind a long prompt
+(chunked prefill interleaved with decode at token granularity).  When
+all remaining work is decode, dispatches shrink to (B, 1).  Finished
+sequences are evicted immediately and their slot is recycled for the
+next waiting request mid-flight.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, List, Optional, Tuple
+
+import numpy as np
+
+FREE, PREFILL, DECODE = "free", "prefill", "decode"
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (P,) int32 token ids
+    max_new_tokens: int = 16
+
+
+@dataclass
+class _Slot:
+    state: str = FREE
+    req: Optional[Request] = None
+    offset: int = 0                     # prompt tokens already prefilled
+    n_generated: int = 0                # tokens emitted so far
+
+    # NOTE: the scheduler never sees token VALUES — admission, chunking
+    # and eviction are all count-based (greedy sampling to a fixed
+    # max_new_tokens), so the engine can keep the generated-token stream
+    # on device and fetch it once at the end instead of syncing the
+    # accelerator pipeline on every dispatch.
+
+
+class Scheduler:
+    def __init__(self, n_slots: int, chunk: int):
+        assert n_slots >= 1 and chunk >= 1
+        self.n_slots = n_slots
+        self.chunk = chunk
+        self.slots = [_Slot() for _ in range(n_slots)]
+        self.waiting: Deque[Request] = deque()
+
+    # -- admission ---------------------------------------------------------
+    def add(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def admit(self) -> List[int]:
+        """Move waiting requests into free slots; returns the admitted
+        slot indices (their cache rows must be reset before dispatch)."""
+        newly = []
+        for s, slot in enumerate(self.slots):
+            if not self.waiting:
+                break
+            if slot.state is FREE:
+                req = self.waiting.popleft()
+                self.slots[s] = _Slot(state=PREFILL, req=req)
+                newly.append(s)
+        return newly
+
+    # -- dispatch construction --------------------------------------------
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting) or any(s.state is not FREE
+                                         for s in self.slots)
+
+    def next_dispatch(self) -> Optional[str]:
+        if any(s.state is PREFILL for s in self.slots):
+            return "mixed"
+        if any(s.state is DECODE for s in self.slots):
+            return "decode"
+        return None
+
+    def build_batch(self, kind: str
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                               List[Tuple[int, int]]]:
+        """-> (tokens (B, C), n_valid (B,), use_pending (B,), emits).
+
+        ``tokens`` carries each prefilling slot's next prompt chunk;
+        slots flagged in ``use_pending`` feed their device-resident last
+        sampled token instead (the engine splices it in without a host
+        round-trip).  ``emits`` lists (slot, rid) pairs that will emit a
+        generated token from THIS dispatch (decoding slots, and prefill
+        slots whose prompt completes here)."""
+        C = self.chunk if kind == "mixed" else 1
+        tokens = np.zeros((self.n_slots, C), np.int32)
+        n_valid = np.zeros((self.n_slots,), np.int32)
+        use_pending = np.zeros((self.n_slots,), bool)
+        emits: List[Tuple[int, int]] = []
+        for s, slot in enumerate(self.slots):
+            if slot.state is PREFILL:
+                take = min(C, len(slot.req.prompt) - slot.offset)
+                tokens[s, :take] = slot.req.prompt[slot.offset:
+                                                   slot.offset + take]
+                n_valid[s] = take
+                if slot.offset + take >= len(slot.req.prompt):
+                    emits.append((s, slot.req.rid))
+            elif slot.state is DECODE:
+                use_pending[s] = True
+                n_valid[s] = 1
+                emits.append((s, slot.req.rid))
+        return tokens, n_valid, use_pending, emits
+
+    # -- result ingestion --------------------------------------------------
+    def feed(self, n_valid: np.ndarray) -> List[Request]:
+        """Advance slot states after a dispatch (count-based: the token
+        values stay on device — see _Slot note).  Returns the requests
+        that finished; their slots are freed for recycling."""
+        finished = []
+        for s, slot in enumerate(self.slots):
+            nv = int(n_valid[s])
+            if nv == 0:
+                continue
+            if slot.state is PREFILL:
+                slot.offset += nv
+                if slot.offset >= len(slot.req.prompt):
+                    slot.state = DECODE
+                    slot.n_generated = 1
+            elif slot.state is DECODE:
+                slot.n_generated += 1
+            if slot.state is DECODE and \
+                    slot.n_generated >= slot.req.max_new_tokens:
+                finished.append(slot.req)
+                self.slots[s] = _Slot()
+        return finished

@@ -1,0 +1,105 @@
+"""Serving telemetry: per-layer tile-liveness histograms + predictor
+hit/miss counters, and the liveness-quantile capacity calibration.
+
+Every engine dispatch returns ``aux`` whose ``*mor_stats`` entries are
+per-layer (L-stacked) realised skip statistics from the ONE predictor
+pass each layer ran (``core.executor``).  The telemetry bins each
+layer's live-tile fraction into a fixed histogram; ``calibrate_capacity``
+then reads a quantile of that distribution per layer — the observed
+demand — and provisions each layer's ``gather_matmul`` capacity from it
+instead of the static global ``cfg.mor.capacity`` (ROADMAP open item).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+# aux keys that carry per-layer MoR stats, in the order groups appear
+STAT_KEYS = ("mor_stats", "dense_mor_stats")
+
+
+def mor_group_map(cfg: ModelConfig) -> Dict[str, str]:
+    """aux stat-group key -> mor-pytree layer-group key."""
+    if cfg.family == "hybrid":
+        return {"mor_stats": "shared"}
+    if cfg.family == "moe":
+        return {"dense_mor_stats": "dense_layers"}
+    return {"mor_stats": "layers"}
+
+
+class ServingTelemetry:
+    """Host-side accumulator over chunk-step aux dicts.
+
+    Per stat group (usually one): a (L, n_bins) histogram of the
+    live-tile fraction per dispatch, running means of the computed /
+    live / mispredicted fractions, and dispatch counters."""
+
+    def __init__(self, n_bins: int = 32):
+        self.n_bins = n_bins
+        self.hist: Dict[str, np.ndarray] = {}
+        self.sums: Dict[str, Dict[str, np.ndarray]] = {}
+        self.n_updates = 0
+
+    def update(self, aux: Dict) -> None:
+        seen = False
+        for key in STAT_KEYS:
+            stats = aux.get(key)
+            if not stats:
+                continue
+            seen = True
+            live = np.asarray(stats["frac_tiles_live"],
+                              np.float64).reshape(-1)
+            L = live.shape[0]
+            if key not in self.hist:
+                self.hist[key] = np.zeros((L, self.n_bins), np.int64)
+                self.sums[key] = {
+                    "frac_computed": np.zeros(L),
+                    "frac_tiles_live": np.zeros(L),
+                    "frac_tiles_computed": np.zeros(L),
+                    "frac_mispredicted_zero": np.zeros(L),
+                }
+            bins = np.clip((live * self.n_bins).astype(np.int64), 0,
+                           self.n_bins - 1)
+            self.hist[key][np.arange(L), bins] += 1
+            for name, acc in self.sums[key].items():
+                if name in stats:
+                    acc += np.asarray(stats[name], np.float64).reshape(-1)
+        if seen:
+            self.n_updates += 1
+
+    def liveness_quantile(self, q: float) -> Dict[str, np.ndarray]:
+        """Per layer, the smallest bin upper edge whose cumulative mass
+        reaches ``q`` — the live-tile fraction demanded by a q-fraction
+        of observed dispatches."""
+        out = {}
+        for key, h in self.hist.items():
+            cdf = np.cumsum(h, axis=1) / np.maximum(h.sum(1, keepdims=True),
+                                                    1)
+            idx = np.argmax(cdf >= q, axis=1)
+            out[key] = (idx + 1) / self.n_bins
+        return out
+
+    def summary(self) -> Dict:
+        out: Dict = {"n_dispatches": self.n_updates}
+        for key, sums in self.sums.items():
+            n = max(self.n_updates, 1)
+            out[key] = {name: (acc / n).tolist()
+                        for name, acc in sums.items()}
+        return out
+
+
+def calibrate_capacity(tel: ServingTelemetry, *, quantile: float = 0.95,
+                       floor: float = 0.05,
+                       headroom: float = 0.0) -> Dict[str, np.ndarray]:
+    """Liveness-quantile capacity calibration: per layer, provision the
+    gather_matmul capacity at the ``quantile`` of the observed live-tile
+    fraction (+ optional headroom), floored so a layer is never starved.
+    Returns {mor stat group -> (L,) capacity fractions in (0, 1]}."""
+    assert tel.n_updates > 0, "calibrate_capacity needs serving telemetry"
+    caps = {}
+    for key, q in tel.liveness_quantile(quantile).items():
+        caps[key] = np.clip(q + headroom, floor, 1.0)
+    return caps

@@ -68,6 +68,33 @@ def test_gather_matmul_capacity(capacity_frac):
                                rtol=2e-5, atol=2e-4)
 
 
+def test_gather_and_masked_matmul_liveness_counts():
+    """The telemetry-facing count outputs: n_live = mask sum; n_computed
+    clamps to the static capacity AND the traced cap_live budget."""
+    M, K, N = 32, 128, 512
+    tm, tn = 8, 128
+    x = jnp.asarray(RNG.normal(size=(M, K)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(K, N)), jnp.float32)
+    nm, nn = M // tm, N // tn
+    mask = jnp.asarray(RNG.random((nm, nn)) > 0.4)
+    n_mask = int(np.asarray(mask).sum())
+    out, n_live, n_comp = ops.gather_matmul(x, w, mask, tile_m=tm,
+                                            tile_n=tn, with_counts=True)
+    assert int(n_live) == n_mask and int(n_comp) == n_mask
+    # traced per-layer budget clamps the computed count, not the demand
+    out2, n_live2, n_comp2 = ops.gather_matmul(
+        x, w, mask, tile_m=tm, tile_n=tn,
+        capacity_frac_live=jnp.asarray(0.25, jnp.float32),
+        with_counts=True)
+    assert int(n_live2) == n_mask
+    assert int(n_comp2) == min(n_mask, max(1, int(np.ceil(0.25 * nm * nn))))
+    out3, n_live3 = ops.masked_matmul(x, w, mask, tile_m=tm, tile_n=tn,
+                                      with_counts=True)
+    assert int(n_live3) == n_mask
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out3),
+                               rtol=2e-5, atol=2e-4)
+
+
 def test_gather_matmul_all_live_fully_dense():
     M, K, N = 16, 64, 256
     x = jnp.asarray(RNG.normal(size=(M, K)), jnp.float32)
@@ -94,6 +121,70 @@ def test_fused_mor_tile_mask(shape):
     want = ref.mor_tile_mask_ref(x, w, mor["m"], mor["b"], mor["bn_scale"],
                                  mor["bn_bias"], mor["enable"], pn, 8, 128)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("shape", [(16, 128, 256), (40, 96, 384)])
+def test_fused_mor_tile_mask_residual(shape):
+    """The 6th coef row: a per-element residual input shifts the fitted
+    line inside the fused kernel (matching hybrid_predict's residual
+    handling) — kernel-mode masks with residual inputs no longer fall
+    back to the jnp predictor."""
+    M, K, N = shape
+    x = jnp.asarray(RNG.normal(size=(M, K)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(K, N)), jnp.float32)
+    mor = make_identity_layer(N)
+    mor["enable"] = jnp.asarray(RNG.random(N) > 0.3)
+    mor["m"] = jnp.asarray(RNG.normal(1, 0.3, N), jnp.float32)
+    mor["b"] = jnp.asarray(RNG.normal(0, 2, N), jnp.float32)
+    mor["bn_scale"] = jnp.asarray(RNG.gamma(2, 1, N), jnp.float32)
+    mor["bn_bias"] = jnp.asarray(RNG.normal(0, 1, N), jnp.float32)
+    pn = jnp.asarray(RNG.random((M, N)) > 0.4)
+    res = jnp.asarray(RNG.normal(0, 3, (M, N)), jnp.float32)
+    got = ops.mor_tile_mask(x, w, mor, pn, residual=res, tile_m=8,
+                            tile_n=128)
+    want = ref.mor_tile_mask_ref(x, w, mor["m"], mor["b"], mor["bn_scale"],
+                                 mor["bn_bias"], mor["enable"], pn, 8, 128,
+                                 residual=res)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # a dominating negative residual must kill every tile the proxy +
+    # rookie agree on (here: all of them) — proving the input is wired
+    mor2 = dict(mor)
+    mor2["enable"] = jnp.ones((N,), bool)
+    kill = jnp.full((M, N), -1e6, jnp.float32)
+    dead = ops.mor_tile_mask(x, w, mor2, jnp.ones((M, N), bool),
+                             residual=kill, tile_m=8, tile_n=128)
+    assert not np.any(np.asarray(dead))
+
+
+def test_executor_kernel_mode_residual_uses_fused_predictor(monkeypatch):
+    """ROADMAP follow-up closed: mode='kernel' with a residual input must
+    route through the fused kernel, never the jnp hybrid_predict."""
+    import repro.core.executor as executor
+    from repro.core.masked_ffn import mor_relu_matmul
+    from repro.core.policy import build_mor_layer
+    from repro.configs.base import MoRConfig
+    K, N, T = 64, 256, 32
+    w = RNG.normal(size=(K, N)).astype(np.float32)
+    xs = RNG.normal(size=(T, K)).astype(np.float32)
+    m = np.ones(N, np.float32)
+    b = np.zeros(N, np.float32)
+    c = np.full(N, 0.9, np.float32)
+    mor = build_mor_layer(m, b, c, None, MoRConfig(corr_threshold=0.5))
+    res = jnp.asarray(RNG.normal(size=(T, N)), jnp.float32)
+
+    def _boom(*a, **k):
+        raise AssertionError("jnp hybrid_predict called in kernel mode "
+                             "with residual")
+    monkeypatch.setattr(executor, "hybrid_predict", _boom)
+    y, st = mor_relu_matmul(jnp.asarray(xs), jnp.asarray(w), mor,
+                            activation="relu", mode="kernel", residual=res)
+    assert np.isfinite(np.asarray(y)).all()
+    # tiled oracle agrees on the outputs
+    monkeypatch.undo()
+    y_t, _ = mor_relu_matmul(jnp.asarray(xs), jnp.asarray(w), mor,
+                             activation="relu", mode="tiled", residual=res)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_t),
+                               rtol=2e-4, atol=2e-3)
 
 
 @pytest.mark.parametrize("shape", [(16, 128, 256), (32, 512, 384)])
