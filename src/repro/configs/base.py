@@ -113,6 +113,12 @@ class ModelConfig:
     # --- serving (repro.serving continuous-batching engine) ---
     serve_chunk: int = 32           # chunked-prefill chunk length; also the
                                     # kv ring-buffer margin above the window
+    serve_expert_capacity: float = 1.0
+    # serving-shape-aware MoE expert capacity: serving dispatches (the
+    # token_mask path) provision each expert for C = this * T tokens of
+    # the dispatch itself.  1.0 is lossless (a token claims at most one
+    # slot per expert), so chunked prefill matches teacher-forced logits
+    # exactly; 0 restores the training-style cf*T*k/E budget.
 
     # --- numerics / training ---
     dtype: str = "bfloat16"

@@ -51,6 +51,26 @@ def attach_plans(mor, cfg: ModelConfig, mode: str,
     def wrap(layer, caps=None):
         if layer is None:
             return None
+        if isinstance(layer, dict) and "experts" in layer:
+            # expert-MoR group ({"experts": (L, E)-stacked MoRLayer}):
+            # the plan wraps the stack whole; calibrated capacities come
+            # back flat from the per-(layer, expert) telemetry and fold
+            # to the stack's leading dims, so each scan step sees an
+            # (E,)-row of per-expert budgets
+            inner = layer["experts"]
+            if isinstance(inner, MoRExecutionPlan):
+                inner = inner.mor
+            if inner is None:
+                return {"experts": None}
+            cap_live = None
+            if caps is not None:
+                cap_live = jnp.asarray(caps, jnp.float32)
+                if cap_live.ndim > 0:
+                    cap_live = cap_live.reshape(inner["m"].shape[:-1])
+            return {"experts": MoRExecutionPlan(
+                inner, mode=mode, tile_m=cfg.mor.tile_m,
+                tile_n=cfg.mor.tile_n, capacity_frac=cfg.mor.capacity,
+                cap_live=cap_live)}
         cap_live = None
         if caps is not None:
             cap_live = jnp.asarray(caps, jnp.float32)
@@ -155,6 +175,164 @@ def calibrate_lm(params: Dict, cfg: ModelConfig, forward: Callable,
         "enabled_frac": float(np.asarray(mor_stack["enable"]).mean()),
     }
     return new_params, {layer_key: mor_stack}, report
+
+
+def calibrate_moe(params: Dict, cfg: ModelConfig, forward: Callable,
+                  batches: Iterator[Dict], n_batches: int, *,
+                  cluster_experts: bool = True,
+                  inject_dead_frac: float = 0.0,
+                  inject_scale: float = 4.0) -> Tuple[Dict, Dict, Dict]:
+    """Calibrate a scan-stacked MoE LM end to end.
+
+    The leading dense layers get the ``calibrate_lm`` treatment
+    (regression + clustering + permutation folded into the mlp weights);
+    every (layer, expert) FFN additionally gets its own hybrid predictor
+    fitted from routing-independent taps (``moe_taps``: each expert is
+    evaluated over the FULL token stream its dispatch subsamples, so all
+    E regressions share one forward pass per batch).
+
+    ``cluster_experts=False`` builds binary-rookie-only expert layers
+    (identity permutation, no proxies) — no per-expert weight
+    permutation, at the cost of the spatial predictor.
+
+    ``inject_dead_frac`` > 0 emulates a trained model's column-skewed
+    ReLU sparsity (paper Fig. 1: real DNNs zero 50-90% of ReLU outputs,
+    concentrated in persistently-dead neurons) on a random-init model:
+    the trailing fraction of each expert's (permuted) columns gets a
+    folded bias of ``-inject_scale`` observed pre-activation sigmas.
+    The bias is part of the deployed model (bn_bias — exact mode zeroes
+    the same neurons), so predictor and truth agree; benchmark scenarios
+    use it to exercise tile skipping end to end, since random-init
+    weights have no structured sparsity (measured frac_tiles_live = 1.0).
+
+    -> (params with permuted weights,
+        {"dense_layers"?: stacked MoRLayer,
+         "moe_layers": {"experts": (L_moe, E)-stacked MoRLayer}},
+        report)."""
+    assert cfg.family == "moe"
+    L_d = cfg.first_k_dense
+    L_m = cfg.n_layers - L_d
+    E = cfg.n_experts
+    f = cfg.moe_d_ff or cfg.d_ff
+
+    acc_e = jax.vmap(jax.vmap(lambda _: init_accumulator(f)))(
+        jnp.zeros((L_m, E)))
+    upd_e = jax.jit(jax.vmap(jax.vmap(update_accumulator)))
+    acc_d = None
+    if L_d:
+        N_d = params["dense_layers"]["mlp"].get(
+            "w_gate", params["dense_layers"]["mlp"]["w_up"]).shape[-1]
+        acc_d = jax.vmap(lambda _: init_accumulator(N_d))(jnp.arange(L_d))
+        upd_d = jax.jit(jax.vmap(update_accumulator))
+    fwd = jax.jit(lambda p, b: forward(p, cfg, b, with_taps=True)[1])
+    seen = 0
+    for batch in batches:
+        aux = fwd(params, batch)
+        taps = aux["taps"]                        # (L_m, E, T, f)
+        acc_e = upd_e(acc_e, taps["p_bin"], taps["p_base"])
+        if L_d:
+            acc_d = upd_d(acc_d, aux["dense_taps"]["p_bin"],
+                          aux["dense_taps"]["p_base"])
+        seen += 1
+        if seen >= n_batches:
+            break
+    m, b, c = jax.vmap(jax.vmap(finalize_regression))(acc_e)
+    m, b, c = np.asarray(m), np.asarray(b), np.asarray(c)
+    # observed per-column base pre-activation sigma (for injection)
+    n = np.maximum(np.asarray(acc_e["count"]), 1.0)[..., None]
+    sig = np.sqrt(np.maximum(
+        np.asarray(acc_e["syy"]) / n
+        - (np.asarray(acc_e["sy"]) / n) ** 2, 0.0))
+
+    new_params = jax.tree_util.tree_map(lambda x: x, params)  # shallow copy
+    mp = dict(params["moe_layers"])
+    moe_p = dict(mp["moe"])
+    glu = "w_gate" in moe_p
+    w_np = np.asarray(moe_p.get("w_gate", moe_p["w_up"]), np.float32)
+    tn = min(cfg.mor.tile_n, f)
+    n_dead = 0
+    if inject_dead_frac > 0:
+        # whole trailing column-tiles so deadness is tile-resolvable
+        n_dead = max(int(inject_dead_frac * f) // tn * tn, tn)
+        n_dead = min(n_dead, f - tn)              # keep a live leading tile
+
+    w_gate_new = np.array(moe_p["w_gate"], np.float32) if glu else None
+    w_up_new = np.array(moe_p["w_up"], np.float32)
+    w_down_new = np.array(moe_p["w_down"], np.float32)
+    layer_stacks = []
+    for l in range(L_m):
+        per_expert = []
+        for e in range(E):
+            cl = (cluster_layer(w_np[l, e], cfg.mor.max_cluster_angle)
+                  if cluster_experts else None)
+            ml = build_mor_layer(m[l, e], b[l, e], c[l, e], cl, cfg.mor)
+            perm = np.asarray(ml["perm"])
+            if cluster_experts:
+                if glu:
+                    w_gate_new[l, e] = w_gate_new[l, e][:, perm]
+                w_up_new[l, e] = w_up_new[l, e][:, perm]
+                w_down_new[l, e] = w_down_new[l, e][perm, :]
+            if n_dead:
+                bias = np.asarray(ml["bn_bias"]).copy()
+                bias[f - n_dead:] -= inject_scale * sig[l, e][perm][
+                    f - n_dead:]
+                ml["bn_bias"] = jnp.asarray(bias, jnp.float32)
+                # a column whose folded bias exceeds its dynamic range is
+                # statically dead — enabling its rookie is always safe
+                en = np.asarray(ml["enable"]).copy()
+                en[f - n_dead:] = True
+                ml["enable"] = jnp.asarray(en)
+            per_expert.append(ml)
+        layer_stacks.append(_stack_mor(per_expert))
+    experts_stack = _stack_mor(layer_stacks)      # leaves (L_m, E, ...)
+    if cluster_experts or n_dead:
+        if glu:
+            moe_p["w_gate"] = jnp.asarray(w_gate_new)
+        moe_p["w_up"] = jnp.asarray(w_up_new)
+        moe_p["w_down"] = jnp.asarray(w_down_new)
+        mp["moe"] = moe_p
+        new_params["moe_layers"] = mp
+
+    mor: Dict = {"moe_layers": {"experts": experts_stack}}
+    report = {
+        "pearson_mean": float(c.mean()),
+        "pearson_frac_above_T": float((c > cfg.mor.corr_threshold).mean()),
+        "enabled_frac": float(np.asarray(experts_stack["enable"]).mean()),
+        "injected_dead_cols": int(n_dead),
+    }
+
+    if L_d:
+        md, bd, cd = jax.vmap(finalize_regression)(acc_d)
+        md, bd, cd = np.asarray(md), np.asarray(bd), np.asarray(cd)
+        lp = params["dense_layers"]
+        wd_np = np.asarray(lp["mlp"].get("w_gate", lp["mlp"]["w_up"]),
+                           np.float32)
+        dense_layers = []
+        for l in range(L_d):
+            cl = cluster_layer(wd_np[l], cfg.mor.max_cluster_angle)
+            dense_layers.append(build_mor_layer(md[l], bd[l], cd[l], cl,
+                                                cfg.mor))
+        dense_stack = _stack_mor(dense_layers)
+        perm = np.asarray(dense_stack["perm"])
+
+        def permute_stack(w, axis):
+            w = np.asarray(w)
+            out = np.empty_like(w)
+            for l in range(L_d):
+                out[l] = np.take(w[l], perm[l], axis=axis - 1)
+            return jnp.asarray(out)
+
+        mlp = dict(lp["mlp"])
+        if "w_gate" in mlp:
+            mlp["w_gate"] = permute_stack(mlp["w_gate"], 2)
+        mlp["w_up"] = permute_stack(mlp["w_up"], 2)
+        mlp["w_down"] = permute_stack(mlp["w_down"], 1)
+        new_lp = dict(lp)
+        new_lp["mlp"] = mlp
+        new_params["dense_layers"] = new_lp
+        mor["dense_layers"] = dense_stack
+        report["dense_pearson_mean"] = float(cd.mean())
+    return new_params, mor, report
 
 
 def calibrate_cnn(params: Dict, state: Dict, cfg: ModelConfig,

@@ -163,13 +163,22 @@ class MoRExecutionPlan:
     # -- the single predictor pass -----------------------------------------
     def predict(self, x: jax.Array, w: jax.Array, *,
                 preact_full: Optional[jax.Array] = None,
-                residual: Optional[jax.Array] = None) -> MoRPrediction:
+                residual: Optional[jax.Array] = None,
+                row_mask: Optional[jax.Array] = None) -> MoRPrediction:
         """Run the hybrid predictor exactly once -> MoRPrediction.
 
         ``kernel`` mode routes through the fused Pallas
         ``kernels.ops.mor_tile_mask`` (binary rookie + fitted line +
         proxy AND + tile reduction in one pass over the activations);
         every other mode uses the pure-jnp ``hybrid_predict`` oracle.
+
+        ``row_mask`` (optional (T,) bool, True = real row) force-skips
+        dead input rows: MoE expert buffers are capacity-padded with the
+        zero row, and without the mask those rows can mark tiles live
+        (the fitted intercept alone may predict non-zero at x = 0) and
+        pollute the per-expert liveness telemetry the capacity
+        calibration reads.  Masked rows use the kernel's forced-skip
+        sentinel (proxy state 2), the same mechanism as shape padding.
         """
         assert self.active, "predict() on an inactive plan"
         mor = self.mor
@@ -189,17 +198,22 @@ class MoRExecutionPlan:
                 proxy_relu_in = proxy_relu_in + jnp.take(
                     residual.astype(jnp.float32), slot, axis=-1)
             proxy_neg = (proxy_relu_in < 0.0) | (mor["proxy_slot"] < 0)
+            pn = proxy_neg.astype(jnp.int8)
+            if row_mask is not None:
+                pn = jnp.where(row_mask[:, None], pn, jnp.int8(2))
             # proxies themselves are always computed: fold ~is_proxy into
             # the kernel's enable row
             mor_eff = dict(mor)
             mor_eff["enable"] = mor["enable"] & ~mor["is_proxy"]
-            tiles = kops.mor_tile_mask(x, w, mor_eff, proxy_neg,
+            tiles = kops.mor_tile_mask(x, w, mor_eff, pn,
                                        residual=residual,
                                        tile_m=self.tile_m, tile_n=self.tile_n)
             return MoRPrediction(None, tiles,
                                  kept=self._capacity_clip(tiles))
         computed = hybrid_predict(x, w, mor, preact_full=preact_full,
                                   residual=residual)
+        if row_mask is not None:
+            computed = computed & row_mask[..., None]
         tiles = tile_mask_from_neuron_mask(
             computed.reshape(-1, computed.shape[-1]), self.tile_m, self.tile_n)
         kept = (self._capacity_clip(tiles)
@@ -277,7 +291,8 @@ class MoRExecutionPlan:
         return y, stats
 
     def _relu_matmul_pred(self, x, w, *, activation: str,
-                          residual: Optional[jax.Array] = None):
+                          residual: Optional[jax.Array] = None,
+                          row_mask: Optional[jax.Array] = None):
         """relu_matmul that also returns the MoRPrediction for reuse
         (the GLU path threads it into the up/down projections)."""
         T, N = x.shape[0], w.shape[1]
@@ -293,17 +308,20 @@ class MoRExecutionPlan:
             pre_bn = pre * mor["bn_scale"] + mor["bn_bias"]
             if residual is not None:
                 pre_bn = pre_bn + residual
-            pred = self.predict(x, w, preact_full=pre, residual=residual)
+            pred = self.predict(x, w, preact_full=pre, residual=residual,
+                                row_mask=row_mask)
             y = jnp.where(pred.computed, _act(pre_bn, activation),
                           0.0).astype(x.dtype)
             truly_nonzero = pre_bn > 0
+            if row_mask is not None:
+                truly_nonzero = truly_nonzero & row_mask[:, None]
             stats = pred.stats()
             stats["frac_mispredicted_zero"] = (
                 ~pred.computed & truly_nonzero).mean(dtype=jnp.float32)
             return y, pred, stats
 
         # tiled / kernel: one predictor pass -> tile mask -> masked matmul
-        pred = self.predict(x, w, residual=residual)
+        pred = self.predict(x, w, residual=residual, row_mask=row_mask)
         pre = self.masked_matmul(x, w, pred)
         pre_bn = pre * mor["bn_scale"] + mor["bn_bias"]
         if residual is not None:
@@ -314,6 +332,7 @@ class MoRExecutionPlan:
 
     def ffn(self, x: jax.Array, w_up: jax.Array, w_down: jax.Array, *,
             activation: str, w_gate: Optional[jax.Array] = None,
+            row_mask: Optional[jax.Array] = None,
             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
         """Full FFN with MoR on the ReLU pre-activation.
 
@@ -325,7 +344,8 @@ class MoRExecutionPlan:
         """
         if w_gate is not None:
             g, pred, stats = self._relu_matmul_pred(x, w_gate,
-                                                    activation=activation)
+                                                    activation=activation,
+                                                    row_mask=row_mask)
             if pred is not None and self.mode in ("tiled", "kernel"):
                 u = self.masked_matmul(x, w_up, pred).astype(x.dtype)
             else:
@@ -335,8 +355,53 @@ class MoRExecutionPlan:
             h = (g * u).astype(x.dtype)
         else:
             h, pred, stats = self._relu_matmul_pred(x, w_up,
-                                                    activation=activation)
+                                                    activation=activation,
+                                                    row_mask=row_mask)
         return self.down_matmul(h, w_down, pred), stats
+
+    # -- batched-expert form (MoE): leading E axis on everything -----------
+    def expert_ffn(self, eb: jax.Array, w_up: jax.Array, w_down: jax.Array,
+                   *, activation: str, w_gate: Optional[jax.Array] = None,
+                   row_mask: Optional[jax.Array] = None,
+                   ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """``ffn`` over a stack of experts: eb (E, C, d), weights
+        (E, d, f) / (E, f, d), ``self.mor`` an (E,)-stacked MoRLayer and
+        ``self.cap_live`` an optional scalar-or-(E,) calibrated budget.
+
+        The per-expert plan (identical static config, per-expert leaves)
+        runs under ``jax.vmap``, so the fused ``mor_tile_mask`` /
+        ``gather_matmul`` Pallas kernels trace ONCE and batch over the
+        expert grid — on TPU the batching rule prepends the expert axis
+        to the kernel grid, giving per-expert DMA skipping with
+        per-expert ``cap_live`` clamps from one compiled body.
+
+        ``row_mask`` (E, C) marks the rows of each expert's capacity
+        buffer that hold real routed tokens; padding rows are force-
+        skipped (see ``predict``).  Returns (out (E, C, d), stats with
+        (E,)-shaped realised skip fractions — the per-(layer, expert)
+        telemetry feed)."""
+        assert self.active, "expert_ffn() on an inactive plan"
+        mode, tm, tn = self.mode, self.tile_m, self.tile_n
+        cf = self.capacity_frac
+        operands = {"x": eb, "w_up": w_up, "w_down": w_down,
+                    "mor": self.mor}
+        if w_gate is not None:
+            operands["w_gate"] = w_gate
+        if row_mask is not None:
+            operands["row_mask"] = row_mask
+        if self.cap_live is not None:
+            operands["cap"] = jnp.broadcast_to(
+                jnp.asarray(self.cap_live, jnp.float32), (eb.shape[0],))
+
+        def one(o):
+            plan = MoRExecutionPlan(o["mor"], mode=mode, tile_m=tm,
+                                    tile_n=tn, capacity_frac=cf,
+                                    cap_live=o.get("cap"))
+            return plan.ffn(o["x"], o["w_up"], o["w_down"],
+                            activation=activation, w_gate=o.get("w_gate"),
+                            row_mask=o.get("row_mask"))
+
+        return jax.vmap(one)(operands)
 
 
 def as_plan(mor, *, mode: str = "dense", tile_m: int = 8, tile_n: int = 128,
@@ -355,6 +420,27 @@ def as_plan(mor, *, mode: str = "dense", tile_m: int = 8, tile_n: int = 128,
         mor = None
     return MoRExecutionPlan(mor, mode=mode if mor is not None else "dense",
                             tile_m=tile_m, tile_n=tile_n,
+                            capacity_frac=capacity_frac)
+
+
+def as_expert_plan(em, *, mode: str = "dense", tile_m: int = 8,
+                   tile_n: int = 128, capacity_frac: float = 1.0
+                   ) -> MoRExecutionPlan:
+    """Coerce an expert-MoR entry (``mor["experts"]``: an attached plan,
+    an (E,)-stacked MoRLayer pytree, or None) into an execution plan for
+    ``expert_ffn``.
+
+    An attached plan's own mode/tiling/budget is authoritative (it was
+    wired offline by ``deploy.attach_plans``, possibly with calibrated
+    per-(layer, expert) ``cap_live``); a bare stacked MoRLayer gets the
+    caller's knobs — exactly the contract dense FFNs get from
+    ``as_plan``, so ``mode="dense"`` deactivates the predictor outright
+    instead of silently forcing exact mode."""
+    if isinstance(em, MoRExecutionPlan):
+        return em
+    if em is None or not _looks_like_mor_layer(em):
+        return MoRExecutionPlan(None)
+    return MoRExecutionPlan(em, mode=mode, tile_m=tile_m, tile_n=tile_n,
                             capacity_frac=capacity_frac)
 
 

@@ -13,6 +13,13 @@ Slot layout of the prefetch array ``meta``:
   meta[1 + s]        = flattened tile id (i * n_tiles_n + j) for slot s;
                        padded slots repeat a designated dead tile (whose
                        correct output is zero) or tile 0 when fully live.
+
+Batched-expert contract (MoE): the kernel composes with ``jax.vmap`` —
+the batching rule prepends the expert axis to the grid, so E experts'
+(x, w, tile_mask, cap_live) stacks run as one expert-grid kernel with
+per-expert slot lists and per-expert traced ``cap_live`` clamps.  This
+is how ``MoRExecutionPlan.expert_ffn`` executes kernel-mode expert FFNs
+(oracle: ``ref.expert_gather_matmul_ref``).
 """
 from __future__ import annotations
 

@@ -14,6 +14,14 @@ make the input a no-op) — per-element residual inputs (paper §3.2.1:
 "the residual input is added") cannot ride in a per-column table, so
 they arrive as a second VMEM input with the same block tiling as the
 proxy verdicts.
+
+The ``proxy_neg`` input is tri-state int8: 0/1 = the proxy rookie's
+verdict, 2 = forced skip.  State 2 marks both shape padding AND (in the
+batched-expert MoE path) capacity-buffer rows holding the zero pad row
+— without it the fitted intercept alone can mark pad rows live.  Like
+``gather_matmul``, the kernel composes with ``jax.vmap`` over a leading
+expert axis (x/w/coef/proxy_neg all (E, ...)-stacked): one trace, one
+expert-grid kernel for every expert's predictor pass.
 """
 from __future__ import annotations
 

@@ -146,10 +146,12 @@ def mor_tile_mask(x: jax.Array, w_perm: jax.Array, mor, proxy_neg: jax.Array,
                   *, residual=None, tile_m: int = 8, tile_n: int = 128,
                   bk: int = 512) -> jax.Array:
     """Fused predictor: build the (6, N) coef table from a MoRLayer and
-    run the fused kernel.  proxy_neg: (M, N) bool.  ``residual``:
-    optional (M, N) per-element ReLU-input residual — enabled through
-    the coef table's 6th row (res_scale = 1), so kernel-mode masks with
-    a residual input no longer fall back to the jnp predictor.
+    run the fused kernel.  proxy_neg: (M, N) bool or tri-state int8
+    (0/1 = proxy verdict, 2 = forced skip, e.g. MoE capacity-pad rows).
+    ``residual``: optional (M, N) per-element ReLU-input residual —
+    enabled through the coef table's 6th row (res_scale = 1), so
+    kernel-mode masks with a residual input no longer fall back to the
+    jnp predictor.
 
     Counts as ONE predictor evaluation (same counter as the jnp
     ``hybrid_predict`` oracle — the MoRExecutionPlan once-per-forward

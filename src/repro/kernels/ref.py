@@ -41,6 +41,38 @@ def gather_matmul_ref(x: jax.Array, w: jax.Array, tile_mask: jax.Array,
     return masked_matmul_ref(x, w, kept, tile_m, tile_n)
 
 
+def gather_matmul_cap_ref(x: jax.Array, w: jax.Array, tile_mask: jax.Array,
+                          tile_m: int, tile_n: int, capacity: int,
+                          cap_live=None) -> jax.Array:
+    """``gather_matmul_ref`` with the traced ``cap_live`` clamp applied
+    under the static ``capacity`` — the oracle for the per-(layer,
+    expert) calibrated budgets."""
+    cap = jnp.asarray(capacity, jnp.int32)
+    if cap_live is not None:
+        cap = jnp.minimum(cap, jnp.maximum(
+            jnp.asarray(cap_live, jnp.int32), 1))
+    flat = tile_mask.astype(bool).reshape(-1)
+    live_rank = jnp.cumsum(flat) - 1
+    kept = (flat & (live_rank < cap)).reshape(tile_mask.shape)
+    return masked_matmul_ref(x, w, kept, tile_m, tile_n)
+
+
+def expert_gather_matmul_ref(x: jax.Array, w: jax.Array,
+                             tile_mask: jax.Array, tile_m: int, tile_n: int,
+                             capacity: int, cap_live=None) -> jax.Array:
+    """Batched-expert oracle: x (E, M, K), w (E, K, N), tile_mask
+    (E, nm, nn), optional per-expert cap_live (E,).  vmap of the
+    single-expert reference — the allclose target for the expert-grid
+    Pallas path (``MoRExecutionPlan.expert_ffn`` in kernel mode)."""
+    def one(xe, we, me, ce):
+        return gather_matmul_cap_ref(xe, we, me, tile_m, tile_n, capacity,
+                                     cap_live=ce)
+    caps = (jnp.broadcast_to(jnp.asarray(cap_live, jnp.int32), x.shape[:1])
+            if cap_live is not None
+            else jnp.full(x.shape[:1], capacity, jnp.int32))
+    return jax.vmap(one)(x, w, tile_mask, caps)
+
+
 def masked_matmul_kdim_ref(x: jax.Array, w: jax.Array,
                            tile_mask: jax.Array, tile_m: int, tile_k: int
                            ) -> jax.Array:

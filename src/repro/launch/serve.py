@@ -85,8 +85,17 @@ def generate(cfg, api, params, prompts, gen_len: int, mor=None,
     return toks, stats
 
 
+# report-key prefix per stat group: the dense-stack stats keep the
+# historical per_layer_* names; expert stats ((L, E)-shaped) get their
+# own namespace so groups never overwrite each other in the report
+_STAT_PREFIX = {"mor_stats": "per_layer_",
+                "dense_mor_stats": "per_layer_dense_",
+                "moe_mor_stats": "per_expert_"}
+
+
 def _mean_layer_stats(aux_list):
-    """Average per-layer MoR skip stats over dispatches -> report lists."""
+    """Average per-layer MoR skip stats over dispatches -> report lists
+    (nested (L, E) lists for the expert group)."""
     out = {}
     for key in STAT_KEYS:
         rows = [a[key] for a in aux_list if a.get(key)]
@@ -94,10 +103,11 @@ def _mean_layer_stats(aux_list):
             continue
         for name in ("frac_computed", "frac_tiles_live",
                      "frac_tiles_computed"):
-            vals = [np.asarray(r[name], np.float64).reshape(-1)
-                    for r in rows if name in r]
+            vals = [np.asarray(r[name], np.float64) for r in rows
+                    if name in r]
             if vals:
-                out[f"per_layer_{name}"] = np.mean(vals, 0).round(4).tolist()
+                out[_STAT_PREFIX[key] + name] = \
+                    np.mean(vals, 0).round(4).tolist()
     return out
 
 
@@ -152,8 +162,8 @@ def _run_engine(cfg, params, reqs, *, mor, mor_mode, n_slots, max_len,
                 for name, vals in tel[key].items():
                     if name in ("frac_computed", "frac_tiles_live",
                                 "frac_tiles_computed"):
-                        rep[f"per_layer_{name}"] = \
-                            np.round(vals, 4).tolist()
+                        rep[_STAT_PREFIX[key] + name] = \
+                            np.round(np.asarray(vals), 4).tolist()
     return eng, results, rep
 
 
@@ -211,7 +221,7 @@ def main(argv=None):
     mor = None
     report = {"arch": cfg.name, "mor_mode": args.mor}
     if args.mor != "dense":
-        from repro.core.deploy import calibrate_lm
+        from repro.core.deploy import calibrate_lm, calibrate_moe
 
         def batches():
             s = 0
@@ -220,8 +230,14 @@ def main(argv=None):
                                        seed=args.seed, step=s)
                 yield {"tokens": jnp.asarray(b["tokens"])}
                 s += 1
-        params, mor, cal = calibrate_lm(params, cfg, api.forward, batches(),
-                                        args.calib_steps)
+        if cfg.family == "moe":
+            # per-(layer, expert) predictors for the expert FFNs plus the
+            # calibrate_lm treatment for any leading dense layers
+            params, mor, cal = calibrate_moe(params, cfg, api.forward,
+                                             batches(), args.calib_steps)
+        else:
+            params, mor, cal = calibrate_lm(params, cfg, api.forward,
+                                            batches(), args.calib_steps)
         report["calibration"] = cal
 
     pmin = args.prompt_min or args.prompt_len

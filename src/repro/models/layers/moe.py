@@ -4,9 +4,18 @@ shared experts (DeepSeek-V2 style), load-balancing auxiliary loss.
 
 Expert weights are (E, d, f) so they shard as EP (expert dim over "model")
 or TP (f over "model") per ``cfg.expert_sharding``.
+
+Expert-level MoR runs every execution mode (exact / tiled / kernel)
+through one batched-expert plan per layer (``executor.expert_ffn``):
+per-(layer, expert) predictors, per-expert calibrated capacity clamps,
+and (E,)-shaped skip stats in aux["mor_stats"] for the serving
+telemetry.  Serving dispatches (the ``token_mask`` path) provision
+expert capacity from the dispatch shape (``cfg.serve_expert_capacity``)
+so chunked prefill never drops a valid token.
 """
 from __future__ import annotations
 
+import math
 from typing import Dict, Tuple
 
 import jax
@@ -53,14 +62,19 @@ def _dispatch_indices(top_idx: jnp.ndarray, E: int, C: int):
     counts = jnp.bincount(flat, length=E)               # tokens per expert
     starts = jnp.cumsum(counts) - counts
     pos_in_e = jnp.arange(T * k) - starts[sorted_e]     # rank within expert
-    keep = pos_in_e < C
+    # sentinel pairs (expert id >= E: masked tokens) must land EXACTLY on
+    # the E*C drop slot — without the explicit check their rank offset
+    # (computed against the clamped starts[E-1]) leaks past E*C and the
+    # combine gather only behaves by virtue of jax's clamp semantics
+    keep = (pos_in_e < C) & (sorted_e < E)
     slot_sorted = jnp.where(keep, sorted_e * C + pos_in_e, E * C)
     slot = jnp.zeros((T * k,), jnp.int32).at[order].set(
         slot_sorted.astype(jnp.int32))
     return slot.reshape(T, k)
 
 
-def moe_apply_a2a(params: Dict, cfg: ModelConfig, x) -> Tuple:
+def moe_apply_a2a(params: Dict, cfg: ModelConfig, x, *,
+                  mor=None, mor_mode: str = "dense") -> Tuple:
     """Expert-parallel MoE in shard_map ("expert slicing"): tokens are
     dp-sharded and REPLICATED over the model axis (which SP layouts give
     us anyway at the FFN boundary); experts are model-sharded.  Each
@@ -108,9 +122,23 @@ def moe_apply_a2a(params: Dict, cfg: ModelConfig, x) -> Tuple:
     E_loc = E if mode_tp else E // MP
     dt = x.dtype
     glu = "w_gate" in params
-    act = activation_fn(effective_activation(cfg))
+    act_name = effective_activation(cfg)
+    act = activation_fn(act_name)
+    from repro.core.executor import MoRExecutionPlan, as_expert_plan
+    em = mor.get("experts") if isinstance(mor, dict) else None
+    eplan = as_expert_plan(em, mode=mor_mode, tile_m=cfg.mor.tile_m,
+                           tile_n=cfg.mor.tile_n,
+                           capacity_frac=cfg.mor.capacity)
+    # expert-level MoR rides the EP ("expert slicing") layout only: each
+    # shard holds its experts' FULL f dim, so the per-column predictor
+    # tables and proxy gathers stay local.  TP slicing splits every
+    # expert's columns across shards (proxies may live elsewhere) — the
+    # expert FFN stays dense there (ROADMAP: a2a-path limit).
+    use_mor = (eplan.active and not mode_tp
+               and act_name in ("relu", "relu2", "relu_glu"))
+    base_act = "relu" if act_name == "relu_glu" else act_name
 
-    def body(xl, router, w_up, w_gate, w_down):
+    def body(xl, router, w_up, w_gate, w_down, em_loc, cap_loc):
         # xl: (T_loc/MP?, ...) — tokens are sharded over dp ONLY, so with
         # in_spec P(dp_spec) each model shard holds the same T_loc tokens;
         # router logits are computed redundantly (cheap) and each model
@@ -133,12 +161,35 @@ def moe_apply_a2a(params: Dict, cfg: ModelConfig, x) -> Tuple:
                              (T_loc, k)).reshape(-1), mode="drop")
         xpad = jnp.concatenate([xl, jnp.zeros((1, d), dt)], 0)
         eb = jnp.take(xpad, smap[:E_loc * C_loc], 0).reshape(E_loc, C_loc, d)
-        up = jnp.einsum("ecd,edf->ecf", eb, w_up)
-        if w_gate is not None:
-            h = (act(jnp.einsum("ecd,edf->ecf", eb, w_gate)) * up).astype(dt)
+        if use_mor:
+            # per-expert MoR plans over this shard's experts: same static
+            # config as the attached plan, leaves sliced by the shard_map
+            # in_spec.  Buffer rows past an expert's routed count hold
+            # the zero pad row — force-skipped via row_mask.
+            counts = jnp.bincount(top_idx.reshape(-1), length=E)
+            cnt_loc = jax.lax.dynamic_slice(
+                counts, (jnp.asarray(e0, jnp.int32),), (E_loc,))
+            row_valid = (jnp.arange(C_loc, dtype=jnp.int32)[None, :]
+                         < jnp.minimum(cnt_loc, C_loc)[:, None])
+            plan = MoRExecutionPlan(em_loc, mode=eplan.mode,
+                                    tile_m=eplan.tile_m,
+                                    tile_n=eplan.tile_n,
+                                    capacity_frac=eplan.capacity_frac,
+                                    cap_live=cap_loc if has_cap else None)
+            # per-expert stats stay shard-local (telemetry calibrates on
+            # the serving path; this is the training/forward layout)
+            out_e, _ = plan.expert_ffn(
+                eb, w_up, w_down, activation=base_act,
+                w_gate=w_gate if glu else None, row_mask=row_valid)
+            out_e = out_e.astype(dt)                     # (E_loc, C_loc, d)
         else:
-            h = act(up).astype(dt)
-        out_e = jnp.einsum("ecf,efd->ecd", h, w_down)    # (E_loc, C_loc, d)
+            up = jnp.einsum("ecd,edf->ecf", eb, w_up)
+            if glu:
+                h = (act(jnp.einsum("ecd,edf->ecf", eb, w_gate))
+                     * up).astype(dt)
+            else:
+                h = act(up).astype(dt)
+            out_e = jnp.einsum("ecf,efd->ecd", h, w_down)  # (E_loc, C_loc, d)
         out_flat = jnp.concatenate(
             [out_e.reshape(E_loc * C_loc, d), jnp.zeros((1, d), dt)], 0)
         # combine: each shard contributes only its experts' outputs
@@ -162,15 +213,26 @@ def moe_apply_a2a(params: Dict, cfg: ModelConfig, x) -> Tuple:
         down_spec = P(None, "model", None)
     else:
         up_spec = down_spec = P("model")
+    # expert MoR leaves ride in expert-sliced ((E, ...) over "model"),
+    # mirroring the EP weight layout; a scalar dummy otherwise.  The
+    # calibrated per-expert cap_live budget (an authoritative part of an
+    # attached plan) slices the same way.
+    em_arg = eplan.mor if use_mor else jnp.zeros((), dt)
+    em_spec = P("model") if use_mor else P()
+    has_cap = use_mor and eplan.cap_live is not None
+    cap_arg = (jnp.broadcast_to(jnp.asarray(eplan.cap_live, jnp.float32),
+                                (E,))
+               if has_cap else jnp.zeros((), dt))
+    cap_spec = P("model") if has_cap else P()
     y, lb = shard_map(
         body, mesh=mesh,
         in_specs=(P(dp_spec), P(), up_spec,
-                  up_spec if glu else P(), down_spec),
+                  up_spec if glu else P(), down_spec, em_spec, cap_spec),
         out_specs=(P(dp_spec), P()),
         check_rep=False,
     )(xf, params["router"].astype(dt), params["w_up"].astype(dt),
       gate.astype(dt) if glu else jnp.zeros((), dt),
-      params["w_down"].astype(dt))
+      params["w_down"].astype(dt), em_arg, cap_arg)
     aux = {"lb_loss": lb, "router_entropy": jnp.zeros((), jnp.float32)}
     return y.reshape(*lead, d), aux
 
@@ -188,7 +250,7 @@ def moe_apply(params: Dict, cfg: ModelConfig, x, *,
     expert's capacity buffer and displace real tokens (capacity is
     assigned by token index, earlier wins)."""
     if cfg.expert_sharding == "ep_shmap" and token_mask is None:
-        out = moe_apply_a2a(params, cfg, x)
+        out = moe_apply_a2a(params, cfg, x, mor=mor, mor_mode=mor_mode)
         if out is not None:
             y, aux = out
             if cfg.n_shared_experts:
@@ -204,8 +266,20 @@ def moe_apply(params: Dict, cfg: ModelConfig, x, *,
     T = xf.shape[0]
     E, k = cfg.n_experts, cfg.top_k
     f = cfg.moe_d_ff or cfg.d_ff
-    C = max(int(cfg.capacity_factor * T * k / E), 1)
-    act = activation_fn(effective_activation(cfg))
+    if token_mask is not None and cfg.serve_expert_capacity > 0:
+        # serving-shape-aware capacity (ROADMAP item): a serving chunk
+        # dispatch provisions each expert for the dispatch shape itself.
+        # Every token claims at most ONE slot per expert (top-k indices
+        # are distinct), so C = serve_expert_capacity * T with the
+        # default factor 1.0 can NEVER drop a valid token — chunked
+        # prefill computes the exact (drop-free) MoE and matches the
+        # teacher-forced logits instead of diverging by design whenever
+        # an expert oversubscribed a small dispatch's cf*T*k/E budget.
+        C = max(int(math.ceil(cfg.serve_expert_capacity * T)), 1)
+    else:
+        C = max(int(cfg.capacity_factor * T * k / E), 1)
+    act_name = effective_activation(cfg)
+    act = activation_fn(act_name)
     glu = "w_gate" in params
 
     logits = (xf @ params["router"].astype(dt)).astype(jnp.float32)
@@ -234,36 +308,48 @@ def moe_apply(params: Dict, cfg: ModelConfig, x, *,
     h_kind = ("expert_hidden_ep" if cfg.expert_sharding == "ep"
               else "expert_hidden_tp")
 
-    # per-expert FFN (einsum over the expert dim — shardable EP or TP)
-    up = jnp.einsum("ecd,edf->ecf", eb, params["w_up"].astype(dt))
-    if glu:
-        g_pre = jnp.einsum("ecd,edf->ecf", eb, params["w_gate"].astype(dt))
-        if (mor is not None and mor_mode != "dense"
-                and "experts" in (mor or {})):
-            # expert-level MoR (exact mode): ONE vmapped predictor pass
-            # per expert over its routed token buffer; the router itself
-            # already acts as the coarse zero predictor for the
-            # (E - top_k) unrouted experts.
-            from repro.core.executor import MoRExecutionPlan, as_plan
-            em = mor["experts"]
-            if isinstance(em, MoRExecutionPlan):
-                em = em.mor
-
-            def one(eb_e, w_e, pre_e, m_e):
-                plan = as_plan(m_e, mode="exact", tile_m=cfg.mor.tile_m,
-                               tile_n=cfg.mor.tile_n)
-                return plan.predict(eb_e, w_e, preact_full=pre_e).computed
-
-            computed = jax.vmap(one)(eb, params["w_gate"].astype(dt),
-                                     g_pre, em)
-            g = jnp.where(computed, act(g_pre), 0.0).astype(dt)
-        else:
-            g = act(g_pre)
-        h = (g * up).astype(dt)
+    # per-expert FFN.  Expert-level MoR (tentpole, ISSUE 3): the stacked
+    # expert MoRLayers run through ONE batched-expert execution plan —
+    # the attached plan's own mode/tiling/cap_live is authoritative,
+    # a bare stacked layer follows the caller's mor_mode exactly like
+    # dense FFNs do (so "dense" skips ALL predictor work).  The router
+    # itself already acts as the coarse zero predictor for the
+    # (E - top_k) unrouted experts.
+    from repro.core.executor import as_expert_plan
+    em = mor.get("experts") if isinstance(mor, dict) else None
+    eplan = as_expert_plan(em, mode=mor_mode, tile_m=cfg.mor.tile_m,
+                           tile_n=cfg.mor.tile_n,
+                           capacity_frac=cfg.mor.capacity)
+    mor_stats = None
+    if eplan.active and act_name in ("relu", "relu2", "relu_glu"):
+        base_act = "relu" if act_name == "relu_glu" else act_name
+        # buffer rows past an expert's routed count replicate xf_pad's
+        # zero row; mark them dead so they never hold tiles live (their
+        # outputs are never gathered back) and the per-(layer, expert)
+        # liveness telemetry reflects real tokens only
+        counts = jnp.bincount(top_idx.reshape(-1), length=E)
+        row_valid = (jnp.arange(C, dtype=jnp.int32)[None, :]
+                     < jnp.minimum(counts, C)[:, None])
+        out_e, mor_stats = eplan.expert_ffn(
+            eb, params["w_up"].astype(dt), params["w_down"].astype(dt),
+            activation=base_act,
+            w_gate=params["w_gate"].astype(dt) if glu else None,
+            row_mask=row_valid)
+        # anchor the expert outputs like the buffer inputs (the (E, C, f)
+        # hidden-layout hint stays on the dense path only — the MoR
+        # hidden lives inside the vmapped plan)
+        out_e = constrain(out_e.astype(dt), "expert_buf")
     else:
-        h = act(up).astype(dt)
-    h = constrain(h, h_kind)
-    out_e = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(dt))
+        # dense path (einsum over the expert dim — shardable EP or TP)
+        up = jnp.einsum("ecd,edf->ecf", eb, params["w_up"].astype(dt))
+        if glu:
+            g_pre = jnp.einsum("ecd,edf->ecf", eb,
+                               params["w_gate"].astype(dt))
+            h = (act(g_pre) * up).astype(dt)
+        else:
+            h = act(up).astype(dt)
+        h = constrain(h, h_kind)
+        out_e = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(dt))
     out_flat = jnp.concatenate(
         [out_e.reshape(E * C, d), jnp.zeros((1, d), dt)], 0)
 
@@ -290,4 +376,24 @@ def moe_apply(params: Dict, cfg: ModelConfig, x, *,
     aux = {"lb_loss": E * jnp.sum(frac_routed * mean_prob),
            "router_entropy": -jnp.mean(
                jnp.sum(probs * jnp.log(probs + 1e-9), -1))}
+    if mor_stats is not None:
+        # (E,)-shaped realised skip fractions per expert — stacked over
+        # layers by the model scan into the per-(layer, expert) stats
+        # the serving telemetry bins ("moe_mor_stats")
+        aux["mor_stats"] = mor_stats
     return y.reshape(*lead, d), aux
+
+
+def moe_taps(params: Dict, cfg: ModelConfig, x) -> Dict:
+    """Calibration taps for the expert FFNs: per-expert (p_bin, p_base)
+    of the gate (or up) pre-activation over ALL tokens.  Taps are
+    routing-independent — expert dispatch merely subsamples the token
+    distribution the fitted line models, so fitting on the full stream
+    gives every expert the same estimator with more samples."""
+    from repro.core.predictor import binary_preact
+    x2 = x.reshape(-1, x.shape[-1])
+    w = params.get("w_gate", params["w_up"])            # (E, d, f)
+    p_base = jnp.einsum("td,edf->etf", x2.astype(jnp.float32),
+                        w.astype(jnp.float32))
+    p_bin = jax.vmap(lambda we: binary_preact(x2, we))(w)
+    return {"p_bin": p_bin, "p_base": p_base}

@@ -15,7 +15,7 @@ from repro.distributed.sharding_rules import constrain
 from repro.models.layers import attention as attn
 from repro.models.layers.common import embed_init, dense_init, split_keys
 from repro.models.layers.mlp import mlp_init, mlp_apply, mlp_taps
-from repro.models.layers.moe import moe_init, moe_apply
+from repro.models.layers.moe import moe_init, moe_apply, moe_taps
 from repro.models.layers.norms import norm_init, apply_norm
 
 
@@ -97,6 +97,11 @@ def _block_apply(lp: Dict, cfg: ModelConfig, x, positions, kind: str,
         f, aux = moe_apply(lp["moe"], cfg, h2, mor=mor_layer,
                            mor_mode=mor_mode)
         ys["lb_loss"] = aux["lb_loss"]
+        if "mor_stats" in aux:
+            # (E,)-shaped; the layer scan stacks these to (L, E)
+            ys["moe_mor_stats"] = aux["mor_stats"]
+        if with_taps:
+            ys["taps"] = moe_taps(lp["moe"], cfg, h2)
     else:
         f, stats = mlp_apply(lp["mlp"], cfg, h2, mor=mor_layer,
                              mor_mode=mor_mode)
@@ -251,8 +256,10 @@ def _block_chunk(lp, cfg: ModelConfig, x, c, pos, valid, kind, mor_layer,
     ys: Dict[str, Any] = {}
     if kind == "moe":
         # invalid rows must not claim expert capacity (slot isolation)
-        f, _ = moe_apply(lp["moe"], cfg, h2, mor=mor_layer,
-                         mor_mode=mor_mode, token_mask=valid)
+        f, aux_m = moe_apply(lp["moe"], cfg, h2, mor=mor_layer,
+                             mor_mode=mor_mode, token_mask=valid)
+        if "mor_stats" in aux_m:
+            ys["moe_mor_stats"] = aux_m["mor_stats"]
     else:
         f, stats = mlp_apply(lp["mlp"], cfg, h2, mor=mor_layer,
                              mor_mode=mor_mode)

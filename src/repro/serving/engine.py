@@ -32,9 +32,11 @@ class Engine:
     """Continuous-batching serving engine over a fixed slot pool.
 
     ``mor`` is the RAW calibrated MoR pytree ({layer group -> stacked
-    MoRLayer}) as produced by ``deploy.calibrate_lm``; the engine
-    attaches per-layer execution plans itself so that capacity
-    calibration can re-attach them with per-layer budgets."""
+    MoRLayer}) as produced by ``deploy.calibrate_lm`` /
+    ``deploy.calibrate_moe``; the engine attaches per-layer execution
+    plans itself so that capacity calibration can re-attach them with
+    per-layer budgets (per-(layer, expert) for the MoE expert group,
+    whose stats arrive (L, E)-shaped via aux["moe_mor_stats"])."""
 
     def __init__(self, cfg: ModelConfig, params, *, mor: Optional[Dict] = None,
                  mor_mode: str = "dense", n_slots: int = 8,
@@ -194,7 +196,8 @@ class Engine:
                              floor: float = 0.05) -> Dict[str, np.ndarray]:
         """Set per-layer gather_matmul capacities from the accumulated
         tile-liveness histograms and re-attach the execution plans.
-        Returns the chosen {stat group -> (L,) capacity fractions}."""
+        Returns the chosen {stat group -> capacity fractions}, (L,) for
+        dense stacks and (L, E) for the MoE expert group."""
         assert self.telemetry is not None and self.raw_mor is not None
         self._flush_telemetry()
         caps = calibrate_capacity(self.telemetry, quantile=quantile,

@@ -17,8 +17,12 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 
-# aux keys that carry per-layer MoR stats, in the order groups appear
-STAT_KEYS = ("mor_stats", "dense_mor_stats")
+# aux keys that carry per-layer MoR stats, in the order groups appear.
+# "moe_mor_stats" is (L, E)-shaped — per-(layer, expert) realised skip
+# fractions from the batched-expert plans; the histograms flatten it to
+# L*E rows and ``calibrate_capacity`` hands the budgets back in the
+# original shape.
+STAT_KEYS = ("mor_stats", "dense_mor_stats", "moe_mor_stats")
 
 
 def mor_group_map(cfg: ModelConfig) -> Dict[str, str]:
@@ -26,7 +30,8 @@ def mor_group_map(cfg: ModelConfig) -> Dict[str, str]:
     if cfg.family == "hybrid":
         return {"mor_stats": "shared"}
     if cfg.family == "moe":
-        return {"dense_mor_stats": "dense_layers"}
+        return {"dense_mor_stats": "dense_layers",
+                "moe_mor_stats": "moe_layers"}
     return {"mor_stats": "layers"}
 
 
@@ -41,6 +46,10 @@ class ServingTelemetry:
         self.n_bins = n_bins
         self.hist: Dict[str, np.ndarray] = {}
         self.sums: Dict[str, Dict[str, np.ndarray]] = {}
+        # original per-dispatch stat shape per group ((L,) for dense
+        # stacks, (L, E) for expert stats) — quantiles/capacities are
+        # computed on the flattened rows and reported in this shape
+        self.shapes: Dict[str, tuple] = {}
         self.n_updates = 0
 
     def update(self, aux: Dict) -> None:
@@ -50,8 +59,9 @@ class ServingTelemetry:
             if not stats:
                 continue
             seen = True
-            live = np.asarray(stats["frac_tiles_live"],
-                              np.float64).reshape(-1)
+            live = np.asarray(stats["frac_tiles_live"], np.float64)
+            self.shapes.setdefault(key, live.shape)
+            live = live.reshape(-1)
             L = live.shape[0]
             if key not in self.hist:
                 self.hist[key] = np.zeros((L, self.n_bins), np.int64)
@@ -79,14 +89,18 @@ class ServingTelemetry:
             cdf = np.cumsum(h, axis=1) / np.maximum(h.sum(1, keepdims=True),
                                                     1)
             idx = np.argmax(cdf >= q, axis=1)
-            out[key] = (idx + 1) / self.n_bins
+            out[key] = ((idx + 1) / self.n_bins).reshape(
+                self.shapes.get(key, idx.shape))
         return out
 
     def summary(self) -> Dict:
         out: Dict = {"n_dispatches": self.n_updates}
         for key, sums in self.sums.items():
             n = max(self.n_updates, 1)
-            out[key] = {name: (acc / n).tolist()
+            shape = self.shapes.get(key)
+            out[key] = {name: (acc / n).reshape(shape
+                                                if shape else acc.shape
+                                                ).tolist()
                         for name, acc in sums.items()}
         return out
 
@@ -94,10 +108,12 @@ class ServingTelemetry:
 def calibrate_capacity(tel: ServingTelemetry, *, quantile: float = 0.95,
                        floor: float = 0.05,
                        headroom: float = 0.0) -> Dict[str, np.ndarray]:
-    """Liveness-quantile capacity calibration: per layer, provision the
-    gather_matmul capacity at the ``quantile`` of the observed live-tile
-    fraction (+ optional headroom), floored so a layer is never starved.
-    Returns {mor stat group -> (L,) capacity fractions in (0, 1]}."""
+    """Liveness-quantile capacity calibration: per layer (and per expert
+    for the MoE group), provision the gather_matmul capacity at the
+    ``quantile`` of the observed live-tile fraction (+ optional
+    headroom), floored so a layer is never starved.  Returns {mor stat
+    group -> capacity fractions in (0, 1], shaped like the group's
+    per-dispatch stats ((L,) dense, (L, E) experts)}."""
     assert tel.n_updates > 0, "calibrate_capacity needs serving telemetry"
     caps = {}
     for key, q in tel.liveness_quantile(quantile).items():

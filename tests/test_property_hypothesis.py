@@ -68,6 +68,77 @@ def test_error_feedback_conservation(g, r):
         g.astype(np.float64) + r.astype(np.float64), rtol=1e-5, atol=1e-4)
 
 
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 3), st.integers(1, 24),
+       st.integers(1, 12), st.integers(0, 2 ** 32 - 1), st.floats(0, 0.5))
+def test_dispatch_indices_kept_once_drops_only_on_overflow(
+        E, k, T, C, seed, mask_frac):
+    """MoE dispatch invariants (ISSUE 3): every kept (token, k) pair
+    lands in its chosen expert's buffer exactly once; pairs are dropped
+    ONLY on capacity overflow (kept-per-expert == min(count, C), earlier
+    tokens winning); sentinel pairs (masked tokens, expert id == E) land
+    exactly on the E*C drop slot."""
+    from repro.models.layers.moe import _dispatch_indices
+    k = min(k, E)
+    rng = np.random.default_rng(seed)
+    top = np.stack([rng.choice(E, size=k, replace=False)
+                    for _ in range(T)]).astype(np.int32)
+    top[rng.random(T) < mask_frac] = E
+    slot = np.asarray(_dispatch_indices(jnp.asarray(top), E, C))
+    seen = {}
+    for t in range(T):
+        for kk in range(k):
+            e, s = top[t, kk], slot[t, kk]
+            if e >= E:
+                assert s == E * C
+            elif s < E * C:
+                assert s // C == e
+                assert (e, s % C) not in seen
+                seen[(e, s % C)] = t
+    counts = np.bincount(top[top < E].reshape(-1), minlength=E)
+    for e in range(E):
+        kept_ts = sorted(t for (ee, _), t in seen.items() if ee == e)
+        assert len(kept_ts) == min(counts[e], C)
+        dropped_ts = [t for t in range(T) for kk in range(k)
+                      if top[t, kk] == e and slot[t, kk] == E * C]
+        assert all(kt <= dt for kt in kept_ts for dt in dropped_ts), \
+            "a later token displaced an earlier one"
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 4), st.floats(0.1, 1.0),
+       st.floats(0.05, 1.0), st.integers(0, 2 ** 32 - 1))
+def test_gather_matmul_cap_live_clamp(nm, nn, cap_frac, cap_live, seed):
+    """The real Pallas gather_matmul under the traced cap_live clamp:
+    count outputs never exceed min(capacity, cap_live, n_live); computed
+    tiles match x @ w; clamped/dead tiles are EXACT zeros."""
+    from repro.kernels import ops as kops
+    from repro.kernels.ref import gather_matmul_cap_ref
+    rng = np.random.default_rng(seed)
+    tm, tn = 8, 16
+    x = jnp.asarray(rng.normal(size=(nm * tm, 32)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(32, nn * tn)), jnp.float32)
+    mask = jnp.asarray(rng.random((nm, nn)) > 0.4)
+    out, n_live, n_comp = kops.gather_matmul(
+        x, w, mask, capacity_frac=cap_frac, capacity_frac_live=cap_live,
+        tile_m=tm, tile_n=tn, with_counts=True)
+    n_tiles = nm * nn
+    cap = max(1, int(cap_frac * n_tiles))
+    cl = max(1, int(np.ceil(cap_live * n_tiles)))
+    assert int(n_live) == int(np.asarray(mask).sum())
+    assert int(n_comp) <= min(cap, cl, int(n_live))
+    want = np.asarray(gather_matmul_cap_ref(x, w, mask, tm, tn,
+                                            capacity=cap, cap_live=cl))
+    np.testing.assert_allclose(np.asarray(out), want, rtol=2e-4, atol=2e-3)
+    flat = np.asarray(mask).reshape(-1)
+    kept = flat & (np.cumsum(flat) - 1 < min(cap, cl))
+    for t in range(n_tiles):
+        if not kept[t]:
+            i, j = t // nn, t % nn
+            assert np.all(np.asarray(out)[i * tm:(i + 1) * tm,
+                                          j * tn:(j + 1) * tn] == 0.0)
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.integers(1, 6), st.integers(1, 6), st.floats(0.05, 1.0))
 def test_gather_capacity_never_exceeds(nm, nn, frac):

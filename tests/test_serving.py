@@ -109,27 +109,81 @@ def test_chunked_prefill_beyond_sliding_window_ring():
                                rtol=2e-3, atol=2e-3)
 
 
+def _lossless_ref(cfg):
+    """A capacity factor at which the teacher-forced forward provably
+    drops nothing (C = cf*T*k/E >= T: an expert can receive at most one
+    slot per token) — the drop-free reference the serving-shape-aware
+    chunk path must now reproduce exactly."""
+    return cfg.replace(capacity_factor=float(cfg.n_experts) / cfg.top_k)
+
+
 def test_moe_chunk_slot_isolation():
-    """Padded/invalid rows must not claim MoE expert capacity: a single
-    full-prompt chunk routes exactly like the teacher-forced forward
-    (same token count, same capacity), which only holds when invalid
-    rows are excluded from dispatch (moe_apply token_mask)."""
+    """Padded/invalid rows must not claim MoE expert capacity, and the
+    serving-shape-aware capacity (C provisioned from the dispatch shape,
+    lossless by construction) must reproduce the drop-free teacher-forced
+    forward from a single full-prompt chunk."""
     cfg = reduce_config(get_config("mixtral-8x7b"))
     api = get_model(cfg)
     params = api.init(jax.random.PRNGKey(0), cfg)
     B, P = 2, 8
     toks = jax.random.randint(jax.random.PRNGKey(5), (B, P), 0,
                               cfg.vocab_size)
-    want, _ = api.forward(params, cfg, {"tokens": toks})
+    want, _ = api.forward(params, _lossless_ref(cfg), {"tokens": toks})
     cache = kv_pool.init(cfg, B, 32, P)
     got, _, _ = api.prefill_chunk(params, cfg, toks, cache,
                                   n_valid=jnp.full((B,), P, jnp.int32))
     np.testing.assert_allclose(np.asarray(got),
                                np.asarray(want, np.float32),
                                rtol=2e-3, atol=2e-3)
-    # (residual MoE divergence across DIFFERENT dispatch shapes remains
-    # by design: the static capacity C scales with the dispatch's total
-    # token count — see ROADMAP serving follow-ups)
+
+
+def test_moe_chunked_prefill_matches_teacher_forced():
+    """The ROADMAP serving follow-up, closed: MoE chunked prefill used to
+    diverge from teacher-forced logits BY DESIGN (expert capacity scaled
+    with each dispatch's token count, so small/mixed dispatches dropped
+    tokens the full forward kept).  With the serving-shape-aware capacity
+    factor every chunk dispatch is drop-free, so chaining chunks of ANY
+    size reproduces the drop-free forward at every position — including
+    a ragged final chunk and a decode-shaped (B, 1) continuation."""
+    cfg = reduce_config(get_config("mixtral-8x7b"))
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    B, P = 2, 13
+    toks = jax.random.randint(jax.random.PRNGKey(6), (B, P + 1), 0,
+                              cfg.vocab_size)
+    want, _ = api.forward(params, _lossless_ref(cfg),
+                          {"tokens": toks[:, :P]})
+    got, cache = _chunked_prefill(cfg, api, params, toks[:, :P], chunk=5)
+    np.testing.assert_allclose(got, np.asarray(want, np.float32),
+                               rtol=2e-3, atol=2e-3)
+    # decode-shaped dispatch continues exactly (T = B tokens: precisely
+    # the shape where the old cf*T*k/E budget starved experts)
+    lg, _, _ = api.prefill_chunk(params, cfg, toks[:, P:P + 1], cache,
+                                 n_valid=jnp.ones((B,), jnp.int32))
+    full, _ = api.forward(params, _lossless_ref(cfg), {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(lg)[:, 0],
+                               np.asarray(full, np.float32)[:, -1],
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_engine_slot_eviction_reuse_matches_solo():
+    """MoE requests through a shared slot pool: because serving capacity
+    is now dispatch-shape-aware (drop-free), a request's greedy tokens
+    cannot depend on which other slots it was co-scheduled with — every
+    request must match a solo run despite eviction/slot reuse mid-flight."""
+    cfg = reduce_config(get_config("mixtral-8x7b"))
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    reqs = [(rng.integers(0, cfg.vocab_size, size=int(rng.integers(3, 14))),
+             int(rng.integers(3, 6))) for _ in range(4)]
+    eng = Engine(cfg, params, n_slots=2, max_len=64)
+    res = eng.run(list(reqs))
+    assert len(res) == len(reqs)
+    for i, (p, g) in enumerate(reqs):
+        solo = Engine(cfg, params, n_slots=1, max_len=64)
+        want = solo.run([(p, g)])[0]
+        assert res[i] == want, f"moe request {i} diverged under sharing"
 
 
 def test_make_prefill_step_has_no_scanned_fallback():
@@ -326,3 +380,27 @@ def test_serve_main_engine_report(tmp_path):
     assert "per_layer_capacity" in on_disk
     assert on_disk["tokens_per_s"] > 0
     assert r["mor_mode"] == "tiled"
+
+
+def test_moe_serve_main_reports_per_expert_capacity(tmp_path):
+    """A MoE serve trace with --calibrate-capacity: expert-level MoR runs
+    in tiled mode through calibrate_moe, the telemetry bins per-(layer,
+    expert) liveness, and the calibrated capacities land in the report
+    shaped (L_moe, E)."""
+    from repro.launch.serve import main as serve_main
+    out = tmp_path / "serve_moe.json"
+    r = serve_main(["--arch", "mixtral-8x7b", "--reduced", "--batch", "2",
+                    "--requests", "3", "--prompt-min", "4",
+                    "--prompt-max", "12", "--gen-len", "4",
+                    "--mor", "tiled", "--calib-steps", "2",
+                    "--calibrate-capacity", "0.9",
+                    "--out-json", str(out)])
+    cfg = reduce_config(get_config("mixtral-8x7b"))
+    L_moe = cfg.n_layers - cfg.first_k_dense
+    assert "moe_mor_stats" in r["per_layer_capacity"]
+    caps = np.asarray(r["per_layer_capacity"]["moe_mor_stats"])
+    assert caps.shape == (L_moe, cfg.n_experts)
+    assert np.all((caps > 0.0) & (caps <= 1.0))
+    live = np.asarray(r["per_expert_frac_tiles_live"])
+    assert live.shape == (L_moe, cfg.n_experts)
+    assert r["requests_finished"] == 3
