@@ -113,6 +113,11 @@ class ModelConfig:
     # --- serving (repro.serving continuous-batching engine) ---
     serve_chunk: int = 32           # chunked-prefill chunk length; also the
                                     # kv ring-buffer margin above the window
+    serve_page: int = 8             # paged KV pool: tokens per physical page
+    # (the unit of allocation, refcounting and prefix sharing; prefix
+    # caching only matches full pages, and state snapshots are taken at
+    # page-aligned chunk boundaries, so serve_chunk % serve_page == 0 is
+    # the useful regime)
     serve_expert_capacity: float = 1.0
     # serving-shape-aware MoE expert capacity: serving dispatches (the
     # token_mask path) provision each expert for C = this * T tokens of

@@ -9,12 +9,18 @@ accelerator serving real traffic).
 Requests with heterogeneous prompt/generation lengths stream through a
 fixed slot pool (``repro.serving.Engine``): prompts are prefilled in
 fixed-size chunks mixed into the same dispatches as ongoing decodes,
-finished sequences are evicted and their KV slots recycled mid-flight.
+finished sequences are evicted and their KV pages recycled mid-flight.
+The cache is PAGED by default (block-table indirection + refcounted
+pages) with prefix caching across requests: a --shared-prefix trace
+dedups its common prompt pages and skips the fully-hit prefill chunks
+(--no-prefix-cache / --layout slotted select the baselines).  Sampling
+is greedy by default; --temperature/--top-k enable seeded sampling.
 Reports tokens/s, the realised PER-LAYER skip fractions from the
-serving telemetry, and (with --calibrate-capacity) the per-layer
-gather_matmul capacities chosen from the observed tile-liveness
-quantiles.  --baseline additionally measures the static-batch path
-(every prompt padded to the trace maximum) on the same trace.
+serving telemetry, the prefix-cache hit counters, and (with
+--calibrate-capacity) the per-layer gather_matmul capacities chosen
+from the observed tile-liveness quantiles.  --baseline additionally
+measures the static-batch path (every prompt padded to the trace
+maximum) on the same trace.
 """
 from __future__ import annotations
 
@@ -111,12 +117,22 @@ def _mean_layer_stats(aux_list):
     return out
 
 
-def _trace(cfg, n_requests, pmin, pmax, gmin, gmax, seed):
+def _trace(cfg, n_requests, pmin, pmax, gmin, gmax, seed,
+           shared_prefix: int = 0):
     """Mixed trace: log-uniform prompt lengths in [pmin, pmax] AND
     generation lengths in [gmin, gmax] — heterogeneous on both axes,
     like real traffic (the static batch convoys on the longest of
-    each per group; the engine evicts at each request's own length)."""
+    each per group; the engine evicts at each request's own length).
+
+    ``shared_prefix`` > 0 prepends the SAME ``shared_prefix``-token
+    prompt prefix to every request (system-prompt traffic) — the
+    shared-prompt trace the prefix cache dedups."""
     rng = np.random.default_rng(seed)
+    prefix = np.zeros((0,), np.int32)
+    if shared_prefix:
+        prefix = np.asarray(
+            synthetic_lm_batch(cfg, 1, shared_prefix, seed=seed, step=999)
+            ["tokens"][0], np.int32)
     reqs = []
     for i in range(n_requests):
         plen = (int(np.exp(rng.uniform(np.log(pmin), np.log(pmax))))
@@ -126,14 +142,19 @@ def _trace(cfg, n_requests, pmin, pmax, gmin, gmax, seed):
         prompt = np.asarray(
             synthetic_lm_batch(cfg, 1, plen, seed=seed, step=1000 + i)
             ["tokens"][0], np.int32)
-        reqs.append((prompt, glen))
+        reqs.append((np.concatenate([prefix, prompt]), glen))
     return reqs
 
 
 def _run_engine(cfg, params, reqs, *, mor, mor_mode, n_slots, max_len,
-                chunk=0, capacities=None):
+                chunk=0, capacities=None, layout="paged",
+                prefix_cache=True, temperature=0.0, top_k=0,
+                sample_seed=0):
     eng = Engine(cfg, params, mor=mor, mor_mode=mor_mode, n_slots=n_slots,
-                 max_len=max_len, chunk=chunk, capacities=capacities)
+                 max_len=max_len, chunk=chunk, capacities=capacities,
+                 layout=layout, prefix_cache=prefix_cache,
+                 temperature=temperature, top_k=top_k,
+                 sample_seed=sample_seed)
     # first pass compiles the two dispatch shapes; then take the best of
     # three timed passes — single-shot wall clock on a shared CPU is
     # ~2x noisy (the static baseline gets the same warmup + best-of).
@@ -189,6 +210,24 @@ def main(argv=None):
                          "(default uniform = gen-len)")
     ap.add_argument("--chunk", type=int, default=0,
                     help="prefill chunk length (default cfg.serve_chunk)")
+    ap.add_argument("--layout", default="paged",
+                    choices=("paged", "slotted"),
+                    help="KV cache layout (slotted = PR 2 baseline)")
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action="store_true", default=True,
+                    help="prefix caching across requests (default on; "
+                         "paged layout only)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend a shared N-token prefix to every "
+                         "request (shared-prompt trace)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation for temperature sampling "
+                         "(0 = full distribution)")
+    ap.add_argument("--sample-seed", type=int, default=0)
     ap.add_argument("--mor", default="dense",
                     choices=("dense", "exact", "tiled", "kernel"))
     ap.add_argument("--calib-steps", type=int, default=4)
@@ -244,24 +283,35 @@ def main(argv=None):
     pmax = args.prompt_max or args.prompt_len
     gmin = args.gen_min or args.gen_len
     reqs = _trace(cfg, args.requests or args.batch, pmin, pmax,
-                  gmin, args.gen_len, args.seed)
-    max_len = pmax + args.gen_len + 2
+                  gmin, args.gen_len, args.seed,
+                  shared_prefix=args.shared_prefix)
+    max_len = args.shared_prefix + pmax + args.gen_len + 2
 
-    eng, results, rep = _run_engine(cfg, params, reqs, mor=mor,
-                                    mor_mode=args.mor, n_slots=args.batch,
-                                    max_len=max_len, chunk=args.chunk)
+    eng, results, rep = _run_engine(
+        cfg, params, reqs, mor=mor, mor_mode=args.mor, n_slots=args.batch,
+        max_len=max_len, chunk=args.chunk, layout=args.layout,
+        prefix_cache=args.prefix_cache, temperature=args.temperature,
+        top_k=args.top_k, sample_seed=args.sample_seed)
     report.update(rep)
-    print(f"[serve] {cfg.name} mor={args.mor}: "
+    print(f"[serve] {cfg.name} mor={args.mor} layout={args.layout}: "
           f"{rep['tokens_per_s']:.1f} tok/s over {len(reqs)} requests "
           f"({rep['dispatches']} dispatches, "
           f"prompts {pmin}-{pmax})")
+    if "prefix_cache" in rep:
+        pc = rep["prefix_cache"]
+        print(f"[serve] prefix cache: hit rate {pc['hit_rate']:.2f} "
+              f"({pc['prefix_hits']}/{pc['prefix_queries']} requests), "
+              f"{pc['pages_shared']} pages shared, "
+              f"{pc['chunks_skipped']} prefill chunks skipped, "
+              f"{pc['pages_cowed']} pages copy-on-written")
 
     if args.calibrate_capacity > 0 and args.mor not in ("dense",):
         caps = eng.calibrate_capacities(quantile=args.calibrate_capacity)
         _, results_cal, rep_cal = _run_engine(
             cfg, params, reqs, mor=mor, mor_mode=args.mor,
             n_slots=args.batch, max_len=max_len, chunk=args.chunk,
-            capacities=caps)
+            capacities=caps, layout=args.layout,
+            prefix_cache=args.prefix_cache)
         report["per_layer_capacity"] = {
             k: np.asarray(v).round(4).tolist() for k, v in caps.items()}
         report["calibrated_tokens_per_s"] = rep_cal["tokens_per_s"]
@@ -280,7 +330,9 @@ def main(argv=None):
         _, results_d, rep_d = _run_engine(cfg, params, reqs, mor=None,
                                           mor_mode="dense",
                                           n_slots=args.batch,
-                                          max_len=max_len, chunk=args.chunk)
+                                          max_len=max_len, chunk=args.chunk,
+                                          layout=args.layout,
+                                          prefix_cache=args.prefix_cache)
         agree = np.mean([
             np.mean(np.asarray(results[r]) == np.asarray(results_d[r]))
             for r in results_d])

@@ -137,11 +137,19 @@ def prefill_chunk(params: Dict, cfg: ModelConfig, tokens, cache: Dict, *,
     The serving chunk step for the hybrid family: mamba layers carry
     their SSD + conv state across chunks (``mamba2_chunk``), the shared
     attention block scatters into its per-slot sliding-window ring
-    (``gqa_chunk``).  Replaces the old scanned-decode prefill fallback."""
+    (``gqa_chunk``).  Replaces the old scanned-decode prefill fallback.
+
+    A cache carrying top-level ``state_table`` / ``block_table`` is the
+    PAGED layout (``serving.kv_pool.PagedPool``): mamba state rows are
+    gathered/scattered through the (B,) state table, and the shared
+    attention ring reads/writes its kv pages through the (B, n_blocks)
+    block table."""
     dt = jnp.dtype(cfg.dtype)
     n_seg, every, tail = _seg_counts(cfg)
     B, C = tokens.shape
     pos = cache["pos"]
+    state_table = cache.get("state_table")
+    block_table = cache.get("block_table")
     valid = jnp.arange(C, dtype=jnp.int32)[None, :] < n_valid[:, None]
     vm = valid[..., None]
     x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
@@ -150,11 +158,23 @@ def prefill_chunk(params: Dict, cfg: ModelConfig, tokens, cache: Dict, *,
     swa_cfg = cfg.replace(sliding_window=cfg.shared_attn_window)
     shared_mor = None if mor is None else mor.get("shared")
 
+    def gather_state(node):
+        if state_table is None:
+            return node
+        return jax.tree_util.tree_map(lambda a: a[:, state_table], node)
+
+    def scatter_state(full, new):
+        if state_table is None:
+            return new
+        return jax.tree_util.tree_map(
+            lambda f, n: f.at[:, state_table].set(n), full, new)
+
     seg_params = jax.tree_util.tree_map(
         lambda a: a.reshape(n_seg, every, *a.shape[1:]),
         params["mamba_layers"])
     seg_caches = jax.tree_util.tree_map(
-        lambda a: a.reshape(n_seg, every, *a.shape[1:]), cache["mamba"])
+        lambda a: a.reshape(n_seg, every, *a.shape[1:]),
+        gather_state(cache["mamba"]))
 
     def mamba_inner(c, inner_xs):
         lp, mc = inner_xs
@@ -166,7 +186,8 @@ def prefill_chunk(params: Dict, cfg: ModelConfig, tokens, cache: Dict, *,
         c, mamba_new = jax.lax.scan(mamba_inner, carry, (xs["lp"], xs["mc"]))
         h = apply_norm(cfg.norm, params["shared"]["ln1"], c)
         a, ac_new = attn.gqa_chunk(params["shared"]["attn"], swa_cfg, h,
-                                   xs["ac"], pos, valid)
+                                   xs["ac"], pos, valid,
+                                   block_table=block_table)
         c = c + jnp.where(vm, a, 0.0).astype(dt)
         h2 = apply_norm(cfg.norm, params["shared"]["ln2"], c)
         f, stats = mlp_apply(params["shared"]["mlp"], cfg, h2,
@@ -182,14 +203,19 @@ def prefill_chunk(params: Dict, cfg: ModelConfig, tokens, cache: Dict, *,
                            "ac": cache["shared_attn"]})
     new_cache: Dict[str, Any] = {
         "pos": pos + n_valid,
-        "mamba": jax.tree_util.tree_map(
-            lambda a: a.reshape(n_seg * every, *a.shape[2:]), new["mamba"]),
+        "mamba": scatter_state(cache["mamba"], jax.tree_util.tree_map(
+            lambda a: a.reshape(n_seg * every, *a.shape[2:]), new["mamba"])),
         "shared_attn": new["attn"],
     }
+    if state_table is not None:
+        new_cache["state_table"] = state_table
+    if block_table is not None:
+        new_cache["block_table"] = block_table
     if tail:
         x, tail_new = jax.lax.scan(mamba_inner, x,
-                                   (params["tail_layers"], cache["tail"]))
-        new_cache["tail"] = tail_new
+                                   (params["tail_layers"],
+                                    gather_state(cache["tail"])))
+        new_cache["tail"] = scatter_state(cache["tail"], tail_new)
     x = apply_norm(cfg.norm, params["final_norm"], x)
     logits = (x @ params["lm_head"].astype(dt)).astype(jnp.float32)
     aux = {"mor_stats": new["mor_stats"]} if "mor_stats" in new else {}

@@ -315,13 +315,23 @@ def gqa_prefill(params, cfg: ModelConfig, x, cache):
     return y, {"k": ck, "v": cv, "pos": cp}
 
 
-def gqa_chunk(params, cfg: ModelConfig, x, cache, pos, valid):
+def gqa_chunk(params, cfg: ModelConfig, x, cache, pos, valid,
+              block_table=None):
     """Slot-pool chunk step: consume x (B, C, d) starting at PER-SLOT
     positions ``pos`` (B,), with ``valid`` (B, C) marking real tokens
     (a slot mid-prompt has a full row; an idle or decoding slot has
     n_valid 0 or 1).  Invalid tokens are dropped from the ring-buffer
     write (out-of-range scatter index), so an idle slot's cache is
     bit-identical before and after the dispatch.
+
+    With ``block_table`` (B, n_blocks) the cache is the PAGED layout
+    ({k/v (n_pages, page, hkv, hd), pos (n_pages, page)}): ring row
+    ``r = qpos % (n_blocks * page)`` lives at physical page
+    ``block_table[b, r // page]``, offset ``r % page``.  Reads gather
+    the slot's ring view through the table (null-page rows carry -1
+    position tags and mask out); writes scatter through the same
+    indirection — the pool guarantees every written page is exclusively
+    owned (copy-on-write happens host-side before dispatch).
 
     The ring must have ≥ chunk-length slack above the attention window
     (``serving.kv_pool`` allocates window + serve_chunk) so that the
@@ -331,6 +341,24 @@ def gqa_chunk(params, cfg: ModelConfig, x, cache, pos, valid):
     qpos = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
     q = apply_rope(q, qpos, cfg.rope_theta)
     k = apply_rope(k, qpos, cfg.rope_theta)
+    if block_table is not None:
+        n_pages, page = cache["k"].shape[0], cache["k"].shape[1]
+        ring = block_table.shape[1] * page
+        r = qpos % ring
+        blk, off = r // page, r % page
+        pidx = jnp.take_along_axis(block_table, blk, axis=1)
+        pidx = jnp.where(valid, pidx, n_pages)      # OOB -> dropped
+        ck = cache["k"].at[pidx, off].set(k, mode="drop")
+        cv = cache["v"].at[pidx, off].set(v, mode="drop")
+        cp = cache["pos"].at[pidx, off].set(qpos, mode="drop")
+        hkv, hd = k.shape[2], k.shape[3]
+        gk = ck[block_table].reshape(B, ring, hkv, hd)
+        gv = cv[block_table].reshape(B, ring, hkv, hd)
+        gp = cp[block_table].reshape(B, ring)
+        o = attend_batched(q, gk, gv, qpos, gp, causal=True,
+                           window=cfg.sliding_window)
+        y = o.reshape(B, C, -1) @ params["wo"].astype(x.dtype)
+        return y, {"k": ck, "v": cv, "pos": cp}
     Lr = cache["k"].shape[1]
     slot = jnp.where(valid, qpos % Lr, Lr)          # Lr is OOB -> dropped
     bidx = jnp.arange(B)[:, None]
@@ -442,12 +470,18 @@ def mla_prefill(params, cfg: ModelConfig, x, cache):
     return y, new_cache
 
 
-def mla_chunk(params, cfg: ModelConfig, x, cache, pos, valid):
+def mla_chunk(params, cfg: ModelConfig, x, cache, pos, valid,
+              block_table=None):
     """Slot-pool chunk step for MLA (absorbed latent attention): x
     (B, C, d) at per-slot positions ``pos`` (B,); ``valid`` (B, C) gates
     the cache scatter.  The cache carries per-slot position tags
     (``cache["pos"]``, (B, max_len), -1 = empty) so each slot only
-    attends to its own written prefix."""
+    attends to its own written prefix.
+
+    With ``block_table`` (B, n_blocks) the latent cache is the PAGED
+    layout ({c_kv (n_pages, page, kr), k_pe, pos (n_pages, page)}):
+    absolute position p lives at page ``block_table[b, p // page]``,
+    offset ``p % page`` (no ring — MLA caches the full max_len)."""
     B, C, _ = x.shape
     h, nd, vd = cfg.n_heads, cfg.qk_nope_head_dim, cfg.v_head_dim
     kr, rd = cfg.kv_lora_rank, cfg.qk_rope_head_dim
@@ -455,12 +489,27 @@ def mla_chunk(params, cfg: ModelConfig, x, cache, pos, valid):
     qpos = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
     q_nope, q_pe = _mla_q(params, cfg, x, qpos)          # (B,C,h,nd/rd)
     c_kv_t, k_pe_t = _mla_kv_compress(params, cfg, x, qpos)
-    ML = cache["c_kv"].shape[1]
-    idx = jnp.where(valid, qpos, ML)                     # ML is OOB -> drop
-    bidx = jnp.arange(B)[:, None]
-    ck = cache["c_kv"].at[bidx, idx].set(c_kv_t, mode="drop")
-    cpe = cache["k_pe"].at[bidx, idx].set(k_pe_t, mode="drop")
-    cp = cache["pos"].at[bidx, idx].set(qpos, mode="drop")
+    if block_table is not None:
+        n_pages, page = cache["c_kv"].shape[0], cache["c_kv"].shape[1]
+        ring = block_table.shape[1] * page
+        blk, off = qpos // page, qpos % page
+        pidx = jnp.take_along_axis(block_table, blk, axis=1)
+        pidx = jnp.where(valid, pidx, n_pages)           # OOB -> drop
+        ck_pool = cache["c_kv"].at[pidx, off].set(c_kv_t, mode="drop")
+        cpe_pool = cache["k_pe"].at[pidx, off].set(k_pe_t, mode="drop")
+        cp_pool = cache["pos"].at[pidx, off].set(qpos, mode="drop")
+        ck = ck_pool[block_table].reshape(B, ring, kr)
+        cpe = cpe_pool[block_table].reshape(B, ring, rd)
+        cp = cp_pool[block_table].reshape(B, ring)
+        new_cache = {"c_kv": ck_pool, "k_pe": cpe_pool, "pos": cp_pool}
+    else:
+        ML = cache["c_kv"].shape[1]
+        idx = jnp.where(valid, qpos, ML)                 # ML is OOB -> drop
+        bidx = jnp.arange(B)[:, None]
+        ck = cache["c_kv"].at[bidx, idx].set(c_kv_t, mode="drop")
+        cpe = cache["k_pe"].at[bidx, idx].set(k_pe_t, mode="drop")
+        cp = cache["pos"].at[bidx, idx].set(qpos, mode="drop")
+        new_cache = {"c_kv": ck, "k_pe": cpe, "pos": cp}
     wk_b = params["wk_b"].astype(dt).reshape(kr, h, nd)
     wv_b = params["wv_b"].astype(dt).reshape(kr, h, vd)
     q_lat = jnp.einsum("bchd,khd->bchk", q_nope, wk_b)   # absorb W_uk
@@ -476,7 +525,7 @@ def mla_chunk(params, cfg: ModelConfig, x, cache, pos, valid):
     o_lat = jnp.einsum("bhct,btk->bchk", p, ck)
     o = jnp.einsum("bchk,khv->bchv", o_lat, wv_b)        # absorb W_uv
     y = o.reshape(B, C, h * vd) @ params["wo"].astype(dt)
-    return y, {"c_kv": ck, "k_pe": cpe, "pos": cp}
+    return y, new_cache
 
 
 def mla_decode(params, cfg: ModelConfig, x, cache, pos):

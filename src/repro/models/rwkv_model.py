@@ -98,9 +98,22 @@ def prefill_chunk(params: Dict, cfg: ModelConfig, tokens, cache: Dict, *,
     shift, and the channel-mix token shift across chunk boundaries —
     the recurrent-family replacement for the old scanned-decode prefill
     fallback (one compiled (B, C) dispatch per chunk instead of P
-    single-token steps)."""
+    single-token steps).
+
+    A cache carrying a top-level ``state_table`` is the PAGED layout
+    (``serving.kv_pool.PagedPool``): state leaves are (L, n_state_pages,
+    ...) pools and each slot's row is reached through the (B,) table —
+    the chunk gathers its slots' pages, runs the carry, and scatters the
+    new state back through the same indirection (which is what lets
+    prefix-cache state snapshots live in the same pool)."""
     dt = jnp.dtype(cfg.dtype)
     B, C = tokens.shape
+    state_table = cache.get("state_table")
+    if state_table is not None:
+        gathered = {k: cache[k][:, state_table]
+                    for k in ("tm_shift", "wkv", "cm_shift")}
+    else:
+        gathered = {k: cache[k] for k in ("tm_shift", "wkv", "cm_shift")}
     valid = jnp.arange(C, dtype=jnp.int32)[None, :] < n_valid[:, None]
     vm = valid[..., None]
     nv = n_valid
@@ -131,8 +144,7 @@ def prefill_chunk(params: Dict, cfg: ModelConfig, tokens, cache: Dict, *,
             ys["mor_stats"] = stats
         return carry, ys
 
-    xs = {"lp": params["layers"], "tm_shift": cache["tm_shift"],
-          "wkv": cache["wkv"], "cm_shift": cache["cm_shift"]}
+    xs = {"lp": params["layers"], **gathered}
     if mor is not None:
         xs["mor"] = mor["layers"]
     x, new = jax.lax.scan(body, x, xs)
@@ -141,6 +153,9 @@ def prefill_chunk(params: Dict, cfg: ModelConfig, tokens, cache: Dict, *,
     aux = {}
     if "mor_stats" in new:
         aux["mor_stats"] = new.pop("mor_stats")
+    if state_table is not None:
+        new = {k: cache[k].at[:, state_table].set(v) for k, v in new.items()}
+        new["state_table"] = state_table
     new_cache = {"pos": cache["pos"] + n_valid, **new}
     return logits, new_cache, aux
 

@@ -244,13 +244,15 @@ def prefill(params: Dict, cfg: ModelConfig, tokens, cache: Dict, *,
 # --------------------------------------------------------------------------
 
 def _block_chunk(lp, cfg: ModelConfig, x, c, pos, valid, kind, mor_layer,
-                 mor_mode):
+                 mor_mode, block_table=None):
     vm = valid[..., None]
     h = apply_norm(cfg.norm, lp["ln1"], x)
     if cfg.mla:
-        a, c_new = attn.mla_chunk(lp["attn"], cfg, h, c, pos, valid)
+        a, c_new = attn.mla_chunk(lp["attn"], cfg, h, c, pos, valid,
+                                  block_table=block_table)
     else:
-        a, c_new = attn.gqa_chunk(lp["attn"], cfg, h, c, pos, valid)
+        a, c_new = attn.gqa_chunk(lp["attn"], cfg, h, c, pos, valid,
+                                  block_table=block_table)
     x = x + jnp.where(vm, a, 0.0).astype(x.dtype)
     h2 = apply_norm(cfg.norm, lp["ln2"], x)
     ys: Dict[str, Any] = {}
@@ -282,9 +284,14 @@ def prefill_chunk(params: Dict, cfg: ModelConfig, tokens, cache: Dict, *,
     chunks reproduces the teacher-forced forward exactly (incl. prompts
     longer than the sliding-window ring, given the kv_pool's chunk-margin
     ring).  aux["mor_stats"] carries the per-layer (L-stacked) realised
-    skip statistics that feed ``serving.telemetry``."""
+    skip statistics that feed ``serving.telemetry``.
+
+    A cache carrying a top-level ``block_table`` is the PAGED layout
+    (``serving.kv_pool.PagedPool``): every layer reads/writes its kv
+    pages through the shared (B, n_blocks) table instead of slot rows."""
     B, C = tokens.shape
     pos = cache["pos"]
+    block_table = cache.get("block_table")
     valid = jnp.arange(C, dtype=jnp.int32)[None, :] < n_valid[:, None]
     x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
     x = jnp.where(valid[..., None], x, 0.0).astype(x.dtype)
@@ -293,7 +300,8 @@ def prefill_chunk(params: Dict, cfg: ModelConfig, tokens, cache: Dict, *,
     def run_stack(x, stacked, caches, kind, mor_stack):
         def body(carry, xs):
             y, c_new, ys = _block_chunk(xs["lp"], cfg, carry, xs["c"], pos,
-                                        valid, kind, xs.get("mor"), mor_mode)
+                                        valid, kind, xs.get("mor"), mor_mode,
+                                        block_table=block_table)
             return y, {"c": c_new, **ys}
         xs = {"lp": stacked, "c": caches}
         if mor_stack is not None:
@@ -303,6 +311,8 @@ def prefill_chunk(params: Dict, cfg: ModelConfig, tokens, cache: Dict, *,
         return y, out["c"], ys
 
     new_cache: Dict[str, Any] = {"pos": pos + n_valid}
+    if block_table is not None:
+        new_cache["block_table"] = block_table
     aux: Dict[str, Any] = {}
     if cfg.family == "moe":
         if cfg.first_k_dense:

@@ -4,18 +4,26 @@ The paper's deployment target is an inference accelerator serving real
 traffic; this package embeds the MoR predictor in a serving loop that
 *measures and exploits* the sparsity it predicts:
 
-  kv_pool    — slot-pool cache layout (per-slot positions, per-slot kv
-               position tags, window + chunk ring margin) + slot recycle.
-  scheduler  — continuous-batching policy: admit requests with
-               heterogeneous prompt/gen lengths into a fixed slot pool,
-               chunk prompts, mix prefill chunks and decode steps in one
-               dispatch, evict finished sequences mid-flight.
-  engine     — the driver: one compiled chunk step per dispatch shape,
-               request queue -> token streams + a serving report.
-  telemetry  — per-layer tile-liveness histograms + predictor hit/miss
-               counters accumulated during serving; feeds
-               ``calibrate_capacity`` (liveness-quantile provisioning of
-               each layer's gather_matmul capacity).
+  kv_pool      — cache layouts: the paged pool (``PagedPool``: fixed-size
+                 pages, free list + refcounts (``BlockAllocator``),
+                 per-slot block tables, copy-on-write) and the legacy
+                 contiguous slot pool kept as the differential baseline.
+  prefix_cache — hash-trie of full KV pages + recurrent-state snapshots
+                 keyed by token prefixes; requests sharing a prompt
+                 prefix map their leading block-table entries to the
+                 same physical pages and skip the hit prefill chunks.
+  scheduler    — continuous-batching policy: admit requests with
+                 heterogeneous prompt/gen lengths into a fixed slot pool
+                 (prefix-matched at admission), chunk prompts, mix
+                 prefill chunks and decode steps in one dispatch, evict
+                 finished sequences mid-flight.
+  engine       — the driver: one compiled chunk step per dispatch shape,
+                 request queue -> token streams + a serving report;
+                 greedy or temperature/top-k sampling.
+  telemetry    — per-layer tile-liveness histograms + predictor hit/miss
+                 counters + prefix-cache counters accumulated during
+                 serving; feeds ``calibrate_capacity`` (liveness-quantile
+                 provisioning of each layer's gather_matmul capacity).
 """
 from repro.serving.engine import Engine, Request
 from repro.serving.telemetry import ServingTelemetry, calibrate_capacity

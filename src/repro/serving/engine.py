@@ -2,11 +2,23 @@
 
 One compiled chunk step per dispatch shape ((B, chunk) mixed and (B, 1)
 decode-only) drives the whole request stream: the scheduler packs each
-dispatch, the kv_pool recycles evicted slots, the telemetry accumulates
-per-layer tile-liveness from every dispatch's MoR stats, and
-``calibrate_capacities`` turns that into per-layer gather_matmul
-capacity fractions (attached to the execution plans as a traced leaf —
-updating them does NOT recompile the step).
+dispatch, the paged kv pool allocates/copy-on-writes the pages the
+dispatch will touch (host-side, count-based — no device sync), the
+telemetry accumulates per-layer tile-liveness from every dispatch's MoR
+stats, and ``calibrate_capacities`` turns that into per-layer
+gather_matmul capacity fractions (attached to the execution plans as a
+traced leaf — updating them does NOT recompile the step).
+
+Cache layouts: ``layout="paged"`` (default) runs on
+``kv_pool.PagedPool`` — block-table indirection, refcounted pages, and
+prefix caching (requests sharing a prompt prefix map their leading
+block-table entries to the same physical pages; fully-hit prefill
+chunks are never dispatched).  ``layout="slotted"`` is the PR 2
+contiguous layout, kept as the differential baseline.
+
+Sampling: greedy argmax by default; ``temperature`` > 0 enables
+temperature sampling (optionally top-k truncated), seeded and
+device-resident like the greedy path.
 """
 from __future__ import annotations
 
@@ -41,10 +53,16 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params, *, mor: Optional[Dict] = None,
                  mor_mode: str = "dense", n_slots: int = 8,
                  max_len: int = 256, chunk: int = 0,
-                 capacities: Optional[Dict] = None, telemetry: bool = True):
+                 capacities: Optional[Dict] = None, telemetry: bool = True,
+                 layout: str = "paged", page: int = 0,
+                 prefix_cache: bool = True,
+                 spare_pages: Optional[int] = None,
+                 temperature: float = 0.0, top_k: int = 0,
+                 sample_seed: int = 0):
         api = get_model(cfg)
         assert api.prefill_chunk is not None, \
             f"{cfg.name} ({cfg.family}) has no serving chunk step"
+        assert layout in ("paged", "slotted")
         self.cfg = cfg
         self.api = api
         self.params = params
@@ -55,12 +73,28 @@ class Engine:
         self.max_len = max_len
         self.mor = self._attach(capacities)
         self.capacities = capacities
-        self.cache = kv_pool.init(cfg, n_slots, max_len, self.chunk)
+        self.layout = layout
+        if layout == "paged":
+            self.pool: Optional[kv_pool.PagedPool] = kv_pool.PagedPool(
+                cfg, n_slots, max_len, chunk=self.chunk, page=page,
+                spare_pages=spare_pages, prefix_cache=prefix_cache)
+            self.cache = self.pool.build()
+            self._reset = None
+        else:
+            self.pool = None
+            self.cache = kv_pool.init(cfg, n_slots, max_len, self.chunk)
+            self._reset = jax.jit(kv_pool.reset_slots, donate_argnums=(0,))
         self.scheduler = Scheduler(n_slots, self.chunk)
         self.telemetry = ServingTelemetry() if telemetry else None
-        self._step = jax.jit(partial(self._step_impl, cfg, api, mor_mode),
-                             donate_argnums=(2,))
-        self._reset = jax.jit(kv_pool.reset_slots, donate_argnums=(0,))
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        self._base_key = jax.random.PRNGKey(sample_seed)
+        copy_pads = ((self.pool.kv_copy_max, self.pool.st_copy_max)
+                     if self.pool is not None else (0, 0))
+        self._step = jax.jit(
+            partial(self._step_impl, cfg, api, mor_mode, self.temperature,
+                    self.top_k, copy_pads),
+            donate_argnums=(2,))
         self._next_rid = 0
         self._aux_log: List[Dict] = []
         # device-resident hot loop: each slot's last sampled token lives
@@ -86,6 +120,8 @@ class Engine:
         if self.telemetry is not None:
             for aux in self._aux_log:
                 self.telemetry.update(aux)
+            if self.pool is not None and self.pool.prefix is not None:
+                self.telemetry.update_prefix(self._prefix_counters())
         self._aux_log.clear()
 
     # -- plan attachment ---------------------------------------------------
@@ -101,8 +137,16 @@ class Engine:
                             capacities=caps)
 
     @staticmethod
-    def _step_impl(cfg, api, mor_mode, params, mor, cache, tokens, n_valid,
-                   use_pending, pending):
+    def _step_impl(cfg, api, mor_mode, temperature, top_k, copy_pads,
+                   params, mor, cache, tokens, n_valid, use_pending,
+                   pending, key, ops):
+        # paged layout: fuse the pool's pending page edits (resets, COW
+        # copies, table uploads — one packed int32 vector) into THIS
+        # compiled step; clean steps pass ops=None and jit caches a
+        # second executable without the apply at all, so the steady
+        # decode loop pays nothing for the allocator
+        if ops is not None:
+            cache = kv_pool.apply_cache_ops(cache, ops, *copy_pads)
         # splice each decoding slot's device-resident last token into
         # column 0 (inside jit: no extra op dispatches on the hot loop)
         tokens = tokens.at[:, 0].set(
@@ -113,7 +157,15 @@ class Engine:
             mor_mode=mor_mode)
         last = jnp.clip(n_valid - 1, 0)
         lg = jnp.take_along_axis(logits, last[:, None, None], axis=1)[:, 0]
-        nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        if temperature > 0.0:
+            lgs = lg.astype(jnp.float32) / temperature
+            if top_k > 0:
+                k = min(top_k, lgs.shape[-1])
+                kth = jax.lax.top_k(lgs, k)[0][:, -1]
+                lgs = jnp.where(lgs < kth[:, None], -jnp.inf, lgs)
+            nxt = jax.random.categorical(key, lgs, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
         new_pending = jnp.where(n_valid > 0, nxt, pending)
         return nxt, new_pending, cache, aux
 
@@ -128,26 +180,47 @@ class Engine:
         self.scheduler.add(Request(rid, prompt, max_new_tokens))
         return rid
 
+    def _admit_match(self, slot: int, req: Request) -> int:
+        return self.pool.admit(slot, req.prompt)
+
     def step(self) -> List[int]:
         """One scheduler iteration: admit, dispatch, ingest.  Returns the
         rids that finished this step."""
         t0 = time.time()
-        admitted = self.scheduler.admit()
-        if admitted:
+        admitted = self.scheduler.admit(
+            self._admit_match if self.pool is not None else None)
+        if admitted and self.pool is None:
             mask = np.zeros((self.n_slots,), bool)
             mask[admitted] = True
             self.cache = self._reset(self.cache, jnp.asarray(mask))
         kind = self.scheduler.next_dispatch()
         if kind is None:
             return []
-        tokens, n_valid, use_pending, emits = \
+        tokens, n_valid, use_pending, emits, finishing = \
             self.scheduler.build_batch(kind)
+        ops = None
+        if self.pool is not None:
+            # pre-dispatch: snapshot recurrent state of slots whose
+            # prompt finishes here (the state at ``offset`` is what the
+            # previous dispatches left in the pool), then allocate /
+            # copy-on-write every page this dispatch will touch; the
+            # resulting device edits ride into the fused step as ``ops``
+            for s, off in finishing:
+                self.pool.maybe_snapshot(s, self.scheduler.slots[s].req.prompt,
+                                         off)
+            self.pool.plan_writes(n_valid)
+            self.cache, ops = self.pool.drain(self.cache)
         # decode riders in a mixed dispatch: counted at BUILD time (feed()
         # below flips prefill->decode / frees finished slots)
         ndec = int(use_pending.sum()) if kind == "mixed" else 0
+        key = jax.random.fold_in(self._base_key, self.counters["dispatches"]) \
+            if self.temperature > 0.0 else self._base_key
         nxt, self._pending, self.cache, aux = self._step(
             self.params, self.mor, self.cache, jnp.asarray(tokens),
-            jnp.asarray(n_valid), jnp.asarray(use_pending), self._pending)
+            jnp.asarray(n_valid), jnp.asarray(use_pending), self._pending,
+            key, ops)
+        if self.pool is not None:
+            self.pool.advance(n_valid)
         if emits:
             self._tok_log.append((emits, nxt))
         if self.telemetry is not None and aux:
@@ -155,7 +228,15 @@ class Engine:
             # lazily in _flush_telemetry so the dispatch loop never syncs
             # on telemetry
             self._aux_log.append(aux)
-        done = [req.rid for req in self.scheduler.feed(n_valid)]
+        finished, entering = self.scheduler.feed(n_valid)
+        if self.pool is not None:
+            # publish AFTER the dispatch that wrote the prompt's last
+            # pages; release AFTER publish so a request finishing in the
+            # same step still shares its pages
+            for s, req in entering:
+                self.pool.publish(s, req.prompt)
+            for s, _ in finished:
+                self.pool.release(s)
         self.counters["dispatches"] += 1
         nv_total = int(n_valid.sum())
         if kind == "decode":
@@ -165,13 +246,20 @@ class Engine:
             self.counters["decode_tokens"] += ndec
             self.counters["prefill_tokens"] += nv_total - ndec
         self.counters["wall_s"] += time.time() - t0
-        return done
+        return [req.rid for _, req in finished]
 
     def reset_counters(self) -> None:
-        """Zero the throughput counters (e.g. between a compile-warmup
-        pass and a timed pass)."""
+        """Zero the throughput AND prefix-cache counters (e.g. between a
+        compile-warmup pass and a timed pass) — so a report's hit rate /
+        skipped chunks describe the same pass as its token counts.  The
+        cache CONTENTS survive: only the accounting resets."""
         self.counters = {"prefill_tokens": 0, "decode_tokens": 0,
                          "dispatches": 0, "wall_s": 0.0}
+        self.scheduler.chunks_skipped = 0
+        self.scheduler.tokens_skipped = 0
+        if self.pool is not None:
+            for k in self.pool.counters:
+                self.pool.counters[k] = 0
 
     def run(self, requests=None) -> Dict[int, List[int]]:
         """Drive the queue (plus optional (prompt, max_new) pairs) to
@@ -206,6 +294,25 @@ class Engine:
         self.mor = self._attach(caps)
         return caps
 
+    def _prefix_counters(self) -> Dict:
+        """Prefix-cache counters merged across the pool (pages, hits)
+        and the scheduler (chunks whose dispatch was skipped)."""
+        pc = self.pool.report()
+        return {
+            "hit_rate": pc.get("hit_rate", 0.0),
+            "prefix_queries": pc.get("prefix_queries", 0),
+            "prefix_hits": pc.get("prefix_hits", 0),
+            "tokens_reused": pc.get("tokens_reused", 0),
+            "pages_shared": pc.get("pages_shared", 0),
+            "pages_published": pc.get("pages_published", 0),
+            "pages_cowed": pc.get("pages_cowed", 0),
+            "pages_evicted": pc.get("pages_evicted", 0),
+            "snapshots": pc.get("snapshots", 0),
+            "snap_restores": pc.get("snap_restores", 0),
+            "chunks_skipped": self.scheduler.chunks_skipped,
+            "tokens_skipped": self.scheduler.tokens_skipped,
+        }
+
     def report(self) -> Dict:
         self._flush_tokens()
         c = dict(self.counters)
@@ -216,12 +323,19 @@ class Engine:
         wall = max(c["wall_s"], 1e-9)
         rep = {
             "n_slots": self.n_slots, "chunk": self.chunk,
-            "mor_mode": self.mor_mode,
+            "mor_mode": self.mor_mode, "layout": self.layout,
             "requests_finished": len(self.results),
             "tokens_per_s": (c["decode_tokens"] + c["prefill_tokens"]) / wall,
             "decode_tokens_per_s": c["decode_tokens"] / wall,
             **c,
         }
+        if self.temperature > 0.0:
+            rep["sampling"] = {"temperature": self.temperature,
+                               "top_k": self.top_k}
+        if self.pool is not None:
+            rep["page"] = self.pool.page
+            if self.pool.prefix is not None:
+                rep["prefix_cache"] = self._prefix_counters()
         if self.telemetry is not None:
             self._flush_telemetry()
             rep["telemetry"] = self.telemetry.summary()
@@ -229,5 +343,3 @@ class Engine:
             rep["per_layer_capacity"] = {
                 k: np.asarray(v).tolist() for k, v in self.capacities.items()}
         return rep
-
-

@@ -1,32 +1,53 @@
-"""Slot-pool cache: the serving engine's per-slot decode-cache layout.
+"""Serving cache layouts: the legacy contiguous slot pool and the paged
+pool (fixed-size pages + block tables + refcounts + copy-on-write).
 
-``models.*.cache_init`` builds UNIFORM-batch caches: one scalar clock
-(``cache["pos"]``) and, for attention families, one shared (L,) ring of
-kv position tags — fine when every sequence in the batch advances in
-lockstep, wrong for continuous batching where each slot sits at its own
-position.  ``init`` upgrades that layout in place:
+**Slot pool** (``init`` / ``reset_slots``): every slot owns a contiguous
+cache row — the layout PR 2 shipped, kept as the differential baseline
+(``Engine(layout="slotted")`` and the tests' paged-vs-slotted matrix).
 
-  * top-level ``pos``: scalar -> (n_slots,) per-slot positions;
-  * attention ring tags: (stack, L) -> (stack, n_slots, L);
-  * MLA latent caches gain per-slot (stack, n_slots, max_len) tags
-    (the uniform layout masks by the scalar clock instead);
-  * sliding-window rings are allocated with a ``serve_chunk`` margin
-    above the window so a prefill chunk never overwrites kv rows still
-    inside another in-chunk token's window.
+**Paged pool** (``PagedPool``): physical storage is a pool of fixed-size
+pages and every token-indexed leaf is read/written through a per-slot
+*block table* indirection:
 
-Every stacked leaf keeps the batch dim at axis 1 (axis 0 = layer stack)
-and the top-level ``pos`` at axis 0 — ``reset_slots`` relies on exactly
-this invariant to recycle evicted slots in one masked select.
+  * attention kv rings and MLA latent caches become
+    ``(stack, n_pages, page, ...)`` pools; a slot's logical ring row
+    ``r`` lives at ``(block_table[slot, r // page], r % page)``.  Page 0
+    is a reserved null page (position tags -1, always masked) so
+    unallocated block-table entries read as empty.
+  * recurrent state (rwkv shift/wkv, mamba conv/ssd) becomes a
+    ``(L, n_state_pages, ...)`` pool indexed by a one-entry-per-slot
+    ``state_table`` — the same indirection with block count 1, which is
+    what lets state snapshots live in the same pool as live slots.
+
+The allocator half (``BlockAllocator``) is pure host-side numpy — free
+list, refcounts, block tables — so its invariants (no page leaked, no
+page double-owned, copy-on-write never mutates a shared page) are
+property-testable without a device.  ``PagedPool`` drives it, packs the
+resulting device edits (page-tag resets, page copies, table uploads)
+into ONE int32 vector per dirty dispatch (``drain``) that the engine
+applies INSIDE its compiled step (``apply_cache_ops`` — clean
+dispatches skip it entirely), and implements prefix caching on top:
+published full pages / state snapshots are refcounted by a
+``prefix_cache.PrefixCache`` and shared into new slots' tables at
+admission; the first divergent write to a shared page triggers
+copy-on-write (the scheduler is count-based, so the engine knows every
+page a dispatch will write BEFORE dispatching it).
+
+Every stacked leaf keeps the page/batch dim at axis 1 (axis 0 = layer
+stack) and the top-level ``pos`` at axis 0 — both layouts rely on
+exactly this invariant.
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import get_model
+from repro.serving.prefix_cache import PrefixCache
 
 
 def ring_cfg(cfg: ModelConfig, chunk: int) -> ModelConfig:
@@ -37,6 +58,10 @@ def ring_cfg(cfg: ModelConfig, chunk: int) -> ModelConfig:
         cfg = cfg.replace(shared_attn_window=cfg.shared_attn_window + chunk)
     return cfg
 
+
+# ==========================================================================
+# slot-pool layout (contiguous per-slot rows) — the PR 2 baseline
+# ==========================================================================
 
 def _upgrade(node, n_slots: int):
     if not isinstance(node, dict):
@@ -88,3 +113,656 @@ def reset_slots(cache: Dict, slots) -> Dict:
            for k, v in cache.items() if k != "pos"}
     out["pos"] = jnp.where(slots, 0, cache["pos"])
     return out
+
+
+# ==========================================================================
+# paged layout: tree walkers
+# ==========================================================================
+
+_TABLE_KEYS = ("pos", "block_table", "state_table")
+
+
+def _is_kv_node(node) -> bool:
+    return isinstance(node, dict) and (
+        ("k" in node and "pos" in node) or "c_kv" in node)
+
+
+def map_kv_nodes(tree, fn):
+    """Apply ``fn`` to every token-indexed cache node (attention ring /
+    MLA latent dicts), leaving everything else untouched."""
+    if _is_kv_node(tree):
+        return fn(tree)
+    if isinstance(tree, dict):
+        return {k: map_kv_nodes(v, fn) for k, v in tree.items()}
+    return tree
+
+
+def map_state_leaves(tree, fn):
+    """Apply ``fn`` to every recurrent-state leaf (any array leaf NOT
+    inside a token-indexed node)."""
+    if _is_kv_node(tree):
+        return tree
+    if isinstance(tree, dict):
+        return {k: map_state_leaves(v, fn) for k, v in tree.items()}
+    return fn(tree)
+
+
+def _pool_dims(cache) -> Tuple[int, int]:
+    """-> (n_pages, n_state_pages) read off the paged cache's leaves
+    (0 when the model has no leaves of that kind)."""
+    n_pages = n_spages = 0
+
+    def kv(node):
+        nonlocal n_pages
+        n_pages = node["pos"].shape[-2]
+        return node
+
+    def stl(a):
+        nonlocal n_spages
+        n_spages = a.shape[1]
+        return a
+
+    for k, v in cache.items():
+        if k in _TABLE_KEYS:
+            continue
+        map_kv_nodes(v, kv)
+        map_state_leaves(v, stl)
+    return n_pages, n_spages
+
+
+def apply_cache_ops(cache: Dict, ops, kv_copy_max: int,
+                    st_copy_max: int) -> Dict:
+    """Apply one batch of host-planned pool edits to the device cache —
+    page-tag resets for freshly allocated pages, page copies (COW /
+    state snapshot+restore), and table/pos uploads.  Pure and jit-safe;
+    the engine fuses it into the compiled dispatch step, so a dirty
+    dispatch costs ONE extra host->device transfer (``ops`` is a single
+    packed int32 vector, laid out by ``PagedPool._build_ops``) and a
+    clean dispatch skips the whole thing (``ops=None`` selects a
+    separately-compiled step without it)."""
+    has_kv = "block_table" in cache
+    has_state = "state_table" in cache
+    n_slots = cache["pos"].shape[0]
+    n_pages, n_spages = _pool_dims(cache)
+
+    def take(n):
+        nonlocal i
+        sl = ops[i:i + n]            # static offsets: plain slices
+        i += n
+        return sl
+
+    i = 0
+    out = {"pos": take(n_slots)}
+    if has_kv:
+        n_blocks = cache["block_table"].shape[1]
+        out["block_table"] = take(n_slots * n_blocks).reshape(n_slots,
+                                                              n_blocks)
+    if has_state:
+        out["state_table"] = take(n_slots)
+    kv_reset = take(n_pages).astype(bool) if has_kv else None
+    kv_src = take(kv_copy_max) if has_kv else None
+    kv_dst = take(kv_copy_max) if has_kv else None
+    s_reset = take(n_spages).astype(bool) if has_state else None
+    s_src = take(st_copy_max) if has_state else None
+    s_dst = take(st_copy_max) if has_state else None
+
+    def kv(node):
+        node = dict(node)
+        tag = node["pos"]
+        m = kv_reset.reshape((1, -1) + (1,) * (tag.ndim - 2))
+        node["pos"] = jnp.where(m, jnp.full((), -1, tag.dtype), tag)
+        for key, a in node.items():
+            node[key] = a.at[:, kv_dst].set(a[:, kv_src])
+        return node
+
+    def stl(a):
+        m = s_reset.reshape((1, -1) + (1,) * (a.ndim - 2))
+        a = jnp.where(m, jnp.zeros((), a.dtype), a)
+        # sequential: a restore may read a snapshot taken earlier in
+        # the same batch (pads are null-page self-copies, no-ops)
+        for j in range(st_copy_max):
+            a = a.at[:, s_dst[j]].set(a[:, s_src[j]])
+        return a
+
+    for k, v in cache.items():
+        if k in _TABLE_KEYS:
+            continue
+        if has_kv:
+            v = map_kv_nodes(v, kv)
+        if has_state:
+            v = map_state_leaves(v, stl)
+        out[k] = v
+    return out
+
+
+def _scan_structure(cache) -> Tuple[bool, bool, int]:
+    """-> (has_kv, has_state, kv ring length in rows)."""
+    has_kv, has_state, ring = False, False, 0
+
+    def kv(node):
+        nonlocal has_kv, ring
+        has_kv = True
+        rows = (node["k"].shape[-3] if "k" in node
+                else node["c_kv"].shape[-2])
+        ring = max(ring, rows)
+        return node
+
+    def st(leaf):
+        nonlocal has_state
+        has_state = True
+        return leaf
+
+    for k, v in cache.items():
+        if k in _TABLE_KEYS:
+            continue
+        map_kv_nodes(v, kv)
+        map_state_leaves(v, st)
+    return has_kv, has_state, ring
+
+
+# ==========================================================================
+# BlockAllocator: host-side page accounting (property-tested)
+# ==========================================================================
+
+class BlockAllocator:
+    """Free list + refcounts + per-slot block tables for one page pool.
+
+    Page ids are ints in ``[1, n_pages)``; id 0 is the reserved null
+    page (reads of it are masked by -1 position tags) and is never
+    allocated.  A page's refcount equals the number of holders: block
+    table entries pointing at it plus external retains (prefix-cache
+    entries).  ``ref == 1`` with a single table entry means the slot
+    owns the page exclusively and may write it in place; ``write_plan``
+    enforces that, allocating fresh pages for null entries and
+    copy-on-writing shared ones."""
+
+    def __init__(self, n_pages: int, n_slots: int, n_blocks: int):
+        assert n_pages >= 2 and n_slots >= 1 and n_blocks >= 1
+        self.n_pages = n_pages
+        self.table = np.zeros((n_slots, n_blocks), np.int32)
+        self.ref = np.zeros((n_pages,), np.int64)
+        self.ref[0] = 1                          # null page, pinned
+        self.free: List[int] = list(range(n_pages - 1, 0, -1))
+
+    # -- primitive ops -----------------------------------------------------
+    def alloc(self) -> Optional[int]:
+        if not self.free:
+            return None
+        p = self.free.pop()
+        assert self.ref[p] == 0, "free list held a referenced page"
+        self.ref[p] = 1
+        return p
+
+    def retain(self, page: int) -> None:
+        assert page != 0 and self.ref[page] > 0, "retain of unowned page"
+        self.ref[page] += 1
+
+    def unalloc(self, page: int) -> None:
+        """Return a just-allocated (sole-ref) page to the free list."""
+        assert self.ref[page] == 1, "unalloc of a shared page"
+        self.ref[page] = 0
+        self.free.append(page)
+
+    def drop(self, page: int) -> bool:
+        """Drop one reference; returns True if the page was freed."""
+        assert page != 0 and self.ref[page] > 0, "drop of unowned page"
+        self.ref[page] -= 1
+        if self.ref[page] == 0:
+            self.free.append(page)
+            return True
+        return False
+
+    # -- table ops ---------------------------------------------------------
+    def share(self, slot: int, block: int, page: int) -> None:
+        """Point a (null) block-table entry at an existing page."""
+        assert self.table[slot, block] == 0, "share over an owned block"
+        self.retain(page)
+        self.table[slot, block] = page
+
+    def write_plan(self, slot: int, blocks: Sequence[int], alloc=None,
+                   on_copy=None) -> Tuple[List[int], List[Tuple[int, int]]]:
+        """Make every listed block exclusively owned by ``slot`` before a
+        dispatch writes it.  Returns ``(fresh, copies)``: ``fresh`` pages
+        were allocated for null entries (device must reset their position
+        tags), ``copies`` are (src, dst) copy-on-write pairs (dst is a
+        fresh page; src keeps its remaining holders and is NEVER written
+        — the COW invariant).  ``on_copy(src, dst)`` fires the moment a
+        pair is created — BEFORE any later block's alloc — so the caller
+        can pin src against eviction by that very alloc."""
+        alloc = alloc or self.alloc
+        fresh: List[int] = []
+        copies: List[Tuple[int, int]] = []
+        for b in blocks:
+            cur = int(self.table[slot, b])
+            if cur != 0 and self.ref[cur] == 1:
+                continue                          # already exclusive
+            new = alloc()
+            if new is None:
+                raise RuntimeError("paged KV pool exhausted")
+            if cur == 0:
+                fresh.append(new)
+            else:
+                copies.append((cur, new))
+                if on_copy is not None:
+                    on_copy(cur, new)
+                self.drop(cur)                    # ref > 1: never frees
+            self.table[slot, b] = new
+        return fresh, copies
+
+    def release_slot(self, slot: int) -> List[int]:
+        """Drop the slot's references; returns the pages actually freed."""
+        freed = []
+        for b in np.nonzero(self.table[slot])[0]:
+            p = int(self.table[slot, b])
+            if self.drop(p):
+                freed.append(p)
+        self.table[slot, :] = 0
+        return freed
+
+    # -- invariants (asserted by the property tests) -----------------------
+    def check(self, external_refs: Optional[Dict[int, int]] = None) -> None:
+        """No page leaked, no page double-owned: every non-null page is
+        either on the free list (ref 0) or referenced, with its refcount
+        equal to its holder count (table occurrences + external refs)."""
+        free = set(self.free)
+        assert len(free) == len(self.free), "free list has duplicates"
+        assert 0 not in free and self.ref[0] == 1
+        counts = np.bincount(self.table.reshape(-1),
+                             minlength=self.n_pages).astype(np.int64)
+        counts[0] = 1
+        for p, n in (external_refs or {}).items():
+            counts[p] += n
+        for p in range(1, self.n_pages):
+            if p in free:
+                assert self.ref[p] == 0, f"page {p} free but referenced"
+                assert counts[p] == 0, f"page {p} free but held"
+            else:
+                assert self.ref[p] == counts[p], \
+                    f"page {p}: ref {self.ref[p]} != holders {counts[p]}"
+
+
+# ==========================================================================
+# PagedPool: device pool + prefix caching on top of the allocator
+# ==========================================================================
+
+class PagedPool:
+    """The paged serving cache: builds the device pytree, owns the host
+    allocators and the prefix cache, and turns host-side decisions into
+    ONE packed ops vector per dirty dispatch (``drain``) that the engine
+    fuses into its compiled step — clean dispatches upload nothing and
+    run a separately-compiled step without the apply.
+
+    The device cache is NOT stored here — ``build()`` returns it and
+    every mutating method takes and returns it (the engine owns the
+    single live copy because the dispatch step donates it)."""
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, max_len: int, *,
+                 chunk: int = 0, page: int = 0, dtype=None,
+                 spare_pages: Optional[int] = None,
+                 snap_slots: Optional[int] = None,
+                 prefix_cache: bool = True):
+        chunk = chunk or cfg.serve_chunk
+        page = page or cfg.serve_page
+        assert page >= 1
+        self.cfg, self.n_slots, self.max_len = cfg, n_slots, max_len
+        self.chunk, self.page = chunk, page
+        api = get_model(cfg)
+        assert api.cache_init is not None, f"{cfg.name} has no decode cache"
+        proto = api.cache_init(ring_cfg(cfg, chunk), 1, max_len,
+                               dtype or cfg.jdtype)
+        self.has_kv, self.has_state, rows = _scan_structure(proto)
+        self._proto = proto
+        # ring length rounded up to a page multiple: position p maps to
+        # ring row p % ring, block r // page, offset r % page
+        self.n_blocks = max(1, -(-rows // page)) if self.has_kv else 0
+        self.ring = self.n_blocks * page
+        if self.has_kv:
+            spare = (n_slots * self.n_blocks if spare_pages is None
+                     else spare_pages)
+            self.n_pages = 1 + n_slots * self.n_blocks + spare
+            self.kv = BlockAllocator(self.n_pages, n_slots, self.n_blocks)
+        else:
+            self.n_pages, self.kv = 0, None
+        if self.has_state:
+            n_snap = (n_slots if (snap_slots is None and prefix_cache)
+                      else (snap_slots or 0))
+            # one live page per slot + one spare per slot (admission
+            # cycles to a fresh page before the old one is dropped) +
+            # the snapshot budget; page 0 reserved as null for symmetry
+            self.n_spages = 1 + 2 * n_slots + n_snap
+            self.st = BlockAllocator(self.n_spages, n_slots, 1)
+            for s in range(n_slots):
+                self.st.table[s, 0] = self.st.alloc()
+        else:
+            self.n_spages, self.st = 0, None
+        self.prefix = PrefixCache(page) if prefix_cache else None
+        self.pos = np.zeros((n_slots,), np.int64)
+        self.counters = {
+            "prefix_queries": 0, "prefix_hits": 0, "tokens_reused": 0,
+            "pages_shared": 0, "pages_published": 0, "pages_cowed": 0,
+            "pages_evicted": 0, "snapshots": 0, "snap_restores": 0,
+        }
+        # pending device ops, applied by the next flush
+        self._kv_reset: set = set()
+        self._kv_copies: List[Tuple[int, int]] = []
+        self._st_reset: set = set()
+        self._st_copies: List[Tuple[int, int]] = []
+        self._dirty = False
+        self.kv_copy_max = max(1, n_slots * (chunk // page + 2))
+        # restores + snapshots per dispatch rarely exceed the slot
+        # count; bursts overflow into extra pre-step apply rounds
+        self.st_copy_max = max(1, n_slots)
+        self._apply = jax.jit(
+            lambda cache, ops: apply_cache_ops(cache, ops,
+                                               self.kv_copy_max,
+                                               self.st_copy_max),
+            donate_argnums=(0,))
+
+    # -- device cache ------------------------------------------------------
+    def build(self) -> Dict:
+        """Allocate the paged device cache (all pools zeroed, position
+        tags -1, block tables null, state table at each slot's page)."""
+        n_pages, page, n_spages = self.n_pages, self.page, self.n_spages
+
+        def kv(node):
+            out = {}
+            for key in ("k", "v", "c_kv", "k_pe"):
+                if key in node:
+                    a = node[key]
+                    lead, feat = a.shape[:-3], a.shape[-1:]
+                    if key in ("k", "v"):
+                        feat = a.shape[-2:]
+                        lead = a.shape[:-4]
+                    out[key] = jnp.zeros(lead + (n_pages, page) + feat,
+                                         a.dtype)
+            ref = node["k"] if "k" in node else node["c_kv"]
+            lead = ref.shape[:-4] if "k" in node else ref.shape[:-3]
+            out["pos"] = jnp.full(lead + (n_pages, page), -1, jnp.int32)
+            return out
+
+        def st(a):
+            return jnp.zeros(a.shape[:1] + (n_spages,) + a.shape[2:],
+                             a.dtype)
+
+        cache: Dict = {}
+        for k, v in self._proto.items():
+            if k in _TABLE_KEYS:
+                continue
+            v = map_kv_nodes(v, kv)
+            v = map_state_leaves(v, st)
+            cache[k] = v
+        cache["pos"] = jnp.zeros((self.n_slots,), jnp.int32)
+        if self.has_kv:
+            cache["block_table"] = jnp.zeros((self.n_slots, self.n_blocks),
+                                             jnp.int32)
+        if self.has_state:
+            cache["state_table"] = jnp.asarray(self.st.table[:, 0],
+                                               jnp.int32)
+        return cache
+
+    def _build_ops(self):
+        """Materialise ONE round of pending edits as a single packed
+        int32 vector (layout mirrored by ``apply_cache_ops``) — one
+        host->device transfer per dirty dispatch."""
+        parts = [np.asarray(self.pos, np.int32)]
+        if self.has_kv:
+            parts.append(self.kv.table.reshape(-1).astype(np.int32))
+        if self.has_state:
+            parts.append(self.st.table[:, 0].astype(np.int32))
+        if self.has_kv:
+            kvc = self._kv_copies[:self.kv_copy_max]
+            del self._kv_copies[:self.kv_copy_max]
+            kv_reset = np.zeros((self.n_pages,), np.int32)
+            for p in self._kv_reset:
+                kv_reset[p] = 1
+            self._kv_reset.clear()
+            kv_src = np.zeros((self.kv_copy_max,), np.int32)
+            kv_dst = np.zeros((self.kv_copy_max,), np.int32)
+            for i, (s, d) in enumerate(kvc):
+                kv_src[i], kv_dst[i] = s, d
+                self.kv.drop(s)          # release the pending-src pin
+            parts += [kv_reset, kv_src, kv_dst]
+        if self.has_state:
+            stc = self._st_copies[:self.st_copy_max]
+            del self._st_copies[:self.st_copy_max]
+            s_reset = np.zeros((self.n_spages,), np.int32)
+            for p in self._st_reset:
+                s_reset[p] = 1
+            self._st_reset.clear()
+            s_src = np.zeros((self.st_copy_max,), np.int32)
+            s_dst = np.zeros((self.st_copy_max,), np.int32)
+            for i, (s, d) in enumerate(stc):
+                s_src[i], s_dst[i] = s, d
+                self.st.drop(s)          # release the pending-src pin
+            parts += [s_reset, s_src, s_dst]
+        return jnp.asarray(np.concatenate(parts))
+
+    def drain(self, cache: Dict) -> Tuple[Dict, Optional[jnp.ndarray]]:
+        """-> (cache, ops): the pending edits as ONE packed vector for
+        the engine to fuse into its compiled step, or None when clean
+        (the engine's clean-step executable skips the apply entirely).
+        Overflow rounds (more COW/snapshot copies than the pad width —
+        rare) are applied to the cache directly."""
+        if not self._dirty:
+            return cache, None
+        ops = self._build_ops()
+        while self._kv_copies or self._st_copies:
+            cache = self._apply(cache, ops)
+            ops = self._build_ops()
+        self._dirty = False
+        return cache, ops
+
+    def flush(self, cache: Dict) -> Dict:
+        """Apply all pending edits now (standalone jitted call — the
+        engine prefers ``drain`` + its fused step).  No-op when clean."""
+        cache, ops = self.drain(cache)
+        if ops is not None:
+            cache = self._apply(cache, ops)
+        return cache
+
+    # -- pending page copies: the src is PINNED (one extra ref) from
+    # queueing until ``_build_ops`` emits the pair, so no interleaved
+    # eviction/free can recycle it and reset/zero it ahead of the copy
+    def _push_kv_copy(self, src: int, dst: int) -> None:
+        self.kv.retain(src)
+        self._kv_copies.append((src, dst))
+        self._kv_reset.add(dst)
+        self._dirty = True
+
+    def _push_st_copy(self, src: int, dst: int) -> None:
+        self.st.retain(src)
+        self._st_copies.append((src, dst))
+        self._dirty = True
+
+    # -- allocation with prefix-cache eviction -----------------------------
+    def _kv_alloc(self) -> Optional[int]:
+        p = self.kv.alloc()
+        while p is None and self.prefix is not None:
+            # evict only entries whose page actually frees (an entry
+            # still shared into a live slot reclaims nothing — keep it
+            # for future hits); same for snapshots via their kv pages
+            pg = self.prefix.evict_lru_page(
+                lambda q: self.kv.ref[q] == 1)
+            if pg is not None:
+                self.kv.drop(pg)
+                self.counters["pages_evicted"] += 1
+            else:
+                e = self.prefix.evict_lru_snap(
+                    lambda s: any(self.kv.ref[q] == 1 for q in s.kv_pages))
+                if e is None:
+                    break
+                self._drop_snap(e)
+            p = self.kv.alloc()
+        if p is not None:
+            self._kv_reset.add(p)
+            self._dirty = True
+        return p
+
+    def _st_alloc(self) -> Optional[int]:
+        p = self.st.alloc()
+        while p is None and self.prefix is not None:
+            # a pinned snapshot (mid-restore this step) has spage ref
+            # > 1 and is excluded; everything else frees its state page
+            e = self.prefix.evict_lru_snap(
+                lambda s: self.st.ref[s.spage] == 1)
+            if e is None:
+                break
+            self._drop_snap(e)
+            p = self.st.alloc()
+        if p is not None:
+            self._st_reset.add(p)
+            self._dirty = True
+        return p
+
+    def _drop_snap(self, e) -> None:
+        if self.st.drop(e.spage):
+            self.counters["pages_evicted"] += 1
+        for pg in e.kv_pages:
+            if self.kv.drop(pg):
+                self.counters["pages_evicted"] += 1
+
+    # -- engine lifecycle ---------------------------------------------------
+    def admit(self, slot: int, prompt: np.ndarray) -> int:
+        """Attach a fresh request to ``slot``: match the prompt against
+        the prefix cache, share hit pages / restore the hit snapshot,
+        cycle the slot onto a fresh state page, and reset its position.
+        Returns the number of leading tokens whose prefill is skipped
+        (always < len(prompt): the last token is recomputed to produce
+        the first sampled logit)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        n_cached = 0
+        shared_pages: List[int] = []
+        snap = None
+        if self.prefix is not None:
+            self.counters["prefix_queries"] += 1
+            limit = len(prompt) - 1
+            if self.has_state:
+                snap = self.prefix.match_state(prompt, limit)
+                if snap is not None:
+                    n_cached = snap.n_tokens
+                    shared_pages = snap.kv_pages
+            elif self.has_kv:
+                shared_pages = self.prefix.match_pages(prompt, limit)
+                n_cached = len(shared_pages) * self.page
+            if n_cached:
+                self.counters["prefix_hits"] += 1
+                self.counters["tokens_reused"] += n_cached
+                self.counters["pages_shared"] += len(shared_pages)
+        for i, pg in enumerate(shared_pages):
+            self.kv.share(slot, i, pg)
+        if self.has_state:
+            if snap is not None:
+                # pin the matched snapshot across the alloc below: its
+                # eviction would free (and possibly recycle) the very
+                # page the restore copy is about to read
+                self.st.retain(snap.spage)
+            new = self._st_alloc()
+            if new is None:
+                raise RuntimeError("paged state pool exhausted")
+            self.st.drop(int(self.st.table[slot, 0]))
+            self.st.table[slot, 0] = new
+            if snap is not None:
+                self._push_st_copy(snap.spage, new)
+                self.st.drop(snap.spage)         # release the admit pin
+                self.counters["snap_restores"] += 1
+        self.pos[slot] = n_cached
+        self._dirty = True
+        return n_cached
+
+    def plan_writes(self, n_valid: np.ndarray) -> None:
+        """Pre-dispatch (host only): make every page this dispatch will
+        write exclusively owned — fresh alloc for null blocks,
+        copy-on-write for shared ones."""
+        if not self.has_kv:
+            return
+        for s, nv in enumerate(np.asarray(n_valid)):
+            if nv <= 0:
+                continue
+            p0 = int(self.pos[s])
+            blocks = sorted({(p % self.ring) // self.page
+                             for p in range(p0, p0 + int(nv))})
+            fresh, copies = self.kv.write_plan(s, blocks,
+                                               alloc=self._kv_alloc,
+                                               on_copy=self._push_kv_copy)
+            self.counters["pages_cowed"] += len(copies)
+            if fresh:
+                self._dirty = True
+
+    def prepare(self, cache: Dict, n_valid: np.ndarray) -> Dict:
+        """plan_writes + standalone flush (the engine instead drains the
+        ops into its fused compiled step)."""
+        self.plan_writes(n_valid)
+        return self.flush(cache)
+
+    def advance(self, n_valid: np.ndarray) -> None:
+        self.pos += np.asarray(n_valid, np.int64)
+
+    def maybe_snapshot(self, slot: int, prompt: np.ndarray,
+                       offset: int) -> None:
+        """Called just before the dispatch that finishes ``slot``'s
+        prompt: snapshot the recurrent state at ``offset`` (page-aligned
+        chunk boundary) keyed by ``prompt[:offset]``, retaining the
+        shared-attention pages below it for hybrid models."""
+        if self.prefix is None or not self.has_state:
+            return
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if offset <= 0 or offset % self.page or offset > len(prompt) - 1:
+            return
+        if self.has_kv and offset > self.ring:
+            return                       # ring wrapped: pages incomplete
+        if self.prefix.has_state(prompt, offset):
+            return
+        spage = self._st_alloc()
+        if spage is None:
+            return                       # snapshot budget exhausted
+        self._push_st_copy(int(self.st.table[slot, 0]), spage)
+        kv_pages: List[int] = []
+        if self.has_kv:
+            kv_pages = [int(self.kv.table[slot, i])
+                        for i in range(offset // self.page)]
+            for pg in kv_pages:
+                self.kv.retain(pg)
+        self.prefix.insert_state(prompt, offset, spage, kv_pages)
+        self.counters["snapshots"] += 1
+        self._dirty = True
+
+    def publish(self, slot: int, prompt: np.ndarray) -> None:
+        """Called when ``slot`` finishes prefill (attention families):
+        publish the full pages of its prompt into the prefix trie."""
+        if self.prefix is None or not self.has_kv or self.has_state:
+            return
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) > self.ring:
+            return                       # ring wrapped: pages incomplete
+        n_full = (len(prompt) // self.page) * self.page
+        new = self.prefix.insert_pages(
+            prompt, n_full, lambda i: self.kv.table[slot, i])
+        for pg in new:
+            self.kv.retain(pg)
+        self.counters["pages_published"] += len(new)
+
+    def release(self, slot: int) -> None:
+        """Evict a finished request: drop its page refs (pages still
+        pinned by the prefix cache survive for future hits)."""
+        if self.has_kv:
+            self.kv.release_slot(slot)
+        self.pos[slot] = 0
+        self._dirty = True
+
+    # -- reporting ----------------------------------------------------------
+    def report(self) -> Dict:
+        rep = {
+            "page": self.page, "n_blocks": self.n_blocks,
+            "ring": self.ring, "n_pages": self.n_pages,
+            "n_state_pages": self.n_spages,
+            "prefix_caching": self.prefix is not None,
+        }
+        if self.has_kv:
+            rep["pages_in_use"] = int(np.sum(self.kv.ref > 0) - 1)
+        if self.prefix is not None:
+            q = max(self.counters["prefix_queries"], 1)
+            n_pages, n_snaps = self.prefix.n_entries
+            rep.update(self.counters,
+                       hit_rate=self.counters["prefix_hits"] / q,
+                       trie_pages=n_pages, trie_snapshots=n_snaps)
+        return rep

@@ -49,21 +49,40 @@ class Scheduler:
         self.chunk = chunk
         self.slots = [_Slot() for _ in range(n_slots)]
         self.waiting: Deque[Request] = deque()
+        # prefix-cache accounting (admission-time hits shrink a
+        # request's remaining prefill; see ``admit``)
+        self.chunks_skipped = 0
+        self.tokens_skipped = 0
 
     # -- admission ---------------------------------------------------------
     def add(self, req: Request) -> None:
         self.waiting.append(req)
 
-    def admit(self) -> List[int]:
+    def admit(self, match=None) -> List[int]:
         """Move waiting requests into free slots; returns the admitted
-        slot indices (their cache rows must be reset before dispatch)."""
+        slot indices (their cache rows must be reset before dispatch).
+
+        ``match(slot, req) -> n_cached`` is the prefix-cache hook (the
+        paged engine binds it to ``PagedPool.admit``): the request's
+        first ``n_cached`` prompt tokens are already in the cache, so
+        prefill starts at that offset — whole chunks whose pages fully
+        hit are never dispatched."""
         newly = []
         for s, slot in enumerate(self.slots):
             if not self.waiting:
                 break
             if slot.state is FREE:
                 req = self.waiting.popleft()
-                self.slots[s] = _Slot(state=PREFILL, req=req)
+                off = 0
+                if match is not None:
+                    off = int(match(s, req))
+                    assert 0 <= off < len(req.prompt)
+                self.slots[s] = _Slot(state=PREFILL, req=req, offset=off)
+                if off:
+                    cold = -(-len(req.prompt) // self.chunk)
+                    warm = -(-(len(req.prompt) - off) // self.chunk)
+                    self.chunks_skipped += cold - warm
+                    self.tokens_skipped += off
                 newly.append(s)
         return newly
 
@@ -82,20 +101,26 @@ class Scheduler:
 
     def build_batch(self, kind: str
                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                               List[Tuple[int, int]],
                                List[Tuple[int, int]]]:
-        """-> (tokens (B, C), n_valid (B,), use_pending (B,), emits).
+        """-> (tokens (B, C), n_valid (B,), use_pending (B,), emits,
+        finishing).
 
         ``tokens`` carries each prefilling slot's next prompt chunk;
         slots flagged in ``use_pending`` feed their device-resident last
         sampled token instead (the engine splices it in without a host
         round-trip).  ``emits`` lists (slot, rid) pairs that will emit a
         generated token from THIS dispatch (decoding slots, and prefill
-        slots whose prompt completes here)."""
+        slots whose prompt completes here).  ``finishing`` lists (slot,
+        offset) pairs whose PROMPT completes this dispatch — the paged
+        engine snapshots recurrent state at ``offset`` before
+        dispatching (prefix cache for ssm/hybrid families)."""
         C = self.chunk if kind == "mixed" else 1
         tokens = np.zeros((self.n_slots, C), np.int32)
         n_valid = np.zeros((self.n_slots,), np.int32)
         use_pending = np.zeros((self.n_slots,), bool)
         emits: List[Tuple[int, int]] = []
+        finishing: List[Tuple[int, int]] = []
         for s, slot in enumerate(self.slots):
             if slot.state is PREFILL:
                 take = min(C, len(slot.req.prompt) - slot.offset)
@@ -104,18 +129,26 @@ class Scheduler:
                 n_valid[s] = take
                 if slot.offset + take >= len(slot.req.prompt):
                     emits.append((s, slot.req.rid))
+                    finishing.append((s, slot.offset))
             elif slot.state is DECODE:
                 use_pending[s] = True
                 n_valid[s] = 1
                 emits.append((s, slot.req.rid))
-        return tokens, n_valid, use_pending, emits
+        return tokens, n_valid, use_pending, emits, finishing
 
     # -- result ingestion --------------------------------------------------
-    def feed(self, n_valid: np.ndarray) -> List[Request]:
+    def feed(self, n_valid: np.ndarray
+             ) -> Tuple[List[Tuple[int, Request]],
+                        List[Tuple[int, Request]]]:
         """Advance slot states after a dispatch (count-based: the token
-        values stay on device — see _Slot note).  Returns the requests
-        that finished; their slots are freed for recycling."""
+        values stay on device — see _Slot note).  Returns
+        ``(finished, entering_decode)`` as (slot, request) pairs:
+        finished requests' slots are freed for recycling; slots entering
+        decode just completed their prompt (the paged engine publishes
+        their full prompt pages into the prefix trie here — AFTER the
+        dispatch that wrote them)."""
         finished = []
+        entering = []
         for s, slot in enumerate(self.slots):
             nv = int(n_valid[s])
             if nv == 0:
@@ -125,10 +158,11 @@ class Scheduler:
                 if slot.offset >= len(slot.req.prompt):
                     slot.state = DECODE
                     slot.n_generated = 1
+                    entering.append((s, slot.req))
             elif slot.state is DECODE:
                 slot.n_generated += 1
             if slot.state is DECODE and \
                     slot.n_generated >= slot.req.max_new_tokens:
-                finished.append(slot.req)
+                finished.append((s, slot.req))
                 self.slots[s] = _Slot()
-        return finished
+        return finished, entering

@@ -51,6 +51,11 @@ class ServingTelemetry:
         # computed on the flattened rows and reported in this shape
         self.shapes: Dict[str, tuple] = {}
         self.n_updates = 0
+        # prefix-cache counters (pages shared, chunks skipped, hit rate)
+        # pushed by the engine alongside the MoR stats; surfaced in
+        # summary() so they land in the serve report next to
+        # per_layer_capacity
+        self.prefix: Optional[Dict] = None
 
     def update(self, aux: Dict) -> None:
         seen = False
@@ -93,8 +98,15 @@ class ServingTelemetry:
                 self.shapes.get(key, idx.shape))
         return out
 
+    def update_prefix(self, counters: Dict) -> None:
+        """Record the latest prefix-cache counters (cumulative values —
+        the engine recomputes them from the pool at each flush)."""
+        self.prefix = dict(counters)
+
     def summary(self) -> Dict:
         out: Dict = {"n_dispatches": self.n_updates}
+        if self.prefix is not None:
+            out["prefix_cache"] = dict(self.prefix)
         for key, sums in self.sums.items():
             n = max(self.n_updates, 1)
             shape = self.shapes.get(key)

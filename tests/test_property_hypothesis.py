@@ -157,3 +157,36 @@ def test_gather_capacity_never_exceeds(nm, nn, frac):
             if np.any(out[i * tm:(i + 1) * tm, j * tn:(j + 1) * tn] != 0):
                 nonzero_tiles += 1
     assert nonzero_tiles <= cap
+
+
+# -- paged KV pool allocator (ISSUE 4) -------------------------------------
+# hypothesis twins of tests/test_paged_pool.py's seeded machine: same
+# invariants (no page leaked, no page double-owned, COW never drops a
+# shared source), minimised counterexamples when they fail.
+
+_alloc_op = st.one_of(
+    st.tuples(st.just("write"), st.integers(0, 2),
+              st.lists(st.integers(0, 3), min_size=1, max_size=4,
+                       unique=True)),
+    st.tuples(st.just("share"), st.integers(0, 2), st.integers(0, 2),
+              st.integers(0, 3)),
+    st.tuples(st.just("release"), st.integers(0, 2)),
+    st.tuples(st.just("publish"), st.integers(0, 2), st.integers(0, 3)),
+    st.tuples(st.just("evict"),),
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(_alloc_op, min_size=1, max_size=40))
+def test_block_allocator_invariants(ops):
+    from test_paged_pool import run_allocator_ops
+    run_allocator_ops(ops)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 7), min_size=2, max_size=24),
+                min_size=1, max_size=8),
+       st.integers(2, 5))
+def test_prefix_trie_prefix_property(prompts, page):
+    from test_paged_pool import check_prefix_trie_prefix_property
+    check_prefix_trie_prefix_property(prompts, page)

@@ -1,8 +1,9 @@
 """repro.serving engine tests: chunked prefill == batched prefill ==
 teacher-forced forward (transformer / ssm / hybrid / rwkv, incl. prompts
-beyond the sliding-window ring), continuous-batching slot eviction/reuse
-vs solo runs, telemetry-driven capacity calibration, and the rebuilt
-serve driver's report."""
+beyond the sliding-window ring), the paged-vs-slotted cache-layout
+equivalence matrix + shared-prefix dedup, continuous-batching slot
+eviction/reuse vs solo runs, temperature/top-k sampling, telemetry-driven
+capacity calibration, and the rebuilt serve driver's report."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -216,6 +217,176 @@ def test_make_prefill_step_has_no_scanned_fallback():
     np.testing.assert_array_equal(np.asarray(nxt), want)
 
 
+# -- paged pool: logits equivalence + prefix caching -----------------------
+
+def _paged_chunked_prefill(cfg, api, params, toks, chunk, max_len=64):
+    """Drive api.prefill_chunk over the PAGED layout the way the engine
+    does (allocate/COW before each dispatch via PagedPool.prepare);
+    returns all-position logits (B, P, V)."""
+    B, P = toks.shape
+    pool = kv_pool.PagedPool(cfg, B, max_len, chunk=chunk)
+    cache = pool.build()
+    outs, off = [], 0
+    while off < P:
+        take = min(chunk, P - off)
+        piece = jnp.pad(toks[:, off:off + take],
+                        ((0, 0), (0, chunk - take)))
+        nv = np.full((B,), take, np.int64)
+        cache = pool.prepare(cache, nv)
+        lg, cache, _ = api.prefill_chunk(
+            params, cfg, piece, cache,
+            n_valid=jnp.asarray(nv, jnp.int32))
+        pool.advance(nv)
+        outs.append(np.asarray(lg)[:, :take])
+        off += take
+    return np.concatenate(outs, 1)
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "qwen2-7b",
+                                  "deepseek-v2-236b", "rwkv6-3b",
+                                  "zamba2-7b"])
+def test_paged_chunked_prefill_matches_forward(arch):
+    """The paging acceptance criterion: block-table indirection must be
+    invisible — paged chunked prefill reproduces the teacher-forced
+    forward logits at EVERY position for attention (gqa ring + absorbed
+    MLA), ssm (state-table indirection) and hybrid (both) families."""
+    cfg = _reduced(arch)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    P = 13
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, P), 0,
+                              cfg.vocab_size)
+    want, _ = api.forward(params, cfg, {"tokens": toks})
+    got = _paged_chunked_prefill(cfg, api, params, toks, chunk=5)
+    np.testing.assert_allclose(got, np.asarray(want, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_paged_chunked_prefill_beyond_sliding_window_ring():
+    """Ring wrap through the block tables: a prompt far beyond the
+    sliding-window ring still matches the teacher-forced forward."""
+    cfg = reduce_config(get_config("granite-3-2b")).replace(
+        sliding_window=16)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, 40), 0,
+                              cfg.vocab_size)
+    want, _ = api.forward(params, cfg, {"tokens": toks})
+    got = _paged_chunked_prefill(cfg, api, params, toks, chunk=8)
+    np.testing.assert_allclose(got, np.asarray(want, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "deepseek-v2-236b",
+                                  "rwkv6-3b", "zamba2-7b", "mixtral-8x7b"])
+def test_paged_engine_matches_slotted(arch):
+    """The paged-vs-slotted equivalence matrix: the same heterogeneous
+    trace through both cache layouts (incl. mid-flight eviction and slot
+    reuse) produces identical greedy tokens for every family."""
+    cfg = reduce_config(get_config(arch))
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    reqs = [(rng.integers(0, cfg.vocab_size, size=int(rng.integers(3, 18))),
+             int(rng.integers(3, 7))) for _ in range(5)]
+    res_p = Engine(cfg, params, n_slots=2, max_len=64,
+                   layout="paged").run(list(reqs))
+    res_s = Engine(cfg, params, n_slots=2, max_len=64,
+                   layout="slotted").run(list(reqs))
+    assert res_p == res_s, f"{arch}: paged tokens diverge from slotted"
+
+
+def test_paged_engine_matches_slotted_sliding_window():
+    """Same matrix under a sliding window small enough that decode wraps
+    the ring (COW against published prefix pages on the wrap path)."""
+    cfg = reduce_config(get_config("granite-3-2b")).replace(
+        sliding_window=16)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(4)
+    reqs = [(rng.integers(0, cfg.vocab_size, size=int(rng.integers(20, 40))),
+             int(rng.integers(8, 16))) for _ in range(3)]
+    res_p = Engine(cfg, params, n_slots=2, max_len=96,
+                   layout="paged").run(list(reqs))
+    res_s = Engine(cfg, params, n_slots=2, max_len=96,
+                   layout="slotted").run(list(reqs))
+    assert res_p == res_s
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "rwkv6-3b", "zamba2-7b"])
+def test_shared_prefix_dedup(arch):
+    """The prefix-caching acceptance criterion: a shared-prompt trace
+    produces IDENTICAL tokens with and without the cache, while the
+    warm engine dispatches measurably less prefill (>0 chunks skipped,
+    hit rate reported) — via shared KV pages for attention and state
+    snapshots (+ shared-attention pages) for ssm/hybrid."""
+    cfg = reduce_config(get_config(arch))
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    prefix = rng.integers(0, cfg.vocab_size, size=24)
+    reqs = [(np.concatenate([prefix,
+                             rng.integers(0, cfg.vocab_size, size=4)]), 5)
+            for _ in range(4)]
+    warm = Engine(cfg, params, n_slots=2, max_len=64, chunk=8)
+    cold = Engine(cfg, params, n_slots=2, max_len=64, chunk=8,
+                  prefix_cache=False)
+    res_w = warm.run(list(reqs))
+    res_c = cold.run(list(reqs))
+    assert res_w == res_c, f"{arch}: prefix cache changed tokens"
+    pc = warm._prefix_counters()
+    assert pc["prefix_hits"] > 0 and pc["hit_rate"] > 0
+    assert pc["chunks_skipped"] > 0, "no prefill chunk was skipped"
+    assert warm.counters["prefill_tokens"] < cold.counters["prefill_tokens"]
+    assert warm.counters["dispatches"] < cold.counters["dispatches"]
+    rep = warm.report()
+    assert rep["prefix_cache"]["chunks_skipped"] == pc["chunks_skipped"]
+    assert rep["telemetry"]["prefix_cache"]["hit_rate"] == pc["hit_rate"]
+
+
+def test_prefix_cache_survives_eviction_and_rehits():
+    """Pages published by a finished (evicted) request stay pinned by
+    the trie and serve hits for requests admitted much later."""
+    cfg = reduce_config(get_config("granite-3-2b"))
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(2)
+    prefix = rng.integers(0, cfg.vocab_size, size=16)
+    eng = Engine(cfg, params, n_slots=1, max_len=64, chunk=8)
+    first = eng.run([(np.concatenate([prefix, [7]]), 4)])
+    hits_before = eng._prefix_counters()["prefix_hits"]
+    # same prompt again, after the first request was fully evicted
+    second = eng.run([(np.concatenate([prefix, [7]]), 4)])
+    assert list(first.values())[0] == list(second.values())[0]
+    assert eng._prefix_counters()["prefix_hits"] == hits_before + 1
+
+
+# -- sampling ---------------------------------------------------------------
+
+def test_sampling_topk1_equals_greedy_and_seed_reproducible():
+    """temperature>0 with top_k=1 must reduce to greedy argmax, and the
+    same sampling seed must reproduce the same stream (the sampler is
+    seeded + device-resident like the rest of the hot loop)."""
+    cfg = reduce_config(get_config("granite-3-2b"))
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    reqs = [(rng.integers(0, cfg.vocab_size, size=7), 6)]
+    greedy = Engine(cfg, params, n_slots=1, max_len=64).run(list(reqs))
+    top1 = Engine(cfg, params, n_slots=1, max_len=64, temperature=0.7,
+                  top_k=1).run(list(reqs))
+    assert greedy == top1
+    sa = Engine(cfg, params, n_slots=1, max_len=64, temperature=1.0,
+                sample_seed=3).run(list(reqs))
+    sb = Engine(cfg, params, n_slots=1, max_len=64, temperature=1.0,
+                sample_seed=3).run(list(reqs))
+    assert sa == sb
+    rep = Engine(cfg, params, n_slots=1, max_len=64, temperature=1.0,
+                 top_k=5)
+    rep.run(list(reqs))
+    assert rep.report()["sampling"] == {"temperature": 1.0, "top_k": 5}
+
+
 # -- continuous batching: eviction / slot reuse ----------------------------
 
 @pytest.mark.parametrize("arch", ["granite-3-2b", "rwkv6-3b"])
@@ -380,6 +551,33 @@ def test_serve_main_engine_report(tmp_path):
     assert "per_layer_capacity" in on_disk
     assert on_disk["tokens_per_s"] > 0
     assert r["mor_mode"] == "tiled"
+
+
+def test_serve_main_shared_prefix_trace(tmp_path):
+    """serve.main with --shared-prefix: the prefix-cache counters land
+    in the report JSON (hit rate, pages shared, chunks skipped) and the
+    trace actually hit."""
+    from repro.launch.serve import main as serve_main
+    out = tmp_path / "serve_prefix.json"
+    r = serve_main(["--arch", "granite-3-2b", "--reduced", "--batch", "2",
+                    "--requests", "4", "--prompt-min", "4",
+                    "--prompt-max", "8", "--gen-len", "4",
+                    "--shared-prefix", "24", "--chunk", "8",
+                    "--out-json", str(out)])
+    import json
+    on_disk = json.loads(out.read_text())
+    pc = on_disk["prefix_cache"]
+    assert pc["hit_rate"] > 0
+    assert pc["chunks_skipped"] > 0
+    assert pc["pages_shared"] > 0
+    assert r["layout"] == "paged"
+    # and the toggle really disables it
+    r_cold = serve_main(["--arch", "granite-3-2b", "--reduced",
+                         "--batch", "2", "--requests", "4",
+                         "--prompt-min", "4", "--prompt-max", "8",
+                         "--gen-len", "4", "--shared-prefix", "24",
+                         "--chunk", "8", "--no-prefix-cache"])
+    assert "prefix_cache" not in r_cold
 
 
 def test_moe_serve_main_reports_per_expert_capacity(tmp_path):
