@@ -1,0 +1,230 @@
+"""Distributed flash decode over the mesh-sharded paged KV pool.
+
+The paged serving cache (``serving.kv_pool.PagedPool``) expresses every
+cache access as a (block table, physical page) indirection; sharding the
+page pool over a mesh axis (``sharding_rules.PAGE_AXIS``) turns serving
+attention into a DISTRIBUTED flash decode:
+
+  * block tables stay replicated and hold GLOBAL page ids; each shard
+    physically holds the contiguous id range
+    ``[idx * n_local, (idx + 1) * n_local)`` of every pool leaf
+    (``n_local`` = the leaf's local page count under ``shard_map``);
+  * writes map global -> local ids and DROP pages another shard owns
+    (``pool_set``); reads gather only locally-resident pages, filling
+    foreign pages with the mask value (``pool_view``) — a -1 position
+    tag, so they contribute nothing to the local softmax;
+  * each shard computes partial flash statistics (m, l, acc) over its
+    local ring view and the shards combine with ONE collective per
+    attention layer (``collectives.flash_merge``);
+  * recurrent state pools shard the same way with a SINGLE-OWNER
+    gather: exactly one shard holds each slot's state row, contributes
+    it, and a psum (zeros elsewhere) replicates it (``state_take`` /
+    ``state_put``).
+
+Every helper degrades to the single-device paged behaviour when no
+page-shard context is active, so the model code has exactly one paged
+branch.  The context is trace-time state (the engine's sharded step
+enters it around the shard_map body), mirroring
+``sharding_rules.activation_context``.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.collectives import flash_merge
+
+_TLS = threading.local()
+
+NEG_INF = -1e30
+
+
+@contextlib.contextmanager
+def page_shard_context(axis: str, n_shards: int):
+    """Activate the page-shard context for a shard_map body trace."""
+    prev = getattr(_TLS, "ctx", None)
+    _TLS.ctx = (axis, n_shards)
+    try:
+        yield
+    finally:
+        _TLS.ctx = prev
+
+
+def shard_info() -> Optional[Tuple[str, int]]:
+    """-> (mesh axis name, n_shards), or None outside a sharded trace."""
+    return getattr(_TLS, "ctx", None)
+
+
+def _local_base(n_local: int, axis: str):
+    """First global page id resident on this shard."""
+    return jax.lax.axis_index(axis) * n_local
+
+
+# ==========================================================================
+# pool access through the (replicated) block/state tables
+# ==========================================================================
+
+def pool_set(pool, pidx, off, val, valid):
+    """Scatter ``val`` into a page pool at (page ``pidx``, row ``off``)
+    — ``pool``: (n_pages[, ...]) with the page dim leading, ``pidx`` /
+    ``off`` / ``valid``: (B, C) global page ids, in-page offsets and
+    validity.  Invalid tokens are dropped (OOB scatter index); under a
+    page-shard context, pages resident on OTHER shards are dropped too
+    (their owner performs the same scatter with the roles reversed)."""
+    n_local = pool.shape[0]
+    info = shard_info()
+    if info is None:
+        tgt = jnp.where(valid, pidx, n_local)
+        return pool.at[tgt, off].set(val, mode="drop")
+    lo = _local_base(n_local, info[0])
+    loc = pidx - lo
+    ok = valid & (loc >= 0) & (loc < n_local)
+    tgt = jnp.where(ok, loc, n_local)                # OOB -> dropped
+    return pool.at[tgt, off].set(val, mode="drop")
+
+
+def pool_view(pool, block_table, fill):
+    """Gather a slot-major view of the pool through the block table —
+    (B, n_blocks) global ids -> (B, n_blocks, page, ...).  Under a
+    page-shard context only locally-resident pages are read; foreign
+    pages return ``fill`` (use -1 for position-tag pools so the masked
+    rows drop out of the local softmax, 0 for k/v payloads)."""
+    info = shard_info()
+    if info is None:
+        return pool[block_table]
+    n_local = pool.shape[0]
+    lo = _local_base(n_local, info[0])
+    loc = block_table - lo
+    ok = (loc >= 0) & (loc < n_local)
+    out = pool[jnp.where(ok, loc, 0)]
+    mask = ok.reshape(ok.shape + (1,) * (out.ndim - ok.ndim))
+    return jnp.where(mask, out, jnp.asarray(fill, out.dtype))
+
+
+# ==========================================================================
+# distributed flash decode: partial (m, l, acc) + one-collective merge
+# ==========================================================================
+
+def batched_bias(q_pos, kv_pos, causal: bool, window: int):
+    """(B, Sq, Skv) additive causal/window bias with PER-BATCH-ROW
+    positions; kv entries tagged -1 mask out.  The single source of the
+    slot-pool mask semantics: ``attention.attend_batched`` (single-
+    device paged/slotted) and the sharded partial-flash attends below
+    all build their scores mask here, so the two layouts can never
+    drift apart."""
+    rel = q_pos[:, :, None] - kv_pos[:, None, :]
+    ok = jnp.ones(rel.shape, bool)
+    if causal:
+        ok &= rel >= 0
+    if window > 0:
+        ok &= rel < window
+    ok &= kv_pos[:, None, :] >= 0
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def gqa_paged_attend(q, kpool, vpool, ppool, block_table, qpos, *,
+                     window: int = 0):
+    """Sharded GQA paged attention: partial flash statistics over the
+    locally-resident pages of each slot's ring view, merged across
+    shards with ONE collective (``flash_merge``).  q: (B, C, H, D);
+    pools: (n_local, page, hkv, ·); block_table: (B, n_blocks) global
+    ids; qpos: (B, C).  Returns (B, C, H, Dv) in q's dtype, numerically
+    the exact softmax over all resident pages."""
+    info = shard_info()
+    assert info is not None, "gqa_paged_attend needs a page-shard context"
+    B, C, H, D = q.shape
+    page = kpool.shape[1]
+    ring = block_table.shape[1] * page
+    hkv = kpool.shape[-2]
+    Dv = vpool.shape[-1]
+    gk = pool_view(kpool, block_table, 0).reshape(B, ring, hkv, D)
+    gv = pool_view(vpool, block_table, 0).reshape(B, ring, hkv, Dv)
+    gp = pool_view(ppool, block_table, -1).reshape(B, ring)
+    G = H // hkv
+    qf = q.reshape(B, C, hkv, G, D)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qf, gk,
+                   preferred_element_type=jnp.float32)
+    s = s * (D ** -0.5) + batched_bias(qpos, gp, True, window)[:, None, None]
+    m = s.max(-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(-1)
+    acc = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(gv.dtype),
+                     gv).astype(jnp.float32)
+    o = flash_merge(m, l, acc, info[0])              # (B,hkv,G,C,Dv)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, C, H, Dv).astype(q.dtype)
+
+
+def mla_paged_attend(q_lat, q_pe, ck_pool, cpe_pool, cp_pool, block_table,
+                     qpos, *, scale: float):
+    """Sharded MLA paged attention (absorbed latent space): partial
+    flash statistics against the locally-resident latent pages, merged
+    with ONE collective.  q_lat: (B, C, h, kr) (W_uk absorbed), q_pe:
+    (B, C, h, rd); pools: (n_local, page, ·); returns the merged latent
+    output o_lat (B, C, h, kr) — the caller absorbs W_uv."""
+    info = shard_info()
+    assert info is not None, "mla_paged_attend needs a page-shard context"
+    B, C = qpos.shape
+    page = ck_pool.shape[1]
+    ring = block_table.shape[1] * page
+    kr = ck_pool.shape[-1]
+    rd = cpe_pool.shape[-1]
+    ck = pool_view(ck_pool, block_table, 0).reshape(B, ring, kr)
+    cpe = pool_view(cpe_pool, block_table, 0).reshape(B, ring, rd)
+    cp = pool_view(cp_pool, block_table, -1).reshape(B, ring)
+    s = (jnp.einsum("bchk,btk->bhct", q_lat, ck,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bchr,btr->bhct", q_pe, cpe,
+                      preferred_element_type=jnp.float32))
+    s = s * scale
+    ok = (cp[:, None, None, :] <= qpos[:, None, :, None]) & \
+        (cp[:, None, None, :] >= 0)
+    s = jnp.where(ok, s, NEG_INF)
+    m = s.max(-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(-1)
+    acc = jnp.einsum("bhct,btk->bhck", p.astype(ck.dtype),
+                     ck).astype(jnp.float32)
+    o = flash_merge(m, l, acc, info[0])              # (B, h, C, kr)
+    return o.transpose(0, 2, 1, 3).astype(q_lat.dtype)
+
+
+# ==========================================================================
+# recurrent-state pools: single-owner gather / owner-local scatter
+# ==========================================================================
+
+def state_take(pool, table):
+    """Gather each slot's state row through the (B,) state table —
+    pool: (L, n_spages, ...) -> (L, B, ...).  Sharded: exactly one
+    shard holds each row (single owner); it contributes the value,
+    everyone else zeros, and a psum replicates the result.  This is the
+    one place state sharding pays a collective — once per dispatch per
+    leaf, at the top of the chunk step, NOT per layer (the (L, ...)
+    stack gathers in one shot)."""
+    info = shard_info()
+    if info is None:
+        return pool[:, table]
+    n_local = pool.shape[1]
+    lo = _local_base(n_local, info[0])
+    loc = table - lo
+    ok = (loc >= 0) & (loc < n_local)
+    g = pool[:, jnp.where(ok, loc, 0)]
+    mask = ok.reshape((1,) + ok.shape + (1,) * (g.ndim - ok.ndim - 1))
+    g = jnp.where(mask, g, jnp.zeros((), g.dtype))
+    return jax.lax.psum(g, info[0])
+
+
+def state_put(pool, table, val):
+    """Scatter updated state rows back through the (B,) state table;
+    sharded: only the owning shard writes, everyone else drops."""
+    info = shard_info()
+    if info is None:
+        return pool.at[:, table].set(val)
+    n_local = pool.shape[1]
+    lo = _local_base(n_local, info[0])
+    loc = table - lo
+    tgt = jnp.where((loc >= 0) & (loc < n_local), loc, n_local)
+    return pool.at[:, tgt].set(val, mode="drop")

@@ -20,6 +20,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _TLS = threading.local()
 
+# Mesh axis the serving page pools shard over (ISSUE 5): physical KV /
+# state pages partitioned, block tables + params + activations
+# replicated.  Deliberately distinct from the train-time axes ('pod',
+# 'data', 'model') so _dp_axes / 'tp' resolution never capture it and
+# the same model code runs un-sharded, TP-sharded, or page-sharded.
+PAGE_AXIS = "pages"
+
 
 def mesh_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(mesh.axis_names)

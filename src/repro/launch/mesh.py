@@ -18,3 +18,13 @@ def make_host_mesh(model_parallel: int = 1):
     assert n % model_parallel == 0
     return jax.make_mesh((n // model_parallel, model_parallel),
                          ("data", "model"))
+
+
+def make_page_mesh(n_shards: int = 0):
+    """1-D mesh over the serving page axis (``Engine(layout=
+    "paged-sharded")``): physical KV/state pages partitioned across the
+    devices, everything else replicated.  ``n_shards`` defaults to all
+    visible devices."""
+    from repro.distributed.sharding_rules import PAGE_AXIS
+    n = n_shards or len(jax.devices())
+    return jax.make_mesh((n,), (PAGE_AXIS,))

@@ -149,12 +149,12 @@ def _trace(cfg, n_requests, pmin, pmax, gmin, gmax, seed,
 def _run_engine(cfg, params, reqs, *, mor, mor_mode, n_slots, max_len,
                 chunk=0, capacities=None, layout="paged",
                 prefix_cache=True, temperature=0.0, top_k=0,
-                sample_seed=0):
+                sample_seed=0, mesh=None):
     eng = Engine(cfg, params, mor=mor, mor_mode=mor_mode, n_slots=n_slots,
                  max_len=max_len, chunk=chunk, capacities=capacities,
                  layout=layout, prefix_cache=prefix_cache,
                  temperature=temperature, top_k=top_k,
-                 sample_seed=sample_seed)
+                 sample_seed=sample_seed, mesh=mesh)
     # first pass compiles the two dispatch shapes; then take the best of
     # three timed passes — single-shot wall clock on a shared CPU is
     # ~2x noisy (the static baseline gets the same warmup + best-of).
@@ -211,8 +211,19 @@ def main(argv=None):
     ap.add_argument("--chunk", type=int, default=0,
                     help="prefill chunk length (default cfg.serve_chunk)")
     ap.add_argument("--layout", default="paged",
-                    choices=("paged", "slotted"),
-                    help="KV cache layout (slotted = PR 2 baseline)")
+                    choices=("paged", "paged-sharded", "slotted"),
+                    help="KV cache layout (paged-sharded = page pool "
+                         "partitioned over a device mesh, distributed "
+                         "flash decode; slotted = PR 2 baseline)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="paged-sharded: mesh size over the page axis "
+                         "(default: all visible devices; force host "
+                         "devices via XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--stream", action="store_true",
+                    help="demo the detokenizing stream API: re-serve "
+                         "the first request through Engine.stream() "
+                         "and report the incrementally streamed tokens")
     ap.add_argument("--prefix-cache", dest="prefix_cache",
                     action="store_true", default=True,
                     help="prefix caching across requests (default on; "
@@ -287,16 +298,36 @@ def main(argv=None):
                   shared_prefix=args.shared_prefix)
     max_len = args.shared_prefix + pmax + args.gen_len + 2
 
+    mesh = None
+    if args.layout == "paged-sharded":
+        from repro.launch.mesh import make_page_mesh
+        mesh = make_page_mesh(args.shards)
+
     eng, results, rep = _run_engine(
         cfg, params, reqs, mor=mor, mor_mode=args.mor, n_slots=args.batch,
         max_len=max_len, chunk=args.chunk, layout=args.layout,
         prefix_cache=args.prefix_cache, temperature=args.temperature,
-        top_k=args.top_k, sample_seed=args.sample_seed)
+        top_k=args.top_k, sample_seed=args.sample_seed, mesh=mesh)
     report.update(rep)
     print(f"[serve] {cfg.name} mor={args.mor} layout={args.layout}: "
           f"{rep['tokens_per_s']:.1f} tok/s over {len(reqs)} requests "
           f"({rep['dispatches']} dispatches, "
           f"prompts {pmin}-{pmax})")
+    if "sharding" in rep:
+        sh = rep["sharding"]
+        print(f"[serve] page mesh: {sh['n_shards']} shards, kv pages "
+              f"hiwater/shard "
+              f"{sh.get('kv_pages_hiwater_per_shard', sh.get('state_pages_hiwater_per_shard'))}")
+
+    if args.stream:
+        # detokenizing stream demo: re-serve request 0 through the
+        # iterator API (tokens arrive at flush granularity — the hot
+        # loop stays device-resident, no per-token syncs)
+        p0, g0 = reqs[0]
+        streamed = list(eng.stream(p0, g0, interval=1))
+        report["stream"] = {"tokens": len(streamed), "interval": 1}
+        print(f"[serve] --stream: request 0 re-served, {len(streamed)} "
+              f"tokens streamed incrementally")
     if "prefix_cache" in rep:
         pc = rep["prefix_cache"]
         print(f"[serve] prefix cache: hit rate {pc['hit_rate']:.2f} "
@@ -311,7 +342,7 @@ def main(argv=None):
             cfg, params, reqs, mor=mor, mor_mode=args.mor,
             n_slots=args.batch, max_len=max_len, chunk=args.chunk,
             capacities=caps, layout=args.layout,
-            prefix_cache=args.prefix_cache)
+            prefix_cache=args.prefix_cache, mesh=mesh)
         report["per_layer_capacity"] = {
             k: np.asarray(v).round(4).tolist() for k, v in caps.items()}
         report["calibrated_tokens_per_s"] = rep_cal["tokens_per_s"]
@@ -332,7 +363,8 @@ def main(argv=None):
                                           n_slots=args.batch,
                                           max_len=max_len, chunk=args.chunk,
                                           layout=args.layout,
-                                          prefix_cache=args.prefix_cache)
+                                          prefix_cache=args.prefix_cache,
+                                          mesh=mesh)
         agree = np.mean([
             np.mean(np.asarray(results[r]) == np.asarray(results_d[r]))
             for r in results_d])

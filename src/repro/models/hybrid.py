@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.distributed import decode_attention as da
 from repro.distributed.sharding_rules import constrain
 from repro.models.layers import attention as attn
 from repro.models.layers.common import embed_init, dense_init, split_keys
@@ -143,7 +144,11 @@ def prefill_chunk(params: Dict, cfg: ModelConfig, tokens, cache: Dict, *,
     PAGED layout (``serving.kv_pool.PagedPool``): mamba state rows are
     gathered/scattered through the (B,) state table, and the shared
     attention ring reads/writes its kv pages through the (B, n_blocks)
-    block table."""
+    block table.  Under a page-shard context both pools are mesh-
+    sharded: state rows go through the single-owner
+    ``decode_attention.state_take``/``state_put`` indirection and the
+    shared-attention ring runs the distributed flash decode inside
+    ``gqa_chunk``."""
     dt = jnp.dtype(cfg.dtype)
     n_seg, every, tail = _seg_counts(cfg)
     B, C = tokens.shape
@@ -161,13 +166,14 @@ def prefill_chunk(params: Dict, cfg: ModelConfig, tokens, cache: Dict, *,
     def gather_state(node):
         if state_table is None:
             return node
-        return jax.tree_util.tree_map(lambda a: a[:, state_table], node)
+        return jax.tree_util.tree_map(
+            lambda a: da.state_take(a, state_table), node)
 
     def scatter_state(full, new):
         if state_table is None:
             return new
         return jax.tree_util.tree_map(
-            lambda f, n: f.at[:, state_table].set(n), full, new)
+            lambda f, n: da.state_put(f, state_table, n), full, new)
 
     seg_params = jax.tree_util.tree_map(
         lambda a: a.reshape(n_seg, every, *a.shape[1:]),

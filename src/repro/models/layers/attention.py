@@ -13,11 +13,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.distributed import decode_attention as da
 from repro.models.layers.common import dense_init, split_keys
 from repro.models.layers.norms import norm_init, apply_norm
 from repro.models.layers.rope import apply_rope
 
-NEG_INF = -1e30
+NEG_INF = da.NEG_INF      # one mask floor across paged/sharded layouts
 _FLASH_THRESHOLD = 4096   # use chunked attention above this many kv positions
 _CHUNK = 1024
 
@@ -176,15 +177,10 @@ def attend_batched(q, k, v, q_pos, kv_pos, *, causal: bool = True,
     """Attention with PER-BATCH-ROW positions: q_pos (B, Sq), kv_pos
     (B, Skv).  This is the continuous-batching slot-pool case — every
     slot sits at its own position, so the additive bias carries a batch
-    dim instead of being shared.  kv entries tagged -1 are masked."""
-    rel = q_pos[:, :, None] - kv_pos[:, None, :]
-    ok = jnp.ones(rel.shape, bool)
-    if causal:
-        ok &= rel >= 0
-    if window > 0:
-        ok &= rel < window
-    ok &= kv_pos[:, None, :] >= 0
-    bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+    dim instead of being shared.  kv entries tagged -1 are masked.
+    The mask itself lives in ``decode_attention.batched_bias`` so the
+    sharded partial-flash path shares the exact same semantics."""
+    bias = da.batched_bias(q_pos, kv_pos, causal, window)
     return _sdpa(q, k, v, bias[:, None, None])
 
 
@@ -333,6 +329,13 @@ def gqa_chunk(params, cfg: ModelConfig, x, cache, pos, valid,
     indirection — the pool guarantees every written page is exclusively
     owned (copy-on-write happens host-side before dispatch).
 
+    Under a page-shard context (``distributed.decode_attention``, the
+    engine's ``paged-sharded`` layout) the pool arrays are the LOCAL
+    page range of a mesh-sharded pool: writes drop pages another shard
+    owns, reads gather only locally-resident pages, and attention
+    becomes a distributed flash decode — partial (m, l, acc) statistics
+    per shard merged with one collective per layer.
+
     The ring must have ≥ chunk-length slack above the attention window
     (``serving.kv_pool`` allocates window + serve_chunk) so that the
     oldest in-window entries are not overwritten by the chunk itself."""
@@ -342,21 +345,24 @@ def gqa_chunk(params, cfg: ModelConfig, x, cache, pos, valid,
     q = apply_rope(q, qpos, cfg.rope_theta)
     k = apply_rope(k, qpos, cfg.rope_theta)
     if block_table is not None:
-        n_pages, page = cache["k"].shape[0], cache["k"].shape[1]
+        page = cache["k"].shape[1]
         ring = block_table.shape[1] * page
         r = qpos % ring
         blk, off = r // page, r % page
         pidx = jnp.take_along_axis(block_table, blk, axis=1)
-        pidx = jnp.where(valid, pidx, n_pages)      # OOB -> dropped
-        ck = cache["k"].at[pidx, off].set(k, mode="drop")
-        cv = cache["v"].at[pidx, off].set(v, mode="drop")
-        cp = cache["pos"].at[pidx, off].set(qpos, mode="drop")
-        hkv, hd = k.shape[2], k.shape[3]
-        gk = ck[block_table].reshape(B, ring, hkv, hd)
-        gv = cv[block_table].reshape(B, ring, hkv, hd)
-        gp = cp[block_table].reshape(B, ring)
-        o = attend_batched(q, gk, gv, qpos, gp, causal=True,
-                           window=cfg.sliding_window)
+        ck = da.pool_set(cache["k"], pidx, off, k, valid)
+        cv = da.pool_set(cache["v"], pidx, off, v, valid)
+        cp = da.pool_set(cache["pos"], pidx, off, qpos, valid)
+        if da.shard_info() is not None:
+            o = da.gqa_paged_attend(q, ck, cv, cp, block_table, qpos,
+                                    window=cfg.sliding_window)
+        else:
+            hkv, hd = k.shape[2], k.shape[3]
+            gk = ck[block_table].reshape(B, ring, hkv, hd)
+            gv = cv[block_table].reshape(B, ring, hkv, hd)
+            gp = cp[block_table].reshape(B, ring)
+            o = attend_batched(q, gk, gv, qpos, gp, causal=True,
+                               window=cfg.sliding_window)
         y = o.reshape(B, C, -1) @ params["wo"].astype(x.dtype)
         return y, {"k": ck, "v": cv, "pos": cp}
     Lr = cache["k"].shape[1]
@@ -481,7 +487,11 @@ def mla_chunk(params, cfg: ModelConfig, x, cache, pos, valid,
     With ``block_table`` (B, n_blocks) the latent cache is the PAGED
     layout ({c_kv (n_pages, page, kr), k_pe, pos (n_pages, page)}):
     absolute position p lives at page ``block_table[b, p // page]``,
-    offset ``p % page`` (no ring — MLA caches the full max_len)."""
+    offset ``p % page`` (no ring — MLA caches the full max_len).  Under
+    a page-shard context the pools are the local range of a mesh-
+    sharded pool and the absorbed attention runs as a distributed flash
+    decode in latent space (partial stats per shard, one collective
+    merge, W_uv absorbed after the merge)."""
     B, C, _ = x.shape
     h, nd, vd = cfg.n_heads, cfg.qk_nope_head_dim, cfg.v_head_dim
     kr, rd = cfg.kv_lora_rank, cfg.qk_rope_head_dim
@@ -489,19 +499,28 @@ def mla_chunk(params, cfg: ModelConfig, x, cache, pos, valid,
     qpos = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
     q_nope, q_pe = _mla_q(params, cfg, x, qpos)          # (B,C,h,nd/rd)
     c_kv_t, k_pe_t = _mla_kv_compress(params, cfg, x, qpos)
+    wk_b = params["wk_b"].astype(dt).reshape(kr, h, nd)
+    wv_b = params["wv_b"].astype(dt).reshape(kr, h, vd)
+    q_lat = jnp.einsum("bchd,khd->bchk", q_nope, wk_b)   # absorb W_uk
     if block_table is not None:
-        n_pages, page = cache["c_kv"].shape[0], cache["c_kv"].shape[1]
+        page = cache["c_kv"].shape[1]
         ring = block_table.shape[1] * page
         blk, off = qpos // page, qpos % page
         pidx = jnp.take_along_axis(block_table, blk, axis=1)
-        pidx = jnp.where(valid, pidx, n_pages)           # OOB -> drop
-        ck_pool = cache["c_kv"].at[pidx, off].set(c_kv_t, mode="drop")
-        cpe_pool = cache["k_pe"].at[pidx, off].set(k_pe_t, mode="drop")
-        cp_pool = cache["pos"].at[pidx, off].set(qpos, mode="drop")
+        ck_pool = da.pool_set(cache["c_kv"], pidx, off, c_kv_t, valid)
+        cpe_pool = da.pool_set(cache["k_pe"], pidx, off, k_pe_t, valid)
+        cp_pool = da.pool_set(cache["pos"], pidx, off, qpos, valid)
+        new_cache = {"c_kv": ck_pool, "k_pe": cpe_pool, "pos": cp_pool}
+        if da.shard_info() is not None:
+            o_lat = da.mla_paged_attend(q_lat, q_pe, ck_pool, cpe_pool,
+                                        cp_pool, block_table, qpos,
+                                        scale=(nd + rd) ** -0.5)
+            o = jnp.einsum("bchk,khv->bchv", o_lat, wv_b)  # absorb W_uv
+            y = o.reshape(B, C, h * vd) @ params["wo"].astype(dt)
+            return y, new_cache
         ck = ck_pool[block_table].reshape(B, ring, kr)
         cpe = cpe_pool[block_table].reshape(B, ring, rd)
         cp = cp_pool[block_table].reshape(B, ring)
-        new_cache = {"c_kv": ck_pool, "k_pe": cpe_pool, "pos": cp_pool}
     else:
         ML = cache["c_kv"].shape[1]
         idx = jnp.where(valid, qpos, ML)                 # ML is OOB -> drop
@@ -510,9 +529,6 @@ def mla_chunk(params, cfg: ModelConfig, x, cache, pos, valid,
         cpe = cache["k_pe"].at[bidx, idx].set(k_pe_t, mode="drop")
         cp = cache["pos"].at[bidx, idx].set(qpos, mode="drop")
         new_cache = {"c_kv": ck, "k_pe": cpe, "pos": cp}
-    wk_b = params["wk_b"].astype(dt).reshape(kr, h, nd)
-    wv_b = params["wv_b"].astype(dt).reshape(kr, h, vd)
-    q_lat = jnp.einsum("bchd,khd->bchk", q_nope, wk_b)   # absorb W_uk
     s = (jnp.einsum("bchk,btk->bhct", q_lat, ck,
                     preferred_element_type=jnp.float32)
          + jnp.einsum("bchr,btr->bhct", q_pe, cpe,

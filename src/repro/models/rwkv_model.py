@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.distributed import decode_attention as da
 from repro.distributed.sharding_rules import constrain
 from repro.models.layers.common import embed_init, dense_init, split_keys
 from repro.models.layers.norms import norm_init, apply_norm
@@ -105,12 +106,15 @@ def prefill_chunk(params: Dict, cfg: ModelConfig, tokens, cache: Dict, *,
     ...) pools and each slot's row is reached through the (B,) table —
     the chunk gathers its slots' pages, runs the carry, and scatters the
     new state back through the same indirection (which is what lets
-    prefix-cache state snapshots live in the same pool)."""
+    prefix-cache state snapshots live in the same pool).  Under a page-
+    shard context the pools are mesh-sharded: the gather/scatter go
+    through ``decode_attention.state_take``/``state_put`` — a single-
+    owner psum gather per leaf per dispatch, owner-local scatter."""
     dt = jnp.dtype(cfg.dtype)
     B, C = tokens.shape
     state_table = cache.get("state_table")
     if state_table is not None:
-        gathered = {k: cache[k][:, state_table]
+        gathered = {k: da.state_take(cache[k], state_table)
                     for k in ("tm_shift", "wkv", "cm_shift")}
     else:
         gathered = {k: cache[k] for k in ("tm_shift", "wkv", "cm_shift")}
@@ -154,7 +158,8 @@ def prefill_chunk(params: Dict, cfg: ModelConfig, tokens, cache: Dict, *,
     if "mor_stats" in new:
         aux["mor_stats"] = new.pop("mor_stats")
     if state_table is not None:
-        new = {k: cache[k].at[:, state_table].set(v) for k, v in new.items()}
+        new = {k: da.state_put(cache[k], state_table, v)
+               for k, v in new.items()}
         new["state_table"] = state_table
     new_cache = {"pos": cache["pos"] + n_valid, **new}
     return logits, new_cache, aux

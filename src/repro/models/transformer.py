@@ -288,7 +288,12 @@ def prefill_chunk(params: Dict, cfg: ModelConfig, tokens, cache: Dict, *,
 
     A cache carrying a top-level ``block_table`` is the PAGED layout
     (``serving.kv_pool.PagedPool``): every layer reads/writes its kv
-    pages through the shared (B, n_blocks) table instead of slot rows."""
+    pages through the shared (B, n_blocks) table instead of slot rows.
+    The mesh-sharded layout (``Engine(layout="paged-sharded")``) reuses
+    this exact step under ``shard_map`` — the table stays replicated
+    while the page pools split over the mesh's page axis, and each
+    layer's attention becomes a distributed flash decode (one merge
+    collective per layer; see ``distributed.decode_attention``)."""
     B, C = tokens.shape
     pos = cache["pos"]
     block_table = cache.get("block_table")

@@ -19,7 +19,15 @@ traffic; this package embeds the MoR predictor in a serving loop that
                  finished sequences mid-flight.
   engine       — the driver: one compiled chunk step per dispatch shape,
                  request queue -> token streams + a serving report;
-                 greedy or temperature/top-k sampling.
+                 greedy or temperature/top-k sampling; per-request token
+                 stream callbacks / iterator (flush-time, no extra
+                 device syncs).
+  mesh         — the mesh-sharded paged layout
+                 (``Engine(layout="paged-sharded")``): page pools
+                 partitioned over a mesh axis, block tables replicated,
+                 the hot loop one shard_map'd step with a distributed
+                 flash decode (one merge collective per attention
+                 layer via ``distributed.collectives.flash_merge``).
   telemetry    — per-layer tile-liveness histograms + predictor hit/miss
                  counters + prefix-cache counters accumulated during
                  serving; feeds ``calibrate_capacity`` (liveness-quantile

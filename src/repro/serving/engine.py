@@ -13,18 +13,29 @@ Cache layouts: ``layout="paged"`` (default) runs on
 ``kv_pool.PagedPool`` — block-table indirection, refcounted pages, and
 prefix caching (requests sharing a prompt prefix map their leading
 block-table entries to the same physical pages; fully-hit prefill
-chunks are never dispatched).  ``layout="slotted"`` is the PR 2
-contiguous layout, kept as the differential baseline.
+chunks are never dispatched).  ``layout="paged-sharded"`` is the same
+pool MESH-SHARDED over a page axis (``serving.mesh``): physical pages
+partitioned across the mesh devices, block tables replicated, the hot
+loop one shard_map'd step with a distributed flash decode (one merge
+collective per attention layer) — multi-device KV capacity as a config
+flag.  ``layout="slotted"`` is the PR 2 contiguous layout, kept as the
+differential baseline.
 
 Sampling: greedy argmax by default; ``temperature`` > 0 enables
 temperature sampling (optionally top-k truncated), seeded and
 device-resident like the greedy path.
+
+Streaming: ``submit(..., on_token=cb)`` registers a per-request token
+callback and ``stream()`` wraps one request as a generator.  Callbacks
+fire at token FLUSH time (tokens already land host-side there), so the
+default path keeps its zero extra device syncs; ``run(stream_interval=
+N)`` opts into flushing every N dispatches for incremental delivery.
 """
 from __future__ import annotations
 
 import time
 from functools import partial
-from typing import Dict, List, Optional
+from typing import Callable, Dict, Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -58,11 +69,11 @@ class Engine:
                  prefix_cache: bool = True,
                  spare_pages: Optional[int] = None,
                  temperature: float = 0.0, top_k: int = 0,
-                 sample_seed: int = 0):
+                 sample_seed: int = 0, mesh=None):
         api = get_model(cfg)
         assert api.prefill_chunk is not None, \
             f"{cfg.name} ({cfg.family}) has no serving chunk step"
-        assert layout in ("paged", "slotted")
+        assert layout in ("paged", "paged-sharded", "slotted")
         self.cfg = cfg
         self.api = api
         self.params = params
@@ -74,10 +85,20 @@ class Engine:
         self.mor = self._attach(capacities)
         self.capacities = capacities
         self.layout = layout
-        if layout == "paged":
+        self.mesh = None
+        if layout in ("paged", "paged-sharded"):
+            n_shards = 1
+            if layout == "paged-sharded":
+                if mesh is None:
+                    from repro.launch.mesh import make_page_mesh
+                    mesh = make_page_mesh()
+                from repro.distributed.sharding_rules import PAGE_AXIS
+                self.mesh = mesh
+                n_shards = mesh.shape[PAGE_AXIS]
             self.pool: Optional[kv_pool.PagedPool] = kv_pool.PagedPool(
                 cfg, n_slots, max_len, chunk=self.chunk, page=page,
-                spare_pages=spare_pages, prefix_cache=prefix_cache)
+                spare_pages=spare_pages, prefix_cache=prefix_cache,
+                n_shards=n_shards, mesh=self.mesh)
             self.cache = self.pool.build()
             self._reset = None
         else:
@@ -91,10 +112,15 @@ class Engine:
         self._base_key = jax.random.PRNGKey(sample_seed)
         copy_pads = ((self.pool.kv_copy_max, self.pool.st_copy_max)
                      if self.pool is not None else (0, 0))
-        self._step = jax.jit(
-            partial(self._step_impl, cfg, api, mor_mode, self.temperature,
-                    self.top_k, copy_pads),
-            donate_argnums=(2,))
+        body = partial(self._step_impl, cfg, api, mor_mode,
+                       self.temperature, self.top_k, copy_pads)
+        if layout == "paged-sharded":
+            from repro.serving.mesh import make_sharded_step
+            self._step = make_sharded_step(body, self.mesh, self.cache)
+        else:
+            self._step = jax.jit(body, donate_argnums=(2,))
+        self._stream_cbs: Dict[int, Callable[[int, int], None]] = {}
+        self._stream_done: set = set()
         self._next_rid = 0
         self._aux_log: List[Dict] = []
         # device-resident hot loop: each slot's last sampled token lives
@@ -113,8 +139,19 @@ class Engine:
             toks = np.asarray(jnp.stack([nxt for _, nxt in self._tok_log]))
             for i, (emits, _) in enumerate(self._tok_log):
                 for s, rid in emits:
-                    self.results.setdefault(rid, []).append(int(toks[i, s]))
+                    t = int(toks[i, s])
+                    self.results.setdefault(rid, []).append(t)
+                    cb = self._stream_cbs.get(rid)
+                    if cb is not None:
+                        cb(rid, t)
             self._tok_log.clear()
+        # a flush drains every pending dispatch, so finished requests'
+        # callbacks have now delivered their last token — drop them
+        # (long-lived engines would otherwise leak one closure per
+        # streamed request)
+        for rid in self._stream_done:
+            self._stream_cbs.pop(rid, None)
+        self._stream_done.clear()
 
     def _flush_telemetry(self) -> None:
         if self.telemetry is not None:
@@ -122,6 +159,8 @@ class Engine:
                 self.telemetry.update(aux)
             if self.pool is not None and self.pool.prefix is not None:
                 self.telemetry.update_prefix(self._prefix_counters())
+            if self.pool is not None and self.pool.n_shards > 1:
+                self.telemetry.update_sharding(self.pool.shard_report())
         self._aux_log.clear()
 
     # -- plan attachment ---------------------------------------------------
@@ -170,13 +209,21 @@ class Engine:
         return nxt, new_pending, cache, aux
 
     # -- request API -------------------------------------------------------
-    def submit(self, prompt, max_new_tokens: int = 16) -> int:
+    def submit(self, prompt, max_new_tokens: int = 16,
+               on_token: Optional[Callable[[int, int], None]] = None) -> int:
+        """Queue a request; returns its rid.  ``on_token(rid, token)``
+        is the detokenizing-stream hook: invoked for each generated
+        token IN ORDER when the engine flushes its device-resident token
+        log (end of ``run`` by default, every ``stream_interval``
+        dispatches when opted in) — streaming adds no device syncs."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         assert prompt.size >= 1
         assert prompt.size + max_new_tokens + 1 <= self.max_len, \
             "request exceeds the slot pool's max_len"
         rid = self._next_rid
         self._next_rid += 1
+        if on_token is not None:
+            self._stream_cbs[rid] = on_token
         self.scheduler.add(Request(rid, prompt, max_new_tokens))
         return rid
 
@@ -196,18 +243,24 @@ class Engine:
         kind = self.scheduler.next_dispatch()
         if kind is None:
             return []
-        tokens, n_valid, use_pending, emits, finishing = \
+        tokens, n_valid, use_pending, emits, finishing, prefilling = \
             self.scheduler.build_batch(kind)
         ops = None
         if self.pool is not None:
             # pre-dispatch: snapshot recurrent state of slots whose
             # prompt finishes here (the state at ``offset`` is what the
-            # previous dispatches left in the pool), then allocate /
-            # copy-on-write every page this dispatch will touch; the
-            # resulting device edits ride into the fused step as ``ops``
+            # previous dispatches left in the pool), publish the prefix
+            # of windowed prompts about to wrap their ring (their pages
+            # are still intact NOW — after this dispatch they aren't),
+            # then allocate / copy-on-write every page this dispatch
+            # will touch; the resulting device edits ride into the
+            # fused step as ``ops``
             for s, off in finishing:
                 self.pool.maybe_snapshot(s, self.scheduler.slots[s].req.prompt,
                                          off)
+            for s, off, take in prefilling:
+                self.pool.maybe_publish_prewrap(
+                    s, self.scheduler.slots[s].req.prompt, off, take)
             self.pool.plan_writes(n_valid)
             self.cache, ops = self.pool.drain(self.cache)
         # decode riders in a mixed dispatch: counted at BUILD time (feed()
@@ -229,6 +282,9 @@ class Engine:
             # on telemetry
             self._aux_log.append(aux)
         finished, entering = self.scheduler.feed(n_valid)
+        for _, req in finished:
+            if req.rid in self._stream_cbs:
+                self._stream_done.add(req.rid)
         if self.pool is not None:
             # publish AFTER the dispatch that wrote the prompt's last
             # pages; release AFTER publish so a request finishing in the
@@ -261,23 +317,58 @@ class Engine:
             for k in self.pool.counters:
                 self.pool.counters[k] = 0
 
-    def run(self, requests=None) -> Dict[int, List[int]]:
+    def run(self, requests=None,
+            stream_interval: int = 0) -> Dict[int, List[int]]:
         """Drive the queue (plus optional (prompt, max_new) pairs) to
         completion; returns {rid: generated tokens} for the requests
         submitted via THIS call (all-time results stay in
-        ``self.results``)."""
+        ``self.results``).  ``stream_interval`` > 0 flushes the token
+        log (firing ``on_token`` stream callbacks) every that many
+        dispatches instead of only at the end — the opt-in trade of
+        periodic device syncs for incremental delivery."""
         first_rid = self._next_rid
         if requests:
             for prompt, max_new in requests:
                 self.submit(prompt, max_new)
         while self.scheduler.has_work:
             self.step()
+            if stream_interval > 0 and \
+                    self.counters["dispatches"] % stream_interval == 0:
+                self._flush_tokens()
         self._flush_tokens()
         self._flush_telemetry()
         if requests:
             return {rid: toks for rid, toks in self.results.items()
                     if rid >= first_rid}
         return dict(self.results)
+
+    def stream(self, prompt, max_new_tokens: int = 16,
+               interval: int = 1) -> Iterator[int]:
+        """Detokenizing-stream iterator for ONE request: submit it NOW
+        and return a generator yielding its tokens as they reach the
+        host (the token log flushes every ``interval`` dispatches —
+        already-host-side values, no extra per-token syncs).  Other
+        queued requests keep being served by the same dispatches."""
+        got: List[int] = []
+        self.submit(prompt, max_new_tokens,
+                    on_token=lambda _rid, tok: got.append(tok))
+
+        def gen() -> Iterator[int]:
+            served = 0
+            while self.scheduler.has_work:
+                self.step()
+                if self.counters["dispatches"] % max(interval, 1) == 0:
+                    self._flush_tokens()
+                while served < len(got):
+                    yield got[served]
+                    served += 1
+            self._flush_tokens()
+            self._flush_telemetry()
+            while served < len(got):
+                yield got[served]
+                served += 1
+
+        return gen()
 
     # -- telemetry-driven capacity calibration -----------------------------
     def calibrate_capacities(self, quantile: float = 0.95,
@@ -334,6 +425,8 @@ class Engine:
                                "top_k": self.top_k}
         if self.pool is not None:
             rep["page"] = self.pool.page
+            if self.pool.n_shards > 1:
+                rep["sharding"] = self.pool.shard_report()
             if self.pool.prefix is not None:
                 rep["prefix_cache"] = self._prefix_counters()
         if self.telemetry is not None:

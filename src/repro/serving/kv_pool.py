@@ -212,16 +212,18 @@ def apply_cache_ops(cache: Dict, ops, kv_copy_max: int,
         m = kv_reset.reshape((1, -1) + (1,) * (tag.ndim - 2))
         node["pos"] = jnp.where(m, jnp.full((), -1, tag.dtype), tag)
         for key, a in node.items():
-            node[key] = a.at[:, kv_dst].set(a[:, kv_src])
+            # pads carry an out-of-bounds index and are dropped (the
+            # clamped OOB gather on the src side feeds a dropped write)
+            node[key] = a.at[:, kv_dst].set(a[:, kv_src], mode="drop")
         return node
 
     def stl(a):
         m = s_reset.reshape((1, -1) + (1,) * (a.ndim - 2))
         a = jnp.where(m, jnp.zeros((), a.dtype), a)
         # sequential: a restore may read a snapshot taken earlier in
-        # the same batch (pads are null-page self-copies, no-ops)
+        # the same batch (pads are OOB and dropped)
         for j in range(st_copy_max):
-            a = a.at[:, s_dst[j]].set(a[:, s_src[j]])
+            a = a.at[:, s_dst[j]].set(a[:, s_src[j]], mode="drop")
         return a
 
     for k, v in cache.items():
@@ -274,23 +276,72 @@ class BlockAllocator:
     entries).  ``ref == 1`` with a single table entry means the slot
     owns the page exclusively and may write it in place; ``write_plan``
     enforces that, allocating fresh pages for null entries and
-    copy-on-writing shared ones."""
+    copy-on-writing shared ones.
 
-    def __init__(self, n_pages: int, n_slots: int, n_blocks: int):
+    With ``n_shards > 1`` the pool is MESH-SHARDED (ISSUE 5): page ids
+    stay global but the id space is partitioned into ``n_shards``
+    contiguous ranges of ``pages_per_shard`` — shard ``s`` physically
+    holds ids ``[s*pps, (s+1)*pps)`` — and the allocator becomes
+    ownership-aware: a page pins to the shard that holds it for its
+    whole lifetime, fresh allocations round-robin the shards (most-free
+    first) to balance occupancy, and copy-on-write destinations are
+    allocated on the SOURCE page's shard so every device page copy is
+    shard-local (the packed ops vector splits cleanly per shard, no
+    cross-device traffic in ``apply_cache_ops``)."""
+
+    def __init__(self, n_pages: int, n_slots: int, n_blocks: int,
+                 n_shards: int = 1):
         assert n_pages >= 2 and n_slots >= 1 and n_blocks >= 1
+        assert n_shards >= 1 and n_pages % n_shards == 0, \
+            "page count must divide evenly over the mesh shards"
         self.n_pages = n_pages
+        self.n_shards = n_shards
+        self.pages_per_shard = n_pages // n_shards
         self.table = np.zeros((n_slots, n_blocks), np.int32)
         self.ref = np.zeros((n_pages,), np.int64)
         self.ref[0] = 1                          # null page, pinned
-        self.free: List[int] = list(range(n_pages - 1, 0, -1))
+        # per-shard LIFO free lists (shard 0 excludes the null page);
+        # n_shards == 1 degenerates to the historical single list
+        pps = self.pages_per_shard
+        self._free: List[List[int]] = [
+            list(range((s + 1) * pps - 1, max(1, s * pps) - 1, -1))
+            for s in range(n_shards)]
+        self._rr = 0                             # round-robin tiebreak
+        # occupancy accounting per shard (current / high-water) — the
+        # shard-balance invariants and serve report read these
+        self.in_use = np.zeros((n_shards,), np.int64)
+        self.hiwater = np.zeros((n_shards,), np.int64)
+
+    @property
+    def free(self) -> List[int]:
+        """All free page ids (flattened across shards)."""
+        return [p for fl in self._free for p in fl]
+
+    def shard_of(self, page: int) -> int:
+        return page // self.pages_per_shard
 
     # -- primitive ops -----------------------------------------------------
-    def alloc(self) -> Optional[int]:
-        if not self.free:
-            return None
-        p = self.free.pop()
+    def alloc(self, prefer: Optional[int] = None) -> Optional[int]:
+        """Allocate a page.  ``prefer`` pins the allocation to one shard
+        (COW destinations must live on their source's shard); without it
+        shards are round-robined most-free-first to balance occupancy."""
+        if prefer is not None:
+            if not self._free[prefer]:
+                return None
+            p = self._free[prefer].pop()
+        else:
+            s = min(range(self.n_shards),
+                    key=lambda i: (-len(self._free[i]),
+                                   (i - self._rr) % self.n_shards))
+            if not self._free[s]:
+                return None
+            self._rr = (s + 1) % self.n_shards
+            p = self._free[s].pop()
         assert self.ref[p] == 0, "free list held a referenced page"
         self.ref[p] = 1
+        sh = self.shard_of(p)
+        self.in_use[sh] += 1
+        self.hiwater[sh] = max(self.hiwater[sh], self.in_use[sh])
         return p
 
     def retain(self, page: int) -> None:
@@ -301,14 +352,16 @@ class BlockAllocator:
         """Return a just-allocated (sole-ref) page to the free list."""
         assert self.ref[page] == 1, "unalloc of a shared page"
         self.ref[page] = 0
-        self.free.append(page)
+        self._free[self.shard_of(page)].append(page)
+        self.in_use[self.shard_of(page)] -= 1
 
     def drop(self, page: int) -> bool:
         """Drop one reference; returns True if the page was freed."""
         assert page != 0 and self.ref[page] > 0, "drop of unowned page"
         self.ref[page] -= 1
         if self.ref[page] == 0:
-            self.free.append(page)
+            self._free[self.shard_of(page)].append(page)
+            self.in_use[self.shard_of(page)] -= 1
             return True
         return False
 
@@ -328,7 +381,10 @@ class BlockAllocator:
         fresh page; src keeps its remaining holders and is NEVER written
         — the COW invariant).  ``on_copy(src, dst)`` fires the moment a
         pair is created — BEFORE any later block's alloc — so the caller
-        can pin src against eviction by that very alloc."""
+        can pin src against eviction by that very alloc.
+
+        Sharded pools allocate the COW destination on the SOURCE page's
+        shard (``alloc(prefer=...)``) so the device copy is shard-local."""
         alloc = alloc or self.alloc
         fresh: List[int] = []
         copies: List[Tuple[int, int]] = []
@@ -336,7 +392,9 @@ class BlockAllocator:
             cur = int(self.table[slot, b])
             if cur != 0 and self.ref[cur] == 1:
                 continue                          # already exclusive
-            new = alloc()
+            prefer = (self.shard_of(cur)
+                      if cur != 0 and self.n_shards > 1 else None)
+            new = alloc(prefer=prefer)
             if new is None:
                 raise RuntimeError("paged KV pool exhausted")
             if cur == 0:
@@ -367,6 +425,9 @@ class BlockAllocator:
         free = set(self.free)
         assert len(free) == len(self.free), "free list has duplicates"
         assert 0 not in free and self.ref[0] == 1
+        for s, fl in enumerate(self._free):
+            assert all(self.shard_of(p) == s for p in fl), \
+                f"shard {s} free list holds a foreign page"
         counts = np.bincount(self.table.reshape(-1),
                              minlength=self.n_pages).astype(np.int64)
         counts[0] = 1
@@ -379,6 +440,13 @@ class BlockAllocator:
             else:
                 assert self.ref[p] == counts[p], \
                     f"page {p}: ref {self.ref[p]} != holders {counts[p]}"
+        # occupancy accounting consistent with the refcounts
+        owned = np.zeros((self.n_shards,), np.int64)
+        for p in range(1, self.n_pages):
+            if self.ref[p] > 0:
+                owned[self.shard_of(p)] += 1
+        assert np.array_equal(owned, self.in_use), \
+            f"per-shard in_use {self.in_use} != owned {owned}"
 
 
 # ==========================================================================
@@ -394,18 +462,29 @@ class PagedPool:
 
     The device cache is NOT stored here — ``build()`` returns it and
     every mutating method takes and returns it (the engine owns the
-    single live copy because the dispatch step donates it)."""
+    single live copy because the dispatch step donates it).
+
+    With ``n_shards > 1`` (and the serving page ``mesh``) the pools are
+    MESH-SHARDED: every ``(stack, n_pages, ...)`` leaf is partitioned on
+    its page axis across the mesh's page dimension, the allocators
+    become ownership-aware (see ``BlockAllocator``), and ``_build_ops``
+    emits one packed ops ROW per shard — resets and copies routed to the
+    shard that physically holds the pages, with shard-LOCAL indices — so
+    ``apply_cache_ops`` runs unchanged inside ``shard_map``."""
 
     def __init__(self, cfg: ModelConfig, n_slots: int, max_len: int, *,
                  chunk: int = 0, page: int = 0, dtype=None,
                  spare_pages: Optional[int] = None,
                  snap_slots: Optional[int] = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True, n_shards: int = 1,
+                 mesh=None):
         chunk = chunk or cfg.serve_chunk
         page = page or cfg.serve_page
         assert page >= 1
+        assert n_shards >= 1
         self.cfg, self.n_slots, self.max_len = cfg, n_slots, max_len
         self.chunk, self.page = chunk, page
+        self.n_shards, self.mesh = n_shards, mesh
         api = get_model(cfg)
         assert api.cache_init is not None, f"{cfg.name} has no decode cache"
         proto = api.cache_init(ring_cfg(cfg, chunk), 1, max_len,
@@ -419,8 +498,11 @@ class PagedPool:
         if self.has_kv:
             spare = (n_slots * self.n_blocks if spare_pages is None
                      else spare_pages)
-            self.n_pages = 1 + n_slots * self.n_blocks + spare
-            self.kv = BlockAllocator(self.n_pages, n_slots, self.n_blocks)
+            n_pages = 1 + n_slots * self.n_blocks + spare
+            n_pages += (-n_pages) % n_shards     # even split per shard
+            self.n_pages = n_pages
+            self.kv = BlockAllocator(self.n_pages, n_slots, self.n_blocks,
+                                     n_shards)
         else:
             self.n_pages, self.kv = 0, None
         if self.has_state:
@@ -429,8 +511,10 @@ class PagedPool:
             # one live page per slot + one spare per slot (admission
             # cycles to a fresh page before the old one is dropped) +
             # the snapshot budget; page 0 reserved as null for symmetry
-            self.n_spages = 1 + 2 * n_slots + n_snap
-            self.st = BlockAllocator(self.n_spages, n_slots, 1)
+            n_spages = 1 + 2 * n_slots + n_snap
+            n_spages += (-n_spages) % n_shards
+            self.n_spages = n_spages
+            self.st = BlockAllocator(self.n_spages, n_slots, 1, n_shards)
             for s in range(n_slots):
                 self.st.table[s, 0] = self.st.alloc()
         else:
@@ -452,11 +536,19 @@ class PagedPool:
         # restores + snapshots per dispatch rarely exceed the slot
         # count; bursts overflow into extra pre-step apply rounds
         self.st_copy_max = max(1, n_slots)
-        self._apply = jax.jit(
-            lambda cache, ops: apply_cache_ops(cache, ops,
-                                               self.kv_copy_max,
-                                               self.st_copy_max),
-            donate_argnums=(0,))
+        assert n_shards == 1 or mesh is not None, \
+            "sharded pool needs the page mesh"
+        if mesh is None:
+            self._apply = jax.jit(
+                lambda cache, ops: apply_cache_ops(cache, ops,
+                                                   self.kv_copy_max,
+                                                   self.st_copy_max),
+                donate_argnums=(0,))
+        else:
+            # mesh present (even 1-shard): ops come as per-shard rows,
+            # so the standalone apply must be the shard_map one —
+            # built by build() (needs the cache's partition specs)
+            self._apply = None
 
     # -- device cache ------------------------------------------------------
     def build(self) -> Dict:
@@ -498,44 +590,96 @@ class PagedPool:
         if self.has_state:
             cache["state_table"] = jnp.asarray(self.st.table[:, 0],
                                                jnp.int32)
+        if self.mesh is not None:
+            # place the pools page-sharded on the mesh and compile the
+            # standalone (overflow-round) apply as a shard_map step
+            # (mesh-keyed, like _build_ops' per-shard rows — a 1-shard
+            # mesh still takes this path)
+            from repro.serving.mesh import (cache_partition_specs,
+                                            shard_cache, sharded_apply)
+            specs = cache_partition_specs(cache)
+            cache = shard_cache(cache, self.mesh, specs)
+            self._apply = sharded_apply(self.mesh, specs,
+                                        self.kv_copy_max, self.st_copy_max)
         return cache
 
+    def _take_copies(self, pending: List[Tuple[int, int]], alloc,
+                     budget: int):
+        """Pop up to ``budget`` pending copies PER SHARD (routed by the
+        src page's shard — COW/snapshot destinations are allocated on
+        the same shard, asserted), dropping each emitted pair's
+        pending-src pin.  Returns (src, dst) local-index arrays shaped
+        (n_shards, budget); pads are the OOB sentinel ``pages_per_shard``
+        — dropped by ``apply_cache_ops``'s scatter.  A (0, 0) self-copy
+        pad would COLLIDE with a real copy whose destination is local
+        page 0 (on shards >= 1 that is an allocatable page, unlike the
+        global null page), and a duplicate-index scatter may let the
+        stale pad win over the real copy."""
+        P_, pps = alloc.n_shards, alloc.pages_per_shard
+        src = np.full((P_, budget), pps, np.int32)
+        dst = np.full((P_, budget), pps, np.int32)
+        fill = [0] * P_
+        rest: List[Tuple[int, int]] = []
+        for s, d in pending:
+            sh = alloc.shard_of(s)
+            assert alloc.shard_of(d) == sh, \
+                "page copy crosses shards (allocator ownership bug)"
+            if fill[sh] < budget:
+                src[sh, fill[sh]] = s - sh * pps
+                dst[sh, fill[sh]] = d - sh * pps
+                fill[sh] += 1
+                alloc.drop(s)            # release the pending-src pin
+            else:
+                rest.append((s, d))
+        pending[:] = rest
+        return src, dst
+
+    def _take_resets(self, reset: set, alloc) -> np.ndarray:
+        """Pending page-tag resets as (n_shards, pages_per_shard) rows
+        of shard-local flags; clears the set."""
+        P_, pps = alloc.n_shards, alloc.pages_per_shard
+        out = np.zeros((P_, pps), np.int32)
+        for p in reset:
+            out[alloc.shard_of(p), p % pps] = 1
+        reset.clear()
+        return out
+
     def _build_ops(self):
-        """Materialise ONE round of pending edits as a single packed
-        int32 vector (layout mirrored by ``apply_cache_ops``) — one
-        host->device transfer per dirty dispatch."""
-        parts = [np.asarray(self.pos, np.int32)]
+        """Materialise ONE round of pending edits as a packed int32
+        vector (layout mirrored by ``apply_cache_ops``) — one
+        host->device transfer per dirty dispatch.  Sharded pools emit
+        one ROW per shard, (n_shards, row_len): the replicated sections
+        (pos, block/state tables, global ids) are duplicated into every
+        row while resets and copies carry shard-LOCAL page indices, so
+        each shard applies exactly its own edits inside shard_map."""
+        P_ = self.n_shards
+        base = [np.asarray(self.pos, np.int32)]
         if self.has_kv:
-            parts.append(self.kv.table.reshape(-1).astype(np.int32))
+            base.append(self.kv.table.reshape(-1).astype(np.int32))
         if self.has_state:
-            parts.append(self.st.table[:, 0].astype(np.int32))
+            base.append(self.st.table[:, 0].astype(np.int32))
+        kv_parts = st_parts = None
         if self.has_kv:
-            kvc = self._kv_copies[:self.kv_copy_max]
-            del self._kv_copies[:self.kv_copy_max]
-            kv_reset = np.zeros((self.n_pages,), np.int32)
-            for p in self._kv_reset:
-                kv_reset[p] = 1
-            self._kv_reset.clear()
-            kv_src = np.zeros((self.kv_copy_max,), np.int32)
-            kv_dst = np.zeros((self.kv_copy_max,), np.int32)
-            for i, (s, d) in enumerate(kvc):
-                kv_src[i], kv_dst[i] = s, d
-                self.kv.drop(s)          # release the pending-src pin
-            parts += [kv_reset, kv_src, kv_dst]
+            reset = self._take_resets(self._kv_reset, self.kv)
+            src, dst = self._take_copies(self._kv_copies, self.kv,
+                                         self.kv_copy_max)
+            kv_parts = (reset, src, dst)
         if self.has_state:
-            stc = self._st_copies[:self.st_copy_max]
-            del self._st_copies[:self.st_copy_max]
-            s_reset = np.zeros((self.n_spages,), np.int32)
-            for p in self._st_reset:
-                s_reset[p] = 1
-            self._st_reset.clear()
-            s_src = np.zeros((self.st_copy_max,), np.int32)
-            s_dst = np.zeros((self.st_copy_max,), np.int32)
-            for i, (s, d) in enumerate(stc):
-                s_src[i], s_dst[i] = s, d
-                self.st.drop(s)          # release the pending-src pin
-            parts += [s_reset, s_src, s_dst]
-        return jnp.asarray(np.concatenate(parts))
+            reset = self._take_resets(self._st_reset, self.st)
+            src, dst = self._take_copies(self._st_copies, self.st,
+                                         self.st_copy_max)
+            st_parts = (reset, src, dst)
+        rows = []
+        for s in range(P_):
+            parts = list(base)
+            if kv_parts is not None:
+                parts += [p[s] for p in kv_parts]
+            if st_parts is not None:
+                parts += [p[s] for p in st_parts]
+            rows.append(np.concatenate(parts))
+        if self.mesh is None:
+            return jnp.asarray(rows[0])      # single-device: flat vector
+        return jnp.asarray(np.stack(rows))   # sharded step: one row/shard
 
     def drain(self, cache: Dict) -> Tuple[Dict, Optional[jnp.ndarray]]:
         """-> (cache, ops): the pending edits as ONE packed vector for
@@ -575,40 +719,48 @@ class PagedPool:
         self._dirty = True
 
     # -- allocation with prefix-cache eviction -----------------------------
-    def _kv_alloc(self) -> Optional[int]:
-        p = self.kv.alloc()
+    # ``prefer`` pins the allocation (and, when eviction is needed to
+    # satisfy it, the eviction hunt) to one mesh shard: COW and
+    # snapshot-restore destinations must live on their source's shard
+    def _kv_alloc(self, prefer: Optional[int] = None) -> Optional[int]:
+        p = self.kv.alloc(prefer=prefer)
         while p is None and self.prefix is not None:
             # evict only entries whose page actually frees (an entry
             # still shared into a live slot reclaims nothing — keep it
             # for future hits); same for snapshots via their kv pages
             pg = self.prefix.evict_lru_page(
-                lambda q: self.kv.ref[q] == 1)
+                lambda q: self.kv.ref[q] == 1 and
+                (prefer is None or self.kv.shard_of(q) == prefer))
             if pg is not None:
                 self.kv.drop(pg)
                 self.counters["pages_evicted"] += 1
             else:
                 e = self.prefix.evict_lru_snap(
-                    lambda s: any(self.kv.ref[q] == 1 for q in s.kv_pages))
+                    lambda s: any(
+                        self.kv.ref[q] == 1 and
+                        (prefer is None or self.kv.shard_of(q) == prefer)
+                        for q in s.kv_pages))
                 if e is None:
                     break
                 self._drop_snap(e)
-            p = self.kv.alloc()
+            p = self.kv.alloc(prefer=prefer)
         if p is not None:
             self._kv_reset.add(p)
             self._dirty = True
         return p
 
-    def _st_alloc(self) -> Optional[int]:
-        p = self.st.alloc()
+    def _st_alloc(self, prefer: Optional[int] = None) -> Optional[int]:
+        p = self.st.alloc(prefer=prefer)
         while p is None and self.prefix is not None:
             # a pinned snapshot (mid-restore this step) has spage ref
             # > 1 and is excluded; everything else frees its state page
             e = self.prefix.evict_lru_snap(
-                lambda s: self.st.ref[s.spage] == 1)
+                lambda s: self.st.ref[s.spage] == 1 and
+                (prefer is None or self.st.shard_of(s.spage) == prefer))
             if e is None:
                 break
             self._drop_snap(e)
-            p = self.st.alloc()
+            p = self.st.alloc(prefer=prefer)
         if p is not None:
             self._st_reset.add(p)
             self._dirty = True
@@ -656,7 +808,11 @@ class PagedPool:
                 # eviction would free (and possibly recycle) the very
                 # page the restore copy is about to read
                 self.st.retain(snap.spage)
-            new = self._st_alloc()
+            # a restore copies snapshot -> fresh page: the fresh page
+            # must live on the snapshot's shard (shard-local copy)
+            prefer = (self.st.shard_of(snap.spage)
+                      if snap is not None and self.n_shards > 1 else None)
+            new = self._st_alloc(prefer=prefer)
             if new is None:
                 raise RuntimeError("paged state pool exhausted")
             self.st.drop(int(self.st.table[slot, 0]))
@@ -712,10 +868,12 @@ class PagedPool:
             return                       # ring wrapped: pages incomplete
         if self.prefix.has_state(prompt, offset):
             return
-        spage = self._st_alloc()
+        cur = int(self.st.table[slot, 0])
+        spage = self._st_alloc(
+            prefer=self.st.shard_of(cur) if self.n_shards > 1 else None)
         if spage is None:
             return                       # snapshot budget exhausted
-        self._push_st_copy(int(self.st.table[slot, 0]), spage)
+        self._push_st_copy(cur, spage)
         kv_pages: List[int] = []
         if self.has_kv:
             kv_pages = [int(self.kv.table[slot, i])
@@ -728,13 +886,48 @@ class PagedPool:
 
     def publish(self, slot: int, prompt: np.ndarray) -> None:
         """Called when ``slot`` finishes prefill (attention families):
-        publish the full pages of its prompt into the prefix trie."""
+        publish the full pages of its prompt into the prefix trie.
+        Prompts longer than the sliding-window ring have wrapped by now
+        (pages hold the TAIL positions, not the prefix) — those were
+        already published at the last pre-wrap page boundary by
+        ``maybe_publish_prewrap``, so nothing is lost here."""
         if self.prefix is None or not self.has_kv or self.has_state:
             return
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if len(prompt) > self.ring:
-            return                       # ring wrapped: pages incomplete
+            return                       # ring wrapped: prewrap published
         n_full = (len(prompt) // self.page) * self.page
+        new = self.prefix.insert_pages(
+            prompt, n_full, lambda i: self.kv.table[slot, i])
+        for pg in new:
+            self.kv.retain(pg)
+        self.counters["pages_published"] += len(new)
+
+    def maybe_publish_prewrap(self, slot: int, prompt: np.ndarray,
+                              offset: int, take: int) -> None:
+        """Close the windowed-prompt prefix-cache gap (ROADMAP): a
+        sliding-window prompt longer than its ring used to publish
+        NOTHING — by the time prefill ends the ring has wrapped and the
+        pages hold the tail, not the prefix.  Called pre-dispatch for
+        every prefilling slot about to consume ``take`` tokens at
+        ``offset``: on the dispatch that first writes past the ring,
+        publish a state-snapshot-style entry at the LAST PRE-WRAP page
+        boundary — full pages [0, offset) for attention families, the
+        recurrent-state snapshot at ``offset`` (page-aligned) for
+        ssm/hybrid — while the prefix is still intact."""
+        if self.prefix is None or not self.has_kv:
+            return
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) <= self.ring:
+            return                       # no wrap: publish() covers it
+        if not (offset <= self.ring < offset + take):
+            return                       # not the wrap-crossing dispatch
+        if self.has_state:               # hybrid: snapshot-style entry
+            self.maybe_snapshot(slot, prompt, offset)
+            return
+        n_full = (min(offset, len(prompt) - 1) // self.page) * self.page
+        if n_full <= 0:
+            return
         new = self.prefix.insert_pages(
             prompt, n_full, lambda i: self.kv.table[slot, i])
         for pg in new:
@@ -750,6 +943,21 @@ class PagedPool:
         self._dirty = True
 
     # -- reporting ----------------------------------------------------------
+    def shard_report(self) -> Dict:
+        """Per-shard page occupancy: current in-use and high-water marks
+        (the null page on shard 0 is excluded by the allocator's
+        accounting — it is pinned, never allocated)."""
+        rep: Dict = {"n_shards": self.n_shards}
+        if self.has_kv:
+            rep["kv_pages_per_shard"] = self.kv.pages_per_shard
+            rep["kv_pages_in_use_per_shard"] = self.kv.in_use.tolist()
+            rep["kv_pages_hiwater_per_shard"] = self.kv.hiwater.tolist()
+        if self.has_state:
+            rep["state_pages_per_shard"] = self.st.pages_per_shard
+            rep["state_pages_in_use_per_shard"] = self.st.in_use.tolist()
+            rep["state_pages_hiwater_per_shard"] = self.st.hiwater.tolist()
+        return rep
+
     def report(self) -> Dict:
         rep = {
             "page": self.page, "n_blocks": self.n_blocks,
@@ -759,6 +967,8 @@ class PagedPool:
         }
         if self.has_kv:
             rep["pages_in_use"] = int(np.sum(self.kv.ref > 0) - 1)
+        if self.n_shards > 1:
+            rep["sharding"] = self.shard_report()
         if self.prefix is not None:
             q = max(self.counters["prefix_queries"], 1)
             n_pages, n_snaps = self.prefix.n_entries

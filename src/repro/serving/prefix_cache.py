@@ -10,7 +10,12 @@ Two kinds of reusable artifacts come out of serving a prompt:
     trie stores one entry per *full* page, keyed by the entire token
     prefix up to that page boundary (so a lookup walks parent-to-child:
     a page only matches if everything before it matched too — the trie
-    property, realised as a dict of prefix keys).
+    property, realised as a dict of prefix keys).  Sliding-window
+    prompts longer than their ring publish at the LAST PRE-WRAP page
+    boundary (``PagedPool.maybe_publish_prewrap``) — by prefill's end
+    the ring has wrapped and its pages hold the tail, not the prefix.
+    Entries store GLOBAL page ids, so the trie works unchanged over the
+    mesh-sharded pool (ids partition deterministically across shards).
   * **State snapshots** (ssm / hybrid families): recurrent state at a
     page-aligned prompt offset, keyed by the exact token prefix it
     summarises.  A hybrid snapshot also records the KV page ids of the

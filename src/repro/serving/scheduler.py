@@ -102,9 +102,10 @@ class Scheduler:
     def build_batch(self, kind: str
                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
                                List[Tuple[int, int]],
-                               List[Tuple[int, int]]]:
+                               List[Tuple[int, int]],
+                               List[Tuple[int, int, int]]]:
         """-> (tokens (B, C), n_valid (B,), use_pending (B,), emits,
-        finishing).
+        finishing, prefilling).
 
         ``tokens`` carries each prefilling slot's next prompt chunk;
         slots flagged in ``use_pending`` feed their device-resident last
@@ -114,19 +115,25 @@ class Scheduler:
         slots whose prompt completes here).  ``finishing`` lists (slot,
         offset) pairs whose PROMPT completes this dispatch — the paged
         engine snapshots recurrent state at ``offset`` before
-        dispatching (prefix cache for ssm/hybrid families)."""
+        dispatching (prefix cache for ssm/hybrid families).
+        ``prefilling`` lists every (slot, offset, take) consuming prompt
+        tokens this dispatch — the paged engine's pre-wrap publish hook
+        (windowed prompts longer than their ring publish their prefix
+        pages BEFORE the ring wraps over them)."""
         C = self.chunk if kind == "mixed" else 1
         tokens = np.zeros((self.n_slots, C), np.int32)
         n_valid = np.zeros((self.n_slots,), np.int32)
         use_pending = np.zeros((self.n_slots,), bool)
         emits: List[Tuple[int, int]] = []
         finishing: List[Tuple[int, int]] = []
+        prefilling: List[Tuple[int, int, int]] = []
         for s, slot in enumerate(self.slots):
             if slot.state is PREFILL:
                 take = min(C, len(slot.req.prompt) - slot.offset)
                 tokens[s, :take] = slot.req.prompt[slot.offset:
                                                    slot.offset + take]
                 n_valid[s] = take
+                prefilling.append((s, slot.offset, take))
                 if slot.offset + take >= len(slot.req.prompt):
                     emits.append((s, slot.req.rid))
                     finishing.append((s, slot.offset))
@@ -134,7 +141,7 @@ class Scheduler:
                 use_pending[s] = True
                 n_valid[s] = 1
                 emits.append((s, slot.req.rid))
-        return tokens, n_valid, use_pending, emits, finishing
+        return tokens, n_valid, use_pending, emits, finishing, prefilling
 
     # -- result ingestion --------------------------------------------------
     def feed(self, n_valid: np.ndarray

@@ -56,6 +56,10 @@ class ServingTelemetry:
         # summary() so they land in the serve report next to
         # per_layer_capacity
         self.prefix: Optional[Dict] = None
+        # mesh-sharded pool occupancy (per-shard pages in use / high
+        # water), pushed by the paged-sharded engine — the serve-sharded
+        # smoke asserts every shard carried pages
+        self.sharding: Optional[Dict] = None
 
     def update(self, aux: Dict) -> None:
         seen = False
@@ -103,10 +107,17 @@ class ServingTelemetry:
         the engine recomputes them from the pool at each flush)."""
         self.prefix = dict(counters)
 
+    def update_sharding(self, counters: Dict) -> None:
+        """Record the latest per-shard page occupancy (the sharded
+        engine recomputes it from its allocators at each flush)."""
+        self.sharding = dict(counters)
+
     def summary(self) -> Dict:
         out: Dict = {"n_dispatches": self.n_updates}
         if self.prefix is not None:
             out["prefix_cache"] = dict(self.prefix)
+        if self.sharding is not None:
+            out["sharding"] = dict(self.sharding)
         for key, sums in self.sums.items():
             n = max(self.n_updates, 1)
             shape = self.shapes.get(key)

@@ -92,12 +92,16 @@ def test_allocator_exhaustion_raises():
 N_SLOTS, N_BLOCKS, N_PAGES = 3, 4, 1 + 3 * 4 + 4
 
 
-def run_allocator_ops(ops):
+def run_allocator_ops(ops, n_shards: int = 1):
     """Drive write/share/release/publish/evict ops through an allocator,
     asserting after every op: no leak, no double-own, refcount ==
     holders (block tables + trie retains), COW sources keep their
-    holders, written blocks exclusively owned."""
-    a = BlockAllocator(N_PAGES, N_SLOTS, N_BLOCKS)
+    holders, written blocks exclusively owned.  With ``n_shards`` > 1
+    additionally: every COW destination lands on its source's shard
+    (shard-local device copies) and the per-shard occupancy accounting
+    matches the refcounts (asserted inside ``check``)."""
+    n_pages = N_PAGES + (-N_PAGES) % n_shards
+    a = BlockAllocator(n_pages, N_SLOTS, N_BLOCKS, n_shards)
     trie: list = []                                  # published page ids
 
     def external():
@@ -122,6 +126,8 @@ def run_allocator_ops(ops):
             for src, dst in copies:
                 assert a.ref[src] >= 1, "COW dropped the shared source"
                 assert src not in dsts, "COW source is also a target"
+                assert a.shard_of(src) == a.shard_of(dst), \
+                    "COW destination left its source's shard"
         elif kind == "share":
             _, dst_slot, src_slot, block = item
             pg = int(a.table[src_slot, block])
@@ -168,6 +174,127 @@ def random_allocator_ops(rng, n):
 def test_allocator_invariants_under_random_ops(seed):
     rng = np.random.default_rng(seed)
     run_allocator_ops(random_allocator_ops(rng, 60))
+
+
+# -- mesh-sharded allocator (ISSUE 5): ownership + balance invariants ------
+
+def test_sharded_allocator_round_robins_for_balance():
+    """Fresh allocations spread across shards most-free-first: after
+    2 * n_shards allocations from a balanced pool every shard carries
+    the same occupancy (modulo the null page pinned to shard 0)."""
+    a = BlockAllocator(n_pages=16, n_slots=2, n_blocks=4, n_shards=4)
+    pages = [a.alloc() for _ in range(8)]
+    assert None not in pages
+    per_shard = [sum(1 for p in pages if a.shard_of(p) == s)
+                 for s in range(4)]
+    assert sorted(per_shard) == [2, 2, 2, 2], per_shard
+    assert a.hiwater.tolist() == [2, 2, 2, 2]
+    a.check({p: 1 for p in pages})         # floating allocs as externals
+
+
+def test_sharded_cow_destination_stays_on_source_shard():
+    """The ownership invariant that keeps every device page copy
+    shard-local: a COW destination is allocated on the SOURCE page's
+    shard even when other shards have more free pages."""
+    a = BlockAllocator(n_pages=16, n_slots=2, n_blocks=2, n_shards=4)
+    p = a.alloc()
+    a.table[0, 0] = p
+    a.share(1, 0, p)
+    # drain the source's shard down to one free page so a balance-first
+    # allocator would pick another shard — ownership must win
+    src_shard = a.shard_of(p)
+    held = [h for h in [a.alloc(prefer=src_shard)] if h is not None]
+    fresh, copies = a.write_plan(1, [0])
+    (src, dst), = copies
+    assert src == p and a.shard_of(dst) == src_shard
+    a.check({h: 1 for h in held})
+
+
+def test_sharded_alloc_prefer_respects_shard_exhaustion():
+    """alloc(prefer=s) returns None when shard s is exhausted even if
+    other shards still have free pages (cross-shard copies are never
+    silently introduced); un-preferred allocation still succeeds."""
+    a = BlockAllocator(n_pages=8, n_slots=1, n_blocks=2, n_shards=4)
+    held = [a.alloc(prefer=0)]
+    assert held[0] is not None                 # shard 0: null + 1 usable
+    assert a.alloc(prefer=0) is None
+    held.append(a.alloc())                     # other shards still serve
+    assert held[1] is not None
+    a.check({h: 1 for h in held})
+
+
+@pytest.mark.parametrize("seed,n_shards", [(s, n) for s in range(4)
+                                           for n in (2, 4)])
+def test_sharded_allocator_invariants_under_random_ops(seed, n_shards):
+    rng = np.random.default_rng(seed)
+    run_allocator_ops(random_allocator_ops(rng, 60), n_shards=n_shards)
+
+
+def test_sharded_paged_pool_sizing_and_ops_rows():
+    """Host-side half of the sharded pool (the device-level matrix
+    lives in test_serving's forced-4-device subprocess test): pool
+    sizes round to an even per-shard split, and the packed ops build
+    emits one row per shard with shard-LOCAL copy indices.  The mesh is
+    only needed at build() time, so a placeholder suffices here."""
+    cfg = reduce_config(get_config("granite-3-2b"))
+    pool = PagedPool(cfg, 2, 64, chunk=8, n_shards=4, mesh=object())
+    assert pool.n_pages % 4 == 0
+    assert pool.kv.pages_per_shard == pool.n_pages // 4
+    prompt = np.arange(16, dtype=np.int32)
+    pool.admit(0, prompt)
+    pool.plan_writes(np.array([8, 0]))
+    ops = np.asarray(pool._build_ops())
+    assert ops.ndim == 2 and ops.shape[0] == 4
+    # every row replicates the block table section and the local reset
+    # flags only mark pages this shard holds
+    n_slots, n_blocks = pool.n_slots, pool.n_blocks
+    tbl = ops[:, n_slots:n_slots + n_slots * n_blocks]
+    assert (tbl == tbl[0]).all(), "block table rows differ across shards"
+    pps = pool.kv.pages_per_shard
+    base = n_slots + n_slots * n_blocks
+    reset = ops[:, base:base + pps]
+    assert reset.sum() >= 1 and (reset <= 1).all()
+    # copy pads are the OOB sentinel (pages_per_shard), never (0, 0):
+    # local page 0 is a REAL page on shards >= 1 and a (0, 0) pad could
+    # clobber a genuine copy targeting it in the same scatter
+    src = ops[:, base + pps:base + pps + pool.kv_copy_max]
+    dst = ops[:, base + pps + pool.kv_copy_max:]
+    assert (src == pps).all() and (dst == pps).all()
+
+
+def test_apply_cache_ops_drops_oob_copy_pads():
+    """Device-level regression for the pad-collision fix: a real copy
+    whose destination is LOCAL page 0 must win even when OOB pad
+    entries ride in the same packed scatter (duplicate-index scatters
+    may otherwise let the stale pad write through)."""
+    import jax.numpy as jnp
+    from repro.serving.kv_pool import apply_cache_ops
+    n_slots, n_blocks, npp, page, cmax = 1, 2, 4, 2, 3
+    k = jnp.arange(npp * page * 2, dtype=jnp.float32).reshape(
+        1, npp, page, 1, 2)
+    cache = {
+        "pos": jnp.zeros((n_slots,), jnp.int32),
+        "block_table": jnp.zeros((n_slots, n_blocks), jnp.int32),
+        "layers": {"k": k, "v": k + 100.0,
+                   "pos": jnp.arange(npp * page, dtype=jnp.int32
+                                     ).reshape(1, npp, page)},
+    }
+    ops = jnp.asarray(np.concatenate([
+        np.zeros((n_slots,), np.int32),                  # pos
+        np.zeros((n_slots * n_blocks,), np.int32),       # block table
+        np.zeros((npp,), np.int32),                      # no tag resets
+        np.array([2, npp, npp], np.int32),               # src: real + pads
+        np.array([0, npp, npp], np.int32),               # dst: local 0!
+    ]))
+    out = apply_cache_ops(cache, ops, cmax, 0)
+    np.testing.assert_array_equal(np.asarray(out["layers"]["k"])[:, 0],
+                                  np.asarray(k)[:, 2],
+                                  "pad write clobbered the real copy")
+    np.testing.assert_array_equal(np.asarray(out["layers"]["pos"])[:, 0],
+                                  np.asarray(cache["layers"]["pos"])[:, 2])
+    # pages 1..3 untouched
+    np.testing.assert_array_equal(np.asarray(out["layers"]["k"])[:, 1:],
+                                  np.asarray(k)[:, 1:])
 
 
 def check_prefix_trie_prefix_property(prompts, page):

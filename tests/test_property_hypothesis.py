@@ -183,6 +183,17 @@ def test_block_allocator_invariants(ops):
     run_allocator_ops(ops)
 
 
+@settings(max_examples=60, deadline=None)
+@given(st.lists(_alloc_op, min_size=1, max_size=40),
+       st.sampled_from([2, 4]))
+def test_block_allocator_invariants_sharded(ops, n_shards):
+    """Mesh-sharded twin (ISSUE 5): same machine, plus COW destinations
+    never leave their source's shard and per-shard occupancy accounting
+    stays consistent with the refcounts."""
+    from test_paged_pool import run_allocator_ops
+    run_allocator_ops(ops, n_shards=n_shards)
+
+
 @settings(max_examples=40, deadline=None)
 @given(st.lists(st.lists(st.integers(0, 7), min_size=2, max_size=24),
                 min_size=1, max_size=8),

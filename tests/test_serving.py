@@ -1,9 +1,16 @@
 """repro.serving engine tests: chunked prefill == batched prefill ==
 teacher-forced forward (transformer / ssm / hybrid / rwkv, incl. prompts
 beyond the sliding-window ring), the paged-vs-slotted cache-layout
-equivalence matrix + shared-prefix dedup, continuous-batching slot
-eviction/reuse vs solo runs, temperature/top-k sampling, telemetry-driven
-capacity calibration, and the rebuilt serve driver's report."""
+equivalence matrix + shared-prefix dedup, the mesh-sharded paged layout
+(paged-sharded == paged on 4 forced host devices, one merge collective
+per attention layer), continuous-batching slot eviction/reuse vs solo
+runs, the detokenizing stream API, temperature/top-k sampling,
+telemetry-driven capacity calibration, and the rebuilt serve driver's
+report."""
+import os
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -359,6 +366,225 @@ def test_prefix_cache_survives_eviction_and_rehits():
     second = eng.run([(np.concatenate([prefix, [7]]), 4)])
     assert list(first.values())[0] == list(second.values())[0]
     assert eng._prefix_counters()["prefix_hits"] == hits_before + 1
+
+
+# -- mesh-sharded paged layout (ISSUE 5) -----------------------------------
+
+_SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config, reduce_config
+from repro.models import get_model
+from repro.serving import Engine
+from repro.launch.mesh import make_page_mesh
+
+mesh = make_page_mesh(4)
+# the 5-family matrix: gqa ring, absorbed MLA, recurrent state tables,
+# hybrid (state + shared-attn pages), MoE — paged-sharded must be token-
+# identical to the single-device paged engine on the same heterogeneous
+# trace (which the existing matrix ties to slotted and teacher-forced)
+for arch in ["granite-3-2b", "deepseek-v2-236b", "rwkv6-3b",
+             "zamba2-7b", "mixtral-8x7b"]:
+    cfg = reduce_config(get_config(arch))
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    reqs = [(rng.integers(0, cfg.vocab_size, size=int(rng.integers(3, 18))),
+             int(rng.integers(3, 7))) for _ in range(3)]
+    res_p = Engine(cfg, params, n_slots=2, max_len=64,
+                   layout="paged").run(list(reqs))
+    eng = Engine(cfg, params, n_slots=2, max_len=64,
+                 layout="paged-sharded", mesh=mesh)
+    res_m = eng.run(list(reqs))
+    assert res_m == res_p, arch + ": sharded tokens diverge from paged"
+    sh = eng.pool.shard_report()
+    hw = (sh.get("kv_pages_hiwater_per_shard")
+          or sh.get("state_pages_hiwater_per_shard"))
+    assert sum(1 for n in hw if n > 0) >= 2, (arch, sh)
+    assert eng.report()["sharding"]["n_shards"] == 4
+    print("MATRIX_OK", arch)
+
+# prefix cache OFF must also agree (acceptance: on AND off)
+cfg = reduce_config(get_config("granite-3-2b"))
+api = get_model(cfg)
+params = api.init(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(1)
+reqs = [(rng.integers(0, cfg.vocab_size, size=12), 4) for _ in range(3)]
+res_p = Engine(cfg, params, n_slots=2, max_len=64, layout="paged",
+               prefix_cache=False).run(list(reqs))
+eng = Engine(cfg, params, n_slots=2, max_len=64, layout="paged-sharded",
+             mesh=mesh, prefix_cache=False)
+assert eng.run(list(reqs)) == res_p, "prefix-off sharded tokens diverge"
+print("PREFIX_OFF_OK")
+
+# shared-prefix dedup works unchanged on the sharded pool
+prefix = rng.integers(0, cfg.vocab_size, size=24)
+sreqs = [(np.concatenate([prefix,
+                          rng.integers(0, cfg.vocab_size, size=4)]), 4)
+         for _ in range(3)]
+warm = Engine(cfg, params, n_slots=2, max_len=64, chunk=8,
+              layout="paged-sharded", mesh=mesh)
+cold = Engine(cfg, params, n_slots=2, max_len=64, chunk=8,
+              layout="paged-sharded", mesh=mesh, prefix_cache=False)
+assert warm.run(list(sreqs)) == cold.run(list(sreqs))
+assert warm._prefix_counters()["chunks_skipped"] > 0
+print("SHARDED_PREFIX_OK")
+
+# the distributed flash-decode merge is ONE collective per attention
+# layer per dispatch: the lowered decode step's scan body carries
+# exactly one all-gather (the packed flash merge) and nothing else
+lowered = eng._step.lower(
+    params, None, eng.cache, jnp.zeros((2, 1), jnp.int32),
+    jnp.ones((2,), jnp.int32), jnp.ones((2,), bool), eng._pending,
+    eng._base_key, None)
+lines = lowered.as_text().splitlines()
+n_ag = sum(1 for ln in lines if "all_gather" in ln or "all-gather" in ln)
+n_other = sum(1 for ln in lines
+              if "all_reduce" in ln or "all-reduce" in ln
+              or "collective_permute" in ln or "collective-permute" in ln)
+assert n_ag == 1, f"expected 1 merge collective in the scan body, got {n_ag}"
+assert n_other == 0, f"unexpected extra collectives: {n_other}"
+print("COLLECTIVE_COUNT_OK")
+print("SHARDED_OK")
+"""
+
+
+def test_paged_sharded_engine_matrix_multidevice():
+    """The ISSUE 5 acceptance matrix, run in a subprocess with 4 forced
+    host devices (jax device count locks at first init): paged-sharded
+    == paged tokens for all 5 families, with prefix cache on and off,
+    pages spread over the shards, and exactly ONE merge collective per
+    attention layer in the compiled decode step."""
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT],
+                       capture_output=True, text=True, env=env,
+                       cwd=os.getcwd(), timeout=1800)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "SHARDED_OK" in r.stdout
+
+
+def test_paged_sharded_single_device_mesh():
+    """The degenerate 1-shard mesh runs in-process (no forced devices)
+    and must match the plain paged engine — the layout flag alone can't
+    change tokens."""
+    from repro.launch.mesh import make_page_mesh
+    cfg = reduce_config(get_config("granite-3-2b"))
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(5)
+    reqs = [(rng.integers(0, cfg.vocab_size, size=int(rng.integers(3, 14))),
+             int(rng.integers(3, 6))) for _ in range(3)]
+    res_p = Engine(cfg, params, n_slots=2, max_len=64,
+                   layout="paged").run(list(reqs))
+    eng = Engine(cfg, params, n_slots=2, max_len=64,
+                 layout="paged-sharded", mesh=make_page_mesh(1))
+    assert eng.run(list(reqs)) == res_p
+
+
+# -- detokenizing stream API ------------------------------------------------
+
+def test_stream_callback_matches_results():
+    """submit(on_token=...) fires per generated token in order at flush
+    time; the callback stream equals the request's result list, and
+    requests without callbacks are untouched (default off)."""
+    cfg = reduce_config(get_config("granite-3-2b"))
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(6)
+    eng = Engine(cfg, params, n_slots=2, max_len=64)
+    got = []
+    rid = eng.submit(rng.integers(0, cfg.vocab_size, size=9), 6,
+                     on_token=lambda r, t: got.append((r, t)))
+    rid2 = eng.submit(rng.integers(0, cfg.vocab_size, size=5), 4)
+    eng.run()
+    assert [t for _, t in got] == eng.results[rid]
+    assert all(r == rid for r, _ in got)
+    assert len(eng.results[rid2]) == 4
+
+
+def test_stream_iterator_yields_incrementally():
+    """Engine.stream() yields tokens while the engine is still serving
+    (flush every `interval` dispatches), and the full stream equals a
+    plain run of the same request."""
+    cfg = reduce_config(get_config("granite-3-2b"))
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab_size, size=11)
+    want = Engine(cfg, params, n_slots=1, max_len=64).run([(prompt, 6)])
+    eng = Engine(cfg, params, n_slots=1, max_len=64)
+    toks, midway = [], False
+    for t in eng.stream(prompt, 6, interval=1):
+        toks.append(t)
+        if eng.scheduler.has_work:
+            midway = True
+    assert toks == list(want.values())[0]
+    assert midway, "stream only delivered after completion"
+
+
+def test_stream_submits_eagerly_and_releases_callbacks():
+    """stream() must queue the request at CALL time (a later run()
+    serves it and the generator replays the flushed tokens), and a
+    long-lived engine must not accumulate finished streams' callbacks."""
+    cfg = reduce_config(get_config("granite-3-2b"))
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(10)
+    eng = Engine(cfg, params, n_slots=2, max_len=64)
+    for _ in range(2):
+        assert len(list(eng.stream(
+            rng.integers(0, cfg.vocab_size, size=6), 4))) == 4
+    assert not eng._stream_cbs, "finished stream callbacks leaked"
+    it = eng.stream(rng.integers(0, cfg.vocab_size, size=6), 4)
+    eng.run()                            # serves the streamed request
+    assert list(it) == eng.results[max(eng.results)]
+    assert not eng._stream_cbs
+
+
+def test_run_stream_interval_preserves_tokens():
+    """Opt-in periodic flushing must not change results (the flush only
+    moves when tokens reach the host, never what they are)."""
+    cfg = reduce_config(get_config("granite-3-2b"))
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(8)
+    reqs = [(rng.integers(0, cfg.vocab_size, size=int(rng.integers(3, 14))),
+             int(rng.integers(3, 6))) for _ in range(3)]
+    a = Engine(cfg, params, n_slots=2, max_len=64).run(list(reqs))
+    b = Engine(cfg, params, n_slots=2, max_len=64).run(
+        list(reqs), stream_interval=1)
+    assert a == b
+
+
+# -- windowed prompts longer than the ring: pre-wrap publish ---------------
+
+def test_windowed_prompt_publishes_prewrap_prefix():
+    """The ROADMAP gap, closed: a sliding-window prompt LONGER than its
+    ring used to publish nothing (by prefill's end the ring has wrapped
+    over the prefix pages).  Now the engine publishes at the last
+    pre-wrap page boundary, so an identical later prompt hits, skips
+    whole chunks, and still produces identical tokens."""
+    cfg = reduce_config(get_config("granite-3-2b")).replace(
+        sliding_window=16)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, cfg.vocab_size, size=40)   # ring = 16+8 -> 24
+    reqs = [(prompt, 5), (prompt, 5)]
+    warm = Engine(cfg, params, n_slots=1, max_len=96, chunk=8)
+    cold = Engine(cfg, params, n_slots=1, max_len=96, chunk=8,
+                  prefix_cache=False)
+    res_w = warm.run(list(reqs))
+    res_c = cold.run(list(reqs))
+    assert list(res_w.values()) == list(res_c.values()), \
+        "pre-wrap publish changed tokens"
+    pc = warm._prefix_counters()
+    assert pc["prefix_hits"] > 0, "windowed prompt still publishes nothing"
+    assert pc["chunks_skipped"] > 0
+    # the hit covers exactly the pre-wrap boundary (ring rows), so the
+    # reused prefix never includes wrapped (overwritten) pages
+    assert pc["tokens_skipped"] == warm.pool.ring
 
 
 # -- sampling ---------------------------------------------------------------
