@@ -186,17 +186,24 @@ def serving_section(path: str = "BENCH_serve.json") -> str:
     quantile = tr.get("quantile", 0.95)
     d256_note = ""
     if tr.get("compute_scale") or any("@d256" in m for m in data["modes"]):
-        d256_note = """\
+        lc = data["modes"].get("dense@d256", {}).get(
+            "layout_cost_tokens_per_s")
+        lc_txt = (f" — measured layout_cost = {lc:.3f}" if lc else "")
+        d256_note = f"""\
 at toy dims (d=128, L=2, sub-ms dispatches) Python dispatch overhead
 dominates and the two paths are near parity; the `dense@d256` rows
 (d_model=256, d_ff=1024, L=4) are the smallest compute-dominated scale.
-The `-slotted` row is the PR 2 contiguous layout: the paged pool's
-block-table indirection costs ~20% there on CPU (each layer's ring view
-is materialised through a page gather) — the price of prefix caching
-(§Prefix caching wins it back on shared-prompt traffic) and of
-mesh-sharding the pool next.  Prefix caching is off in THIS table so
-tok/s keeps meaning dispatched work (the harness re-runs one trace
-best-of-3, which the cache would dedup)."""
+The `-slotted` row is the PR 2 contiguous layout, and `layout_cost_*`
+on the `dense@d256` row is the paged/slotted throughput ratio: ≥ 1.0
+means the block-table indirection is free.  Since PR 6 the paged pool
+stores per-layer tuple leaves and unrolls the layer loop, so XLA's CPU
+backend keeps every page scatter in-place instead of copying the pool
+through the layer scan once per layer per step — the ~20% indirection
+tax the old layout paid here flipped into a paged WIN{lc_txt}
+(the slotted baseline still carries its own scan-copy tax).  Prefix
+caching is off in THIS table so tok/s keeps meaning dispatched work
+(the harness re-runs one trace best-of-3, which the cache would
+dedup)."""
     else:
         d256_note = """\
 at these reduced dims Python dispatch overhead dominates; run without
@@ -297,6 +304,7 @@ def sharded_section(path: str = "BENCH_sharded.json") -> str:
             f"| {label.replace('_', ' ')} | "
             f"{r['paged_tokens_per_s']:.0f} | "
             f"{r['sharded_tokens_per_s']:.0f} | "
+            f"{r.get('layout_cost', '-')} | "
             f"{r['kv_pages_single_device']} → {r['kv_pages_per_shard']} | "
             f"{min(hw)}-{max(hw)} everywhere | "
             f"{'identical' if r['tokens_match'] else 'DIVERGED'} |")
@@ -312,7 +320,13 @@ locally-resident pages through the block-table indirection, computes
 partial (m, l, acc) flash statistics, and the shards combine with a
 single packed all-gather per attention layer
 (`distributed.collectives.flash_merge` — replacing the pmax + 2×psum
-schedule).  The host `BlockAllocator` stays replicated but
+schedule).  Since PR 6 the partial stats come from the fused paged
+flash kernel on TPU (`kernels.paged_attention`, `partial=True`;
+§Paged-kernel — no ring materialisation, null/foreign pages are
+grid-level skips) with the local ring-gather jnp path as the off-TPU
+fallback, and the paged layer loop is unrolled over per-layer tuple
+pool leaves, keeping every page scatter in-place (the lowered decode
+step shows exactly one all-gather per layer).  The host `BlockAllocator` stays replicated but
 ownership-aware: fresh pages round-robin shards most-free-first,
 copy-on-write destinations stay on their source's shard, so the packed
 page-edit vector splits into one shard-local row each and
@@ -329,9 +343,17 @@ mesh (`XLA_FLAGS=--xla_force_host_platform_device_count={tr['n_shards']}`
 — the "devices" contend for one CPU, so tok/s prices the layout, it
 does not claim a speedup; the win is per-device KV capacity):
 
-| prefix cache | paged tok/s | paged-sharded tok/s | pages/device | hiwater per shard | tokens |
-|---|---|---|---|---|---|
+| prefix cache | paged tok/s | paged-sharded tok/s | layout cost (paged/sharded) | pages/device | hiwater per shard | tokens |
+|---|---|---|---|---|---|---|
 {chr(10).join(rows)}
+
+Reading `layout cost` (single-device paged / sharded tok/s): PR 6
+moved BOTH sides — the single-device numerator gained ~40% from the
+in-place per-layer pool leaves, while the sharded wall clock held at
+PR 5 parity (its pools are 1/P the size, so the scan-copy tax it shed
+was smaller, and the forced-host shards still contend for one CPU on
+the fully-replicated FFN compute — the ratio's dominant term, and
+ROADMAP item 1's target, not a pool-layout tax).
 
 Acceptance checks (asserted by the benchmark and CI
 `serve-sharded-smoke`): token-identical to the single-device paged
@@ -354,6 +376,61 @@ compressed.
 Reproduce: `XLA_FLAGS=--xla_force_host_platform_device_count=4
 PYTHONPATH=src python -m benchmarks.run --scenario serve-sharded`
 (writes BENCH_sharded.json; CI runs it reduced on every push).
+
+"""
+
+
+def paged_kernel_section(path: str = "BENCH_paged_kernel.json") -> str:
+    """§Paged-kernel: the fused paged flash-decode microbenchmark
+    (benchmarks/run.py --scenario paged-kernel, PR 6)."""
+    if not os.path.exists(path):
+        return ""
+    data = json.load(open(path))
+    sh = data["shape"]
+    rows = []
+    for r in data["rows"]:
+        rows.append(
+            f"| {r['batch']} | {r['blocks_per_slot']} | {r['ring']} | "
+            f"{r['jnp_gather_us']:.0f} | {r['jnp_pool_direct_us']:.0f} | "
+            f"{r['kernel_us']:.0f} | {r['jnp_gather_gbps']:.2f} / "
+            f"{r['jnp_pool_direct_gbps']:.2f} / {r['kernel_gbps']:.2f} |")
+    backend = data["kernel_backend"]
+    return f"""\
+## §Paged-kernel (fused paged flash decode, PR 6)
+
+`repro.kernels.paged_attention` fuses the paged decode attention into
+ONE Pallas kernel per (slot, block) grid cell: the block table rides in
+as a scalar-prefetch operand, so each grid step DMAs exactly its page's
+KV rows, skips ALL compute on null pages (global id 0) and — under the
+sharded pool's [lo, lo + n_local) resident window — on foreign pages,
+and accumulates the online-softmax (m, l, acc) in VMEM scratch across
+the block axis.  GQA and absorbed-MLA variants; `partial=True` emits
+the raw flash stats for `collectives.flash_merge`, which is how the
+paged-sharded engine consumes it (one merge collective per layer).
+Dispatch: default ON for TPU backends, jnp gather fallback elsewhere
+(`REPRO_PAGED_KERNEL=1/0` forces either).  Differential coverage:
+`tests/test_paged_kernel.py` — kernel == dense oracle
+(`kernels/ref.py`) over null/foreign/partially-written pages, sliding
+windows and fully-masked slots; partial stats merged shard-style equal
+the unsharded output; engine tokens identical kernel-vs-jnp across the
+5-family matrix (+ 4-shard subprocess run with the kernel forced).
+
+Microbenchmark (GQA decode window: hkv={sh['n_kv_heads']}, G={sh['groups']},
+D={sh['head_dim']}, page={sh['page']}; backend THIS run:
+**{backend}** — interpret mode serialises the page grid in Python, so
+off-TPU the kernel wall clock is a correctness datapoint, not a speed
+one; the jnp rows + GB/s roofline are the portable signal):
+
+| B | blocks/slot | ring | jnp gather μs | jnp pool-direct μs | kernel μs | GB/s (gather / pool-direct / kernel) |
+|---|---|---|---|---|---|---|
+{chr(10).join(rows)}
+
+Kernel dispatch counters for the run: {data['kernel_traces']} (trace
+counts; the CI `paged-kernel-smoke` job asserts they are nonzero and
+re-runs the engine differential in interpret mode on every push).
+
+Reproduce: `PYTHONPATH=src python -m benchmarks.run --scenario
+paged-kernel` (writes BENCH_paged_kernel.json).
 
 """
 
@@ -495,7 +572,8 @@ Dominant-bottleneck notes (one line per arch, train_4k):
 """
     with open("EXPERIMENTS.md", "w") as f:
         f.write(header + dry + serving_section() + prefix_section()
-                + sharded_section() + moe_section() + PERF_LOG)
+                + sharded_section() + paged_kernel_section()
+                + moe_section() + PERF_LOG)
     print("wrote EXPERIMENTS.md")
 
 

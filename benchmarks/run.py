@@ -87,6 +87,13 @@ def scenario_serve_engine(modes=("dense", "tiled", "kernel"),
             "dense", ["--dims", "256,1024,4", "--chunk", "32",
                       "--baseline", "--layout", "slotted"],
             "dense_d256_slotted")
+        # layout_cost: paged / slotted throughput at the compute-bound
+        # point — ≥ 1.0 means the paged indirection is free (or wins,
+        # via in-place pool updates + active-window attends)
+        for k in ("tokens_per_s", "decode_tokens_per_s"):
+            rows["dense@d256"][f"layout_cost_{k}"] = round(
+                rows["dense@d256"][k]
+                / max(rows["dense@d256-slotted"][k], 1e-9), 3)
     result = {"trace": {"n_requests": n_requests, "prompt_min": prompt_min,
                         "prompt_max": prompt_max, "gen_min": gen_min,
                         "gen_len": gen_len, "n_slots": n_slots,
@@ -256,7 +263,11 @@ def scenario_serve_sharded(n_requests: int = 16, prompt_min: int = 8,
                   if "all_reduce" in ln or "all-reduce" in ln
                   or "collective_permute" in ln
                   or "collective-permute" in ln)
-    assert n_ag == 1 and n_other == 0, (n_ag, n_other)
+    # the paged layer loop is UNROLLED (per-layer tuple pool leaves, so
+    # scatters stay in-place): the lowered step shows one all-gather
+    # per layer rather than one inside a scan body
+    assert n_ag == cfg.n_layers and n_other == 0, \
+        (n_ag, cfg.n_layers, n_other)
     result = {"trace": {"arch": "granite-3-2b (reduced)",
                         "n_requests": n_requests,
                         "prompt_min": prompt_min, "prompt_max": prompt_max,
@@ -388,11 +399,132 @@ def scenario_moe_modes(modes=("dense", "exact", "tiled", "kernel"),
     return result
 
 
+def scenario_paged_kernel(batch_sizes=(2, 4, 8), blocks=(8, 16, 32),
+                          page: int = 8, hkv: int = 4, groups: int = 2,
+                          head_dim: int = 64, reps: int = 50,
+                          out: str = "BENCH_paged_kernel.json") -> dict:
+    """Paged flash-decode microbench (the PR 6 tentpole kernel): one
+    decode step of ``gqa_paged_flash`` against the pure-jnp gather
+    fallback (``pool_view`` + ``attend_batched``) across batch sizes and
+    per-slot page counts, plus a bandwidth roofline per point — the
+    pool bytes a decode step must touch (k+v pages of the active
+    window) over the measured wall, formatted with the same helpers the
+    EXPERIMENTS.md roofline tables use (``roofline_table.fmt_s``).  Off
+    TPU the kernel row runs in Pallas interpret mode and is priced for
+    CORRECTNESS visibility only (``kernel_backend`` says which); the
+    jnp rows and the roofline columns are the portable signal."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    try:
+        from benchmarks.roofline_table import fmt_s
+    except ModuleNotFoundError:        # invoked as benchmarks/run.py
+        from roofline_table import fmt_s
+    from repro.distributed import decode_attention as da
+    from repro.kernels import paged_attention as pk
+    from repro.models.layers.attention import attend_batched
+
+    on_tpu = jax.default_backend() == "tpu"
+    rng = np.random.RandomState(0)
+    rows = []
+    for B in batch_sizes:
+        for nb in blocks:
+            n_pages = 1 + B * nb + B * nb // 2
+            ring = nb * page
+            key = jax.random.PRNGKey(nb * 131 + B)
+            ks = jax.random.split(key, 8)
+            kpool = jax.random.normal(ks[0], (n_pages, page, hkv, head_dim),
+                                      jnp.float32)
+            vpool = jax.random.normal(ks[1], (n_pages, page, hkv, head_dim),
+                                      jnp.float32)
+            perm = rng.permutation(np.arange(1, n_pages))[:B * nb]
+            bt = jnp.asarray(perm.reshape(B, nb), jnp.int32)
+            qpos = jnp.full((B, 1), ring - 1, jnp.int32)
+            tags = jnp.arange(ring, dtype=jnp.int32).reshape(nb, page)
+            ppool = jnp.full((n_pages, page), -1, jnp.int32)
+            ppool = ppool.at[bt[0]].set(tags)
+            for b in range(1, B):
+                ppool = ppool.at[bt[b]].set(tags)
+            q = jax.random.normal(ks[2], (B, 1, hkv * groups, head_dim),
+                                  jnp.float32)
+
+            def jnp_gather(q, kpool, vpool, ppool):
+                gk = da.pool_view(kpool, bt, 0).reshape(B, ring, hkv,
+                                                        head_dim)
+                gv = da.pool_view(vpool, bt, 0).reshape(B, ring, hkv,
+                                                        head_dim)
+                gp = da.pool_view(ppool, bt, -1).reshape(B, ring)
+                return attend_batched(q, gk, gv, qpos, gp, causal=True,
+                                      window=0)
+
+            def jnp_pool_direct(q, kpool, vpool, ppool):
+                kv_pos = da.pool_positions(ppool, bt)
+                return da.gqa_pool_flash(q, kpool, vpool, kv_pos, qpos,
+                                         window=0)
+
+            def kernel(q, kpool, vpool, ppool):
+                return pk.gqa_paged_flash(q, kpool, vpool, ppool, bt,
+                                          qpos, window=0,
+                                          interpret=not on_tpu)
+
+            def time_fn(fn, n):
+                f = jax.jit(fn)
+                o = f(q, kpool, vpool, ppool)
+                jax.block_until_ready(o)
+                t0 = time.time()
+                for _ in range(n):
+                    o = f(q, kpool, vpool, ppool)
+                jax.block_until_ready(o)
+                return (time.time() - t0) / n, o
+
+            t_g, o_g = time_fn(jnp_gather, reps)
+            t_d, o_d = time_fn(jnp_pool_direct, reps)
+            t_k, o_k = time_fn(kernel, reps if on_tpu else 2)
+            assert np.allclose(o_g, o_k, atol=2e-5), (B, nb)
+            assert np.allclose(o_g, o_d, atol=2e-5), (B, nb)
+            # roofline: a decode step must read the active window's k+v
+            # pages once — anything above that is gather/copy overhead
+            window_bytes = 2 * B * ring * hkv * head_dim * 4
+            row = {"batch": B, "blocks_per_slot": nb, "ring": ring,
+                   "window_bytes": window_bytes,
+                   "jnp_gather_us": round(t_g * 1e6, 1),
+                   "jnp_pool_direct_us": round(t_d * 1e6, 1),
+                   "kernel_us": round(t_k * 1e6, 1),
+                   "jnp_gather_gbps": round(window_bytes / t_g / 1e9, 2),
+                   "jnp_pool_direct_gbps": round(window_bytes / t_d / 1e9,
+                                                 2),
+                   "kernel_gbps": round(window_bytes / t_k / 1e9, 2),
+                   "kernel_vs_gather": round(t_g / t_k, 3)}
+            rows.append(row)
+            print(f"paged_kernel_B{B}_nb{nb},"
+                  f"{t_k*1e6:.0f},{t_g/t_k:.4f}", flush=True)
+    md = ["| B | blocks | window | jnp gather | pool direct | kernel | "
+          "kernel GB/s |", "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        md.append(f"| {r['batch']} | {r['blocks_per_slot']} | "
+                  f"{r['ring']} | {fmt_s(r['jnp_gather_us']/1e6)} | "
+                  f"{fmt_s(r['jnp_pool_direct_us']/1e6)} | "
+                  f"{fmt_s(r['kernel_us']/1e6)} | {r['kernel_gbps']} |")
+    result = {"shape": {"page": page, "n_kv_heads": hkv, "groups": groups,
+                        "head_dim": head_dim, "dtype": "float32"},
+              "kernel_backend": ("pallas-tpu" if on_tpu
+                                 else "pallas-interpret"),
+              "kernel_traces": dict(pk.kernel_traces()),
+              "rows": rows,
+              "markdown": "\n".join(md)}
+    with open(out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"wrote {out}")
+    return result
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", default="figures",
                     choices=("figures", "serve-engine", "moe-modes",
-                             "serve-prefix", "serve-sharded"))
+                             "serve-prefix", "serve-sharded",
+                             "paged-kernel"))
     ap.add_argument("--archs", default=None,
                     help="serve-prefix: comma-separated arch list "
                          "(default granite-3-2b,rwkv6-3b)")
@@ -415,6 +547,9 @@ def main() -> None:
                            prompt_max=args.prompt_max,
                            gen_len=args.gen_len,
                            out=args.out or "BENCH_moe_modes.json")
+        return
+    if args.scenario == "paged-kernel":
+        scenario_paged_kernel(out=args.out or "BENCH_paged_kernel.json")
         return
     if args.scenario == "serve-sharded":
         scenario_serve_sharded(n_requests=args.requests,

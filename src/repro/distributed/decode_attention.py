@@ -92,15 +92,25 @@ def pool_view(pool, block_table, fill):
     (B, n_blocks) global ids -> (B, n_blocks, page, ...).  Under a
     page-shard context only locally-resident pages are read; foreign
     pages return ``fill`` (use -1 for position-tag pools so the masked
-    rows drop out of the local softmax, 0 for k/v payloads)."""
+    rows drop out of the local softmax, 0 for k/v payloads).
+
+    The gather runs as a flat row-take over (n_pages, page*feat) — one
+    contiguous row copy per page, which XLA:CPU lowers markedly faster
+    than the equivalent n-d gather (the jnp fallback's per-step cost is
+    dominated by exactly this materialisation)."""
+    def take_rows(idx):
+        flat = pool.reshape((pool.shape[0], -1))
+        out = jnp.take(flat, idx.reshape(-1), axis=0)
+        return out.reshape(idx.shape + pool.shape[1:])
+
     info = shard_info()
     if info is None:
-        return pool[block_table]
+        return take_rows(block_table)
     n_local = pool.shape[0]
     lo = _local_base(n_local, info[0])
     loc = block_table - lo
     ok = (loc >= 0) & (loc < n_local)
-    out = pool[jnp.where(ok, loc, 0)]
+    out = take_rows(jnp.where(ok, loc, 0))
     mask = ok.reshape(ok.shape + (1,) * (out.ndim - ok.ndim))
     return jnp.where(mask, out, jnp.asarray(fill, out.dtype))
 
@@ -109,21 +119,134 @@ def pool_view(pool, block_table, fill):
 # distributed flash decode: partial (m, l, acc) + one-collective merge
 # ==========================================================================
 
-def batched_bias(q_pos, kv_pos, causal: bool, window: int):
-    """(B, Sq, Skv) additive causal/window bias with PER-BATCH-ROW
-    positions; kv entries tagged -1 mask out.  The single source of the
-    slot-pool mask semantics: ``attention.attend_batched`` (single-
-    device paged/slotted) and the sharded partial-flash attends below
-    all build their scores mask here, so the two layouts can never
+def position_ok(q_pos, kv_pos, causal: bool, window: int):
+    """THE slot-pool mask predicate: a kv row is visible iff its tag is
+    a real position (>= 0), not in the causal future, and inside the
+    sliding window.  ``q_pos`` / ``kv_pos`` are any broadcast-compatible
+    int arrays — every mask in the system (``attention._mask_bias``,
+    ``batched_bias`` below, the paged-kernel oracles, the MLA dense
+    path) evaluates exactly this predicate, so the layouts can never
     drift apart."""
-    rel = q_pos[:, :, None] - kv_pos[:, None, :]
-    ok = jnp.ones(rel.shape, bool)
+    rel = q_pos - kv_pos
+    ok = kv_pos >= 0
     if causal:
         ok &= rel >= 0
     if window > 0:
         ok &= rel < window
-    ok &= kv_pos[:, None, :] >= 0
+    return ok
+
+
+def batched_bias(q_pos, kv_pos, causal: bool, window: int):
+    """(B, Sq, Skv) additive causal/window bias with PER-BATCH-ROW
+    positions; kv entries tagged -1 mask out.
+    ``attention.attend_batched`` (single-device paged/slotted) and the
+    sharded partial-flash attends below all build their scores mask
+    here."""
+    ok = position_ok(q_pos[:, :, None], kv_pos[:, None, :], causal, window)
     return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def pool_positions(ppool, block_table):
+    """Per-slot OWNERSHIP-masked position rows over the flat pool —
+    (n_pages, page) tag pool + (B, n_blocks) table -> (B, n_pages*page)
+    int32 where entries of pages NOT in slot b's table are -1.
+
+    This is the pool-direct dual of the materialised ring view: instead
+    of gathering each slot's pages out of the pool (the jnp fallback's
+    dominant cost — a (B, ring, ...) copy per pool leaf per layer),
+    attention runs against the pool IN PLACE and visibility is carried
+    entirely by these rows.  Building them costs one tiny tag gather
+    plus a (B, n_blocks, page) scatter — no k/v bytes move.  Null pages
+    (id 0) scatter -1; under a page-shard context foreign pages are
+    dropped from the scatter, so they stay -1 and the local softmax
+    skips them (exactly the kernel's grid-level skip, made dense)."""
+    n_pages, page = ppool.shape
+    B = block_table.shape[0]
+    tags = pool_view(ppool, block_table, -1)         # (B, nb, page)
+    tags = jnp.where(block_table[..., None] > 0, tags, -1)
+    info = shard_info()
+    if info is None:
+        tgt = jnp.where(block_table > 0, block_table, n_pages)
+    else:
+        lo = _local_base(n_pages, info[0])
+        loc = block_table - lo
+        ok = (block_table > 0) & (loc >= 0) & (loc < n_pages)
+        tgt = jnp.where(ok, loc, n_pages)            # OOB -> dropped
+    rows = jnp.full((B, n_pages, page), -1, jnp.int32)
+    rows = rows.at[jnp.arange(B)[:, None], tgt].set(tags, mode="drop")
+    return rows.reshape(B, n_pages * page)
+
+
+def gqa_pool_flash(q, kpool, vpool, kv_pos, qpos, *, window: int = 0,
+                   partial: bool = False):
+    """GQA attention DIRECTLY against the page pool (no ring view): q
+    (B, C, H, D) vs the whole flattened pool (n_pages*page, hkv, ·),
+    with per-slot visibility from ``kv_pos`` (``pool_positions`` rows).
+    The kv-head loop runs as plain (B*C*G, D) x (D, N) GEMMs — on CPU
+    these hit BLAS and beat the gather-then-attend fallback ~2x while
+    reading each pool byte exactly once.  ``partial`` returns flash
+    (m, l, acc) shaped for ``collectives.flash_merge`` ((B,hkv,G,C) m/l,
+    (B,hkv,G,C,Dv) acc); otherwise the full softmax (B, C, H, Dv)."""
+    B, C, H, D = q.shape
+    hkv, Dv = vpool.shape[-2], vpool.shape[-1]
+    G = H // hkv
+    N = kpool.shape[0] * kpool.shape[1]
+    kf = kpool.reshape(N, hkv, D)
+    vf = vpool.reshape(N, hkv, Dv)
+    bias = jnp.where(position_ok(qpos[:, :, None], kv_pos[:, None, :],
+                                 True, window),
+                     0.0, NEG_INF).astype(jnp.float32)   # (B, C, N)
+    ms, ls, accs, outs = [], [], [], []
+    for kh in range(hkv):
+        qk = q.reshape(B, C, hkv, G, D)[:, :, kh].astype(jnp.float32)
+        s = (qk.reshape(B * C * G, D) @ kf[:, kh].T.astype(jnp.float32))
+        s = s.reshape(B, C, G, N) * (D ** -0.5) + bias[:, :, None]
+        m = s.max(-1)
+        p = jnp.exp(s - m[..., None])
+        l = p.sum(-1)
+        acc = (p.reshape(B * C * G, N).astype(vf.dtype) @ vf[:, kh])
+        acc = acc.reshape(B, C, G, Dv).astype(jnp.float32)
+        if partial:
+            # (B, C, G, ·) -> (B, G, C, ·); heads stack to (B, hkv, ...)
+            ms.append(m.transpose(0, 2, 1))
+            ls.append(l.transpose(0, 2, 1))
+            accs.append(acc.transpose(0, 2, 1, 3))
+        else:
+            outs.append(acc / l[..., None])
+    if partial:
+        return (jnp.stack(ms, 1), jnp.stack(ls, 1), jnp.stack(accs, 1))
+    o = jnp.stack(outs, 2)                           # (B, C, hkv, G, Dv)
+    return o.reshape(B, C, H, Dv).astype(q.dtype)
+
+
+def mla_pool_flash(q_lat, q_pe, ck_pool, cpe_pool, kv_pos, qpos, *,
+                   scale: float, partial: bool = False):
+    """Absorbed-MLA attention directly against the latent page pools:
+    q_lat (B, C, h, kr) + q_pe (B, C, h, rd) vs the flat pools
+    (n_pages*page, kr / rd), visibility from ``pool_positions`` rows.
+    One GEMM per projection — no ring view.  ``partial`` returns
+    ((B, h, C) m/l, (B, h, C, kr) acc) for ``flash_merge``; otherwise
+    o_lat (B, C, h, kr) (caller absorbs W_uv)."""
+    B, C, h, kr = q_lat.shape
+    rd = q_pe.shape[-1]
+    N = ck_pool.shape[0] * ck_pool.shape[1]
+    ckf = ck_pool.reshape(N, kr)
+    cpef = cpe_pool.reshape(N, rd)
+    s = (q_lat.reshape(B * C * h, kr).astype(jnp.float32)
+         @ ckf.T.astype(jnp.float32)
+         + q_pe.reshape(B * C * h, rd).astype(jnp.float32)
+         @ cpef.T.astype(jnp.float32)).reshape(B, C, h, N) * scale
+    ok = position_ok(qpos[:, :, None], kv_pos[:, None, :], True, 0)
+    s = jnp.where(ok[:, :, None], s, NEG_INF)
+    m = s.max(-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(-1)
+    acc = (p.reshape(B * C * h, N).astype(ckf.dtype) @ ckf)
+    acc = acc.reshape(B, C, h, kr).astype(jnp.float32)
+    if partial:
+        return (m.transpose(0, 2, 1), l.transpose(0, 2, 1),
+                acc.transpose(0, 2, 1, 3))
+    return (acc / l[..., None]).astype(q_lat.dtype)
 
 
 def gqa_paged_attend(q, kpool, vpool, ppool, block_table, qpos, *,
@@ -137,10 +260,28 @@ def gqa_paged_attend(q, kpool, vpool, ppool, block_table, qpos, *,
     info = shard_info()
     assert info is not None, "gqa_paged_attend needs a page-shard context"
     B, C, H, D = q.shape
+    Dv = vpool.shape[-1]
+    from repro.kernels import paged_attention as pk
+    if pk.enabled():
+        # fused kernel variant: partial (m, l, acc) straight off the
+        # block table — null/foreign pages are grid-level skips, the
+        # ring view is never materialised
+        n_local = kpool.shape[0]
+        m, l, acc = pk.gqa_paged_flash(
+            q, kpool, vpool, ppool, block_table, qpos,
+            window=window, lo=_local_base(n_local, info[0]),
+            n_local=n_local, partial=True)
+        o = flash_merge(m, l, acc, info[0])
+        return o.transpose(0, 3, 1, 2, 4).reshape(B, C, H, Dv).astype(
+            q.dtype)
+    # jnp fallback: gather the LOCAL ring view and take dense partial
+    # stats — cost scales with the ring (n_blocks*page per slot), not
+    # with the pool (which spare pages double); the pool-direct
+    # ``gqa_pool_flash`` only wins when the pool is table-sized (see
+    # --scenario paged-kernel)
     page = kpool.shape[1]
     ring = block_table.shape[1] * page
     hkv = kpool.shape[-2]
-    Dv = vpool.shape[-1]
     gk = pool_view(kpool, block_table, 0).reshape(B, ring, hkv, D)
     gv = pool_view(vpool, block_table, 0).reshape(B, ring, hkv, Dv)
     gp = pool_view(ppool, block_table, -1).reshape(B, ring)
@@ -167,6 +308,17 @@ def mla_paged_attend(q_lat, q_pe, ck_pool, cpe_pool, cp_pool, block_table,
     output o_lat (B, C, h, kr) — the caller absorbs W_uv."""
     info = shard_info()
     assert info is not None, "mla_paged_attend needs a page-shard context"
+    from repro.kernels import paged_attention as pk
+    if pk.enabled():
+        n_local = ck_pool.shape[0]
+        m, l, acc = pk.mla_paged_flash(
+            q_lat, q_pe, ck_pool, cpe_pool, cp_pool, block_table, qpos,
+            scale=scale, lo=_local_base(n_local, info[0]),
+            n_local=n_local, partial=True)
+        o = flash_merge(m, l, acc, info[0])
+        return o.transpose(0, 2, 1, 3).astype(q_lat.dtype)
+    # jnp fallback: local ring gather + dense partial stats (see the
+    # gqa fallback note — ring-proportional, pool-size-independent)
     B, C = qpos.shape
     page = ck_pool.shape[1]
     ring = block_table.shape[1] * page
@@ -179,10 +331,7 @@ def mla_paged_attend(q_lat, q_pe, ck_pool, cpe_pool, cp_pool, block_table,
                     preferred_element_type=jnp.float32)
          + jnp.einsum("bchr,btr->bhct", q_pe, cpe,
                       preferred_element_type=jnp.float32))
-    s = s * scale
-    ok = (cp[:, None, None, :] <= qpos[:, None, :, None]) & \
-        (cp[:, None, None, :] >= 0)
-    s = jnp.where(ok, s, NEG_INF)
+    s = s * scale + batched_bias(qpos, cp, True, 0)[:, None]
     m = s.max(-1)
     p = jnp.exp(s - m[..., None])
     l = p.sum(-1)

@@ -1,0 +1,342 @@
+"""Fused Pallas paged flash-decode: attend straight off the block table.
+
+The paged serving layouts (``serving.kv_pool.PagedPool``) used to pay
+for every attend twice: gather the whole ring view through the block
+table (``pool[block_table].reshape(B, ring, ...)``), THEN run dense
+masked attention over it — every null page (reserved id 0) and, under
+the mesh-sharded layout, every foreign page was materialised, masked
+and softmaxed.  This kernel inverts that: the (B, n_blocks) block table
+rides in as a SCALAR-PREFETCH operand, the grid walks (slot, block),
+and each step's BlockSpec index_map pulls exactly one KV page out of
+the pool — pages that are null (never written) or foreign (resident on
+another shard) are grid-level skips (``pl.when``), so their DMA target
+is the always-resident null page and their FLOPs never issue.  Online
+softmax statistics (m, l, acc) accumulate in VMEM scratch across the
+block dimension, exactly the ``gather_matmul`` DMA-on-demand idiom
+applied to KV pages instead of weight tiles.
+
+Two layouts share the machinery:
+
+  * GQA rings: pools (n_pages, page, hkv, hd), grouped queries
+    (B, C, H, hd), causal + optional sliding window — ring wrap needs
+    no special casing because masking is entirely position-tag driven;
+  * absorbed-MLA latent: pools (n_pages, page, kr) / (n_pages, page,
+    rd), scores in the rank-kr latent space (W_uk already absorbed into
+    the query), accumulator over the latent rows.
+
+Each kernel has two output variants: the normalised output (single-
+device paged layout) and the raw partial (m, l, acc) flash statistics
+(``partial=True``) — the mesh-sharded layout feeds those straight into
+``collectives.flash_merge``, so the sharded attends keep their
+one-collective-per-layer contract without ever building the ring view.
+
+Like every kernel here it runs ``interpret=True`` off-TPU; mode
+selection for the serving paths lives in ``enabled()`` (env
+``REPRO_PAGED_KERNEL``, defaulting to the kernel on TPU and the jnp
+gather fallback elsewhere), mirroring ``ops._interpret``.  The pure-jnp
+oracles are ``ref.gqa_paged_ref`` / ``ref.mla_paged_ref``.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import tpu_compiler_params
+from repro.kernels.ops import _interpret
+
+NEG_INF = -1e30
+
+
+def enabled() -> bool:
+    """Kernel-vs-jnp toggle for the PAGED ATTEND serving paths: env
+    ``REPRO_PAGED_KERNEL`` forces it ("1"/"0"); default is the fused
+    kernel on TPU and the jnp gather fallback elsewhere (interpret-mode
+    Pallas serialises the page grid, so CPU serving keeps the fused-XLA
+    path and the differential tests force the kernel explicitly)."""
+    env = os.environ.get("REPRO_PAGED_KERNEL")
+    if env is not None:
+        return env not in ("0", "false")
+    return jax.default_backend() == "tpu"
+
+
+# trace-time dispatch counters: how many pallas_call sites each serving
+# step compiled in (telemetry / CI proof that the kernel path engaged —
+# a cached executable re-dispatches without retracing, so these count
+# kernel *traces*, not per-token launches)
+_TRACES = {"gqa": 0, "mla": 0}
+
+
+def kernel_traces() -> dict:
+    return dict(_TRACES)
+
+
+def reset_kernel_traces() -> None:
+    for k in _TRACES:
+        _TRACES[k] = 0
+
+
+def _live_tables(block_table, lo, n_local):
+    """(pool page index to DMA, live flag) per (slot, block).  Null
+    pages (global id 0) are never live; under a shard's local window
+    [lo, lo + n_local) foreign pages aren't either — both DMA the
+    always-resident page 0 and skip all compute."""
+    if lo is None:
+        loc, ok = block_table, block_table > 0
+    else:
+        loc = block_table - lo
+        ok = (block_table > 0) & (loc >= 0) & (loc < n_local)
+    return (jnp.where(ok, loc, 0).astype(jnp.int32),
+            ok.astype(jnp.int32))
+
+
+# ==========================================================================
+# GQA over paged rings
+# ==========================================================================
+
+def _gqa_kernel(tbl_ref, live_ref, qp_ref, q_ref, k_ref, v_ref, p_ref,
+                *refs, n_blocks: int, scale: float, window: int,
+                partial: bool):
+    if partial:
+        m_ref, l_ref, a_ref, m_s, l_s, a_s = refs
+    else:
+        (o_ref, m_s, l_s, a_s) = refs
+    b, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s[...], NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s[...])
+        a_s[...] = jnp.zeros_like(a_s[...])
+
+    @pl.when(live_ref[b, j] > 0)
+    def _block():
+        q = q_ref[0].astype(jnp.float32)         # (C, hkv, G, D)
+        k = k_ref[0].astype(jnp.float32)         # (page, hkv, D)
+        v = v_ref[0].astype(jnp.float32)         # (page, hkv, Dv)
+        tags = p_ref[0]                          # (page,) int32
+        qp = qp_ref[0]                           # (C,) int32
+        s = jnp.einsum("ckgd,tkd->kgct", q, k,
+                       preferred_element_type=jnp.float32) * scale
+        rel = qp[:, None] - tags[None, :]        # (C, page)
+        ok = (tags[None, :] >= 0) & (rel >= 0)
+        if window > 0:
+            ok &= rel < window
+        s = jnp.where(ok[None, None], s, NEG_INF)
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_s[...] = l_s[...] * corr + p.sum(-1)
+        a_s[...] = a_s[...] * corr[..., None] + jnp.einsum(
+            "kgct,tkd->kgcd", p, v, preferred_element_type=jnp.float32)
+        m_s[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _emit():
+        if partial:
+            m_ref[0] = m_s[...]
+            l_ref[0] = l_s[...]
+            a_ref[0] = a_s[...]
+        else:
+            o_ref[0] = (a_s[...] / jnp.maximum(l_s[...], 1e-30)[..., None]
+                        ).astype(o_ref.dtype)
+
+
+def gqa_paged_flash(q, kpool, vpool, ppool, block_table, qpos, *,
+                    window: int = 0, lo=None, n_local: Optional[int] = None,
+                    partial: bool = False, interpret: Optional[bool] = None):
+    """Fused GQA paged flash decode.  q: (B, C, H, D); pools:
+    (n_pages, page, hkv, ·) with position tags ``ppool`` (n_pages,
+    page); block_table: (B, n_blocks) page ids (global under sharding —
+    pass ``lo``/``n_local`` for the shard's resident window); qpos:
+    (B, C) query positions.  Returns (B, C, H, Dv) in q's dtype, or the
+    partial flash stats ((B, hkv, G, C) m / l, (B, hkv, G, C, Dv) acc,
+    all fp32) with ``partial=True`` — the ``flash_merge`` operands."""
+    _TRACES["gqa"] += 1
+    B, C, H, D = q.shape
+    page, hkv = kpool.shape[1], kpool.shape[2]
+    Dv = vpool.shape[-1]
+    G = H // hkv
+    n_blocks = block_table.shape[1]
+    tbl, live = _live_tables(block_table, lo, n_local)
+    qf = q.reshape(B, C, hkv, G, D)
+    kernel = functools.partial(_gqa_kernel, n_blocks=n_blocks,
+                               scale=D ** -0.5, window=window,
+                               partial=partial)
+    in_specs = [
+        pl.BlockSpec((1, C), lambda b, j, tbl, live: (b, 0)),
+        pl.BlockSpec((1, C, hkv, G, D),
+                     lambda b, j, tbl, live: (b, 0, 0, 0, 0)),
+        pl.BlockSpec((1, page, hkv, D),
+                     lambda b, j, tbl, live: (tbl[b, j], 0, 0, 0)),
+        pl.BlockSpec((1, page, hkv, Dv),
+                     lambda b, j, tbl, live: (tbl[b, j], 0, 0, 0)),
+        pl.BlockSpec((1, page), lambda b, j, tbl, live: (tbl[b, j], 0)),
+    ]
+    if partial:
+        out_shape = (
+            jax.ShapeDtypeStruct((B, hkv, G, C), jnp.float32),
+            jax.ShapeDtypeStruct((B, hkv, G, C), jnp.float32),
+            jax.ShapeDtypeStruct((B, hkv, G, C, Dv), jnp.float32),
+        )
+        out_specs = (
+            pl.BlockSpec((1, hkv, G, C),
+                         lambda b, j, tbl, live: (b, 0, 0, 0)),
+            pl.BlockSpec((1, hkv, G, C),
+                         lambda b, j, tbl, live: (b, 0, 0, 0)),
+            pl.BlockSpec((1, hkv, G, C, Dv),
+                         lambda b, j, tbl, live: (b, 0, 0, 0, 0)),
+        )
+    else:
+        out_shape = jax.ShapeDtypeStruct((B, hkv, G, C, Dv), q.dtype)
+        out_specs = pl.BlockSpec(
+            (1, hkv, G, C, Dv), lambda b, j, tbl, live: (b, 0, 0, 0, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, n_blocks),
+            in_specs=in_specs,
+            out_specs=out_specs,
+            scratch_shapes=[
+                pltpu.VMEM((hkv, G, C), jnp.float32),
+                pltpu.VMEM((hkv, G, C), jnp.float32),
+                pltpu.VMEM((hkv, G, C, Dv), jnp.float32),
+            ],
+        ),
+        out_shape=out_shape,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=_interpret() if interpret is None else interpret,
+    )(tbl, live, qpos.astype(jnp.int32), qf, kpool, vpool, ppool)
+    if partial:
+        return out
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, C, H, Dv)
+
+
+# ==========================================================================
+# absorbed-MLA over paged latent pools
+# ==========================================================================
+
+def _mla_kernel(tbl_ref, live_ref, qp_ref, ql_ref, qe_ref, ck_ref, pe_ref,
+                p_ref, *refs, n_blocks: int, scale: float, partial: bool):
+    if partial:
+        m_ref, l_ref, a_ref, m_s, l_s, a_s = refs
+    else:
+        (o_ref, m_s, l_s, a_s) = refs
+    b, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s[...], NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s[...])
+        a_s[...] = jnp.zeros_like(a_s[...])
+
+    @pl.when(live_ref[b, j] > 0)
+    def _block():
+        ql = ql_ref[0].astype(jnp.float32)       # (C, h, kr)
+        qe = qe_ref[0].astype(jnp.float32)       # (C, h, rd)
+        ck = ck_ref[0].astype(jnp.float32)       # (page, kr)
+        pe = pe_ref[0].astype(jnp.float32)       # (page, rd)
+        tags = p_ref[0]                          # (page,) int32
+        qp = qp_ref[0]                           # (C,) int32
+        s = (jnp.einsum("chk,tk->hct", ql, ck,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("chr,tr->hct", qe, pe,
+                          preferred_element_type=jnp.float32)) * scale
+        ok = (tags[None, :] >= 0) & (tags[None, :] <= qp[:, None])
+        s = jnp.where(ok[None], s, NEG_INF)      # (h, C, page)
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_s[...] = l_s[...] * corr + p.sum(-1)
+        a_s[...] = a_s[...] * corr[..., None] + jnp.einsum(
+            "hct,tk->hck", p, ck, preferred_element_type=jnp.float32)
+        m_s[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _emit():
+        if partial:
+            m_ref[0] = m_s[...]
+            l_ref[0] = l_s[...]
+            a_ref[0] = a_s[...]
+        else:
+            o_ref[0] = (a_s[...] / jnp.maximum(l_s[...], 1e-30)[..., None]
+                        ).astype(o_ref.dtype)
+
+
+def mla_paged_flash(q_lat, q_pe, ck_pool, cpe_pool, cp_pool, block_table,
+                    qpos, *, scale: float, lo=None,
+                    n_local: Optional[int] = None, partial: bool = False,
+                    interpret: Optional[bool] = None):
+    """Fused absorbed-MLA paged flash decode (latent space).  q_lat:
+    (B, C, h, kr) with W_uk absorbed, q_pe: (B, C, h, rd); pools:
+    (n_pages, page, ·) latent / rope rows with position tags
+    ``cp_pool``.  Returns o_lat (B, C, h, kr) in q_lat's dtype (the
+    caller absorbs W_uv), or with ``partial=True`` the flash stats
+    ((B, h, C) m / l, (B, h, C, kr) acc, fp32) for ``flash_merge``."""
+    _TRACES["mla"] += 1
+    B, C, h, kr = q_lat.shape
+    rd = q_pe.shape[-1]
+    page = ck_pool.shape[1]
+    n_blocks = block_table.shape[1]
+    tbl, live = _live_tables(block_table, lo, n_local)
+    kernel = functools.partial(_mla_kernel, n_blocks=n_blocks, scale=scale,
+                               partial=partial)
+    in_specs = [
+        pl.BlockSpec((1, C), lambda b, j, tbl, live: (b, 0)),
+        pl.BlockSpec((1, C, h, kr),
+                     lambda b, j, tbl, live: (b, 0, 0, 0)),
+        pl.BlockSpec((1, C, h, rd),
+                     lambda b, j, tbl, live: (b, 0, 0, 0)),
+        pl.BlockSpec((1, page, kr),
+                     lambda b, j, tbl, live: (tbl[b, j], 0, 0)),
+        pl.BlockSpec((1, page, rd),
+                     lambda b, j, tbl, live: (tbl[b, j], 0, 0)),
+        pl.BlockSpec((1, page), lambda b, j, tbl, live: (tbl[b, j], 0)),
+    ]
+    if partial:
+        out_shape = (
+            jax.ShapeDtypeStruct((B, h, C), jnp.float32),
+            jax.ShapeDtypeStruct((B, h, C), jnp.float32),
+            jax.ShapeDtypeStruct((B, h, C, kr), jnp.float32),
+        )
+        out_specs = (
+            pl.BlockSpec((1, h, C), lambda b, j, tbl, live: (b, 0, 0)),
+            pl.BlockSpec((1, h, C), lambda b, j, tbl, live: (b, 0, 0)),
+            pl.BlockSpec((1, h, C, kr),
+                         lambda b, j, tbl, live: (b, 0, 0, 0)),
+        )
+    else:
+        out_shape = jax.ShapeDtypeStruct((B, h, C, kr), q_lat.dtype)
+        out_specs = pl.BlockSpec(
+            (1, h, C, kr), lambda b, j, tbl, live: (b, 0, 0, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, n_blocks),
+            in_specs=in_specs,
+            out_specs=out_specs,
+            scratch_shapes=[
+                pltpu.VMEM((h, C), jnp.float32),
+                pltpu.VMEM((h, C), jnp.float32),
+                pltpu.VMEM((h, C, kr), jnp.float32),
+            ],
+        ),
+        out_shape=out_shape,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=_interpret() if interpret is None else interpret,
+    )(tbl, live, qpos.astype(jnp.int32), q_lat, q_pe, ck_pool, cpe_pool,
+      cp_pool)
+    if partial:
+        return out
+    return out.transpose(0, 2, 1, 3)

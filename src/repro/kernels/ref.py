@@ -84,6 +84,86 @@ def masked_matmul_kdim_ref(x: jax.Array, w: jax.Array,
     return (xz.astype(jnp.float32) @ w.astype(jnp.float32)).astype(x.dtype)
 
 
+def _paged_view(pool, block_table, lo, n_local, fill):
+    """Ring view through the block table with the kernel's grid-skip
+    semantics made dense: null pages (global id 0) and — given a shard
+    window [lo, lo + n_local) — foreign pages gather page 0 and take
+    ``fill`` (use -1 for position tags so skipped rows mask out)."""
+    if lo is None:
+        loc, ok = block_table, block_table > 0
+    else:
+        loc = block_table - lo
+        ok = (block_table > 0) & (loc >= 0) & (loc < n_local)
+    out = pool[jnp.where(ok, loc, 0)]
+    mask = ok.reshape(ok.shape + (1,) * (out.ndim - ok.ndim))
+    return jnp.where(mask, out, jnp.asarray(fill, out.dtype))
+
+
+def gqa_paged_ref(q, kpool, vpool, ppool, block_table, qpos, *,
+                  window: int = 0, lo=None, n_local=None,
+                  partial: bool = False):
+    """Oracle for ``paged_attention.gqa_paged_flash``: materialise the
+    ring view (skipped pages as -1-tagged rows), run the dense masked
+    softmax — or emit the (m, l, acc) flash stats with ``partial``."""
+    B, C, H, D = q.shape
+    page, hkv = kpool.shape[1], kpool.shape[2]
+    Dv = vpool.shape[-1]
+    ring = block_table.shape[1] * page
+    gk = _paged_view(kpool, block_table, lo, n_local, 0).reshape(
+        B, ring, hkv, D)
+    gv = _paged_view(vpool, block_table, lo, n_local, 0).reshape(
+        B, ring, hkv, Dv)
+    gp = _paged_view(ppool, block_table, lo, n_local, -1).reshape(B, ring)
+    G = H // hkv
+    qf = q.reshape(B, C, hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qf, gk.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * (D ** -0.5)
+    rel = qpos[:, :, None] - gp[:, None, :]
+    ok = (gp[:, None, :] >= 0) & (rel >= 0)
+    if window > 0:
+        ok &= rel < window
+    s = jnp.where(ok[:, None, None], s, -1e30)
+    m = s.max(-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(-1)
+    acc = jnp.einsum("bkgqt,btkd->bkgqd", p, gv.astype(jnp.float32))
+    if partial:
+        return m, l, acc
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, C, H, Dv).astype(q.dtype)
+
+
+def mla_paged_ref(q_lat, q_pe, ck_pool, cpe_pool, cp_pool, block_table,
+                  qpos, *, scale: float, lo=None, n_local=None,
+                  partial: bool = False):
+    """Oracle for ``paged_attention.mla_paged_flash`` (absorbed latent
+    attention over the paged pools)."""
+    B, C, h, kr = q_lat.shape
+    rd = q_pe.shape[-1]
+    page = ck_pool.shape[1]
+    ring = block_table.shape[1] * page
+    ck = _paged_view(ck_pool, block_table, lo, n_local, 0).reshape(
+        B, ring, kr).astype(jnp.float32)
+    cpe = _paged_view(cpe_pool, block_table, lo, n_local, 0).reshape(
+        B, ring, rd).astype(jnp.float32)
+    cp = _paged_view(cp_pool, block_table, lo, n_local, -1).reshape(B, ring)
+    s = (jnp.einsum("bchk,btk->bhct", q_lat.astype(jnp.float32), ck,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bchr,btr->bhct", q_pe.astype(jnp.float32), cpe,
+                      preferred_element_type=jnp.float32)) * scale
+    ok = (cp[:, None, None, :] >= 0) & \
+        (cp[:, None, None, :] <= qpos[:, None, :, None])
+    s = jnp.where(ok, s, -1e30)
+    m = s.max(-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(-1)
+    acc = jnp.einsum("bhct,btk->bhck", p, ck)
+    if partial:
+        return m, l, acc
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return o.transpose(0, 2, 1, 3).astype(q_lat.dtype)
+
+
 def mor_tile_mask_ref(x: jax.Array, w: jax.Array, m: jax.Array,
                       b: jax.Array, bn_scale: jax.Array, bn_bias: jax.Array,
                       enable: jax.Array, proxy_neg: jax.Array,

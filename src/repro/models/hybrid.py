@@ -204,9 +204,33 @@ def prefill_chunk(params: Dict, cfg: ModelConfig, tokens, cache: Dict, *,
             ys["mor_stats"] = stats
         return c, ys
 
-    x, new = jax.lax.scan(seg_body, x,
-                          {"lp": seg_params, "mc": seg_caches,
-                           "ac": cache["shared_attn"]})
+    shared = cache["shared_attn"]
+    if isinstance(shared.get("k"), tuple):
+        # paged pool with per-layer tuple leaves: unroll the segment
+        # loop so the shared-attention page-pool scatters stay in-place
+        # (scan would copy the full pool leaf once per segment)
+        attn_new: Dict[str, list] = {k: [] for k in shared}
+        mamba_news, stats_all = [], []
+        for s in range(n_seg):
+            xs_s = {"lp": jax.tree_util.tree_map(lambda a: a[s], seg_params),
+                    "mc": jax.tree_util.tree_map(lambda a: a[s], seg_caches),
+                    "ac": {k: v[s] for k, v in shared.items()}}
+            x, ys = seg_body(x, xs_s)
+            for k in attn_new:
+                attn_new[k].append(ys["attn"][k])
+            mamba_news.append(ys["mamba"])
+            if "mor_stats" in ys:
+                stats_all.append(ys["mor_stats"])
+        new = {"mamba": jax.tree_util.tree_map(
+                   lambda *a: jnp.stack(a), *mamba_news),
+               "attn": {k: tuple(v) for k, v in attn_new.items()}}
+        if stats_all:
+            new["mor_stats"] = jax.tree_util.tree_map(
+                lambda *a: jnp.stack(a), *stats_all)
+    else:
+        x, new = jax.lax.scan(seg_body, x,
+                              {"lp": seg_params, "mc": seg_caches,
+                               "ac": cache["shared_attn"]})
     new_cache: Dict[str, Any] = {
         "pos": pos + n_valid,
         "mamba": scatter_state(cache["mamba"], jax.tree_util.tree_map(

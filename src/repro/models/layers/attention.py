@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.distributed import decode_attention as da
+from repro.kernels import paged_attention as pk
 from repro.models.layers.common import dense_init, split_keys
 from repro.models.layers.norms import norm_init, apply_norm
 from repro.models.layers.rope import apply_rope
@@ -67,14 +68,10 @@ def _qkv(params, cfg: ModelConfig, x):
 
 
 def _mask_bias(q_pos, kv_pos, causal: bool, window: int):
-    """(…, Sq, Skv) additive bias from position vectors."""
-    rel = q_pos[:, None] - kv_pos[None, :]
-    ok = jnp.ones(rel.shape, bool)
-    if causal:
-        ok &= rel >= 0
-    if window > 0:
-        ok &= rel < window
-    ok &= kv_pos[None, :] >= 0
+    """(Sq, Skv) additive bias from position vectors — the unbatched
+    face of ``decode_attention.position_ok``, so the teacher-forced,
+    slotted, paged and sharded paths all share ONE mask predicate."""
+    ok = da.position_ok(q_pos[:, None], kv_pos[None, :], causal, window)
     return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
 
 
@@ -356,11 +353,17 @@ def gqa_chunk(params, cfg: ModelConfig, x, cache, pos, valid,
         if da.shard_info() is not None:
             o = da.gqa_paged_attend(q, ck, cv, cp, block_table, qpos,
                                     window=cfg.sliding_window)
+        elif pk.enabled():
+            # fused paged flash decode: attend straight off the block
+            # table — no materialised ring view, null pages skipped at
+            # the grid level
+            o = pk.gqa_paged_flash(q, ck, cv, cp, block_table, qpos,
+                                   window=cfg.sliding_window)
         else:
             hkv, hd = k.shape[2], k.shape[3]
-            gk = ck[block_table].reshape(B, ring, hkv, hd)
-            gv = cv[block_table].reshape(B, ring, hkv, hd)
-            gp = cp[block_table].reshape(B, ring)
+            gk = da.pool_view(ck, block_table, 0).reshape(B, ring, hkv, hd)
+            gv = da.pool_view(cv, block_table, 0).reshape(B, ring, hkv, hd)
+            gp = da.pool_view(cp, block_table, -1).reshape(B, ring)
             o = attend_batched(q, gk, gv, qpos, gp, causal=True,
                                window=cfg.sliding_window)
         y = o.reshape(B, C, -1) @ params["wo"].astype(x.dtype)
@@ -504,7 +507,6 @@ def mla_chunk(params, cfg: ModelConfig, x, cache, pos, valid,
     q_lat = jnp.einsum("bchd,khd->bchk", q_nope, wk_b)   # absorb W_uk
     if block_table is not None:
         page = cache["c_kv"].shape[1]
-        ring = block_table.shape[1] * page
         blk, off = qpos // page, qpos % page
         pidx = jnp.take_along_axis(block_table, blk, axis=1)
         ck_pool = da.pool_set(cache["c_kv"], pidx, off, c_kv_t, valid)
@@ -518,9 +520,17 @@ def mla_chunk(params, cfg: ModelConfig, x, cache, pos, valid,
             o = jnp.einsum("bchk,khv->bchv", o_lat, wv_b)  # absorb W_uv
             y = o.reshape(B, C, h * vd) @ params["wo"].astype(dt)
             return y, new_cache
-        ck = ck_pool[block_table].reshape(B, ring, kr)
-        cpe = cpe_pool[block_table].reshape(B, ring, rd)
-        cp = cp_pool[block_table].reshape(B, ring)
+        if pk.enabled():
+            o_lat = pk.mla_paged_flash(q_lat, q_pe, ck_pool, cpe_pool,
+                                       cp_pool, block_table, qpos,
+                                       scale=(nd + rd) ** -0.5)
+            o = jnp.einsum("bchk,khv->bchv", o_lat, wv_b)  # absorb W_uv
+            y = o.reshape(B, C, h * vd) @ params["wo"].astype(dt)
+            return y, new_cache
+        ring = block_table.shape[1] * page
+        ck = da.pool_view(ck_pool, block_table, 0).reshape(B, ring, kr)
+        cpe = da.pool_view(cpe_pool, block_table, 0).reshape(B, ring, rd)
+        cp = da.pool_view(cp_pool, block_table, -1).reshape(B, ring)
     else:
         ML = cache["c_kv"].shape[1]
         idx = jnp.where(valid, qpos, ML)                 # ML is OOB -> drop
@@ -534,8 +544,7 @@ def mla_chunk(params, cfg: ModelConfig, x, cache, pos, valid,
          + jnp.einsum("bchr,btr->bhct", q_pe, cpe,
                       preferred_element_type=jnp.float32))
     s = s * ((nd + rd) ** -0.5)
-    ok = (cp[:, None, None, :] <= qpos[:, None, :, None]) & \
-        (cp[:, None, None, :] >= 0)
+    ok = da.position_ok(qpos[:, None, :, None], cp[:, None, None, :], True, 0)
     s = jnp.where(ok, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1).astype(dt)
     o_lat = jnp.einsum("bhct,btk->bchk", p, ck)

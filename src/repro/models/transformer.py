@@ -303,6 +303,35 @@ def prefill_chunk(params: Dict, cfg: ModelConfig, tokens, cache: Dict, *,
     x = constrain(x, "residual")
 
     def run_stack(x, stacked, caches, kind, mor_stack):
+        if isinstance(caches, dict) and \
+                any(isinstance(v, tuple) for v in caches.values()):
+            # paged pools carry per-layer TUPLE leaves: unroll the layer
+            # loop in python so every pool scatter updates its own
+            # donated buffer in place — threading the pools through
+            # lax.scan copies each full leaf once per layer on CPU,
+            # which charges the whole pool (not the attended window) to
+            # every dispatch
+            L = len(next(v for v in caches.values()
+                         if isinstance(v, tuple)))
+            new_c = {k: [] for k in caches}
+            ys_all = []
+            y = x
+            for l in range(L):
+                lp = jax.tree_util.tree_map(lambda a: a[l], stacked)
+                ml = (None if mor_stack is None else
+                      jax.tree_util.tree_map(lambda a: a[l], mor_stack))
+                cl = {k: v[l] for k, v in caches.items()}
+                y, c_new, ys = _block_chunk(lp, cfg, y, cl, pos, valid,
+                                            kind, ml, mor_mode,
+                                            block_table=block_table)
+                for k in new_c:
+                    new_c[k].append(c_new[k])
+                ys_all.append(ys)
+            caches_new = {k: tuple(v) for k, v in new_c.items()}
+            ys = (jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys_all)
+                  if ys_all[0] else {})
+            return y, caches_new, ys
+
         def body(carry, xs):
             y, c_new, ys = _block_chunk(xs["lp"], cfg, carry, xs["c"], pos,
                                         valid, kind, xs.get("mor"), mor_mode,

@@ -110,15 +110,17 @@ class Engine:
         self.temperature = float(temperature)
         self.top_k = int(top_k)
         self._base_key = jax.random.PRNGKey(sample_seed)
-        copy_pads = ((self.pool.kv_copy_max, self.pool.st_copy_max)
-                     if self.pool is not None else (0, 0))
         body = partial(self._step_impl, cfg, api, mor_mode,
-                       self.temperature, self.top_k, copy_pads)
+                       self.temperature, self.top_k)
         if layout == "paged-sharded":
             from repro.serving.mesh import make_sharded_step
             self._step = make_sharded_step(body, self.mesh, self.cache)
         else:
-            self._step = jax.jit(body, donate_argnums=(2,))
+            # n_active (arg 9) is the static block-table width (bucketed
+            # multiples of four) and copy_pads (arg 10) the static {0,
+            # max} copy-pad widths — a handful of executables total
+            self._step = jax.jit(body, donate_argnums=(2,),
+                                 static_argnums=(9, 10))
         self._stream_cbs: Dict[int, Callable[[int, int], None]] = {}
         self._stream_done: set = set()
         self._next_rid = 0
@@ -176,9 +178,9 @@ class Engine:
                             capacities=caps)
 
     @staticmethod
-    def _step_impl(cfg, api, mor_mode, temperature, top_k, copy_pads,
+    def _step_impl(cfg, api, mor_mode, temperature, top_k,
                    params, mor, cache, tokens, n_valid, use_pending,
-                   pending, key, ops):
+                   pending, key, ops, n_active=None, copy_pads=(0, 0)):
         # paged layout: fuse the pool's pending page edits (resets, COW
         # copies, table uploads — one packed int32 vector) into THIS
         # compiled step; clean steps pass ops=None and jit caches a
@@ -186,6 +188,16 @@ class Engine:
         # decode loop pays nothing for the allocator
         if ops is not None:
             cache = kv_pool.apply_cache_ops(cache, ops, *copy_pads)
+        # active-block-width: slice the (post-ops) block table down to
+        # the width this dispatch needs (``PagedPool.active_blocks``) —
+        # the attends then never touch the provably-null tail columns.
+        # The table itself is only ever edited host-side (via ops), so
+        # the full table is restored verbatim in the returned cache.
+        full_bt = None
+        if n_active is not None and "block_table" in cache and \
+                n_active < cache["block_table"].shape[1]:
+            full_bt = cache["block_table"]
+            cache = dict(cache, block_table=full_bt[:, :n_active])
         # splice each decoding slot's device-resident last token into
         # column 0 (inside jit: no extra op dispatches on the hot loop)
         tokens = tokens.at[:, 0].set(
@@ -194,6 +206,8 @@ class Engine:
         logits, cache, aux = api.prefill_chunk(
             params, cfg, tokens, cache, n_valid=n_valid, mor=mor,
             mor_mode=mor_mode)
+        if full_bt is not None:
+            cache = dict(cache, block_table=full_bt)
         last = jnp.clip(n_valid - 1, 0)
         lg = jnp.take_along_axis(logits, last[:, None, None], axis=1)[:, 0]
         if temperature > 0.0:
@@ -268,10 +282,14 @@ class Engine:
         ndec = int(use_pending.sum()) if kind == "mixed" else 0
         key = jax.random.fold_in(self._base_key, self.counters["dispatches"]) \
             if self.temperature > 0.0 else self._base_key
+        n_active = (self.pool.active_blocks(n_valid)
+                    if self.pool is not None else None)
+        copy_pads = (self.pool.last_pads
+                     if self.pool is not None and ops is not None else (0, 0))
         nxt, self._pending, self.cache, aux = self._step(
             self.params, self.mor, self.cache, jnp.asarray(tokens),
             jnp.asarray(n_valid), jnp.asarray(use_pending), self._pending,
-            key, ops)
+            key, ops, n_active, copy_pads)
         if self.pool is not None:
             self.pool.advance(n_valid)
         if emits:

@@ -154,7 +154,10 @@ def _pool_dims(cache) -> Tuple[int, int]:
 
     def kv(node):
         nonlocal n_pages
-        n_pages = node["pos"].shape[-2]
+        tag = node["pos"]
+        if isinstance(tag, tuple):               # per-layer pool leaves
+            tag = tag[0]
+        n_pages = tag.shape[-2]
         return node
 
     def stl(a):
@@ -207,14 +210,36 @@ def apply_cache_ops(cache: Dict, ops, kv_copy_max: int,
     s_dst = take(st_copy_max) if has_state else None
 
     def kv(node):
+        # leaves are either layer-stacked ((L, n_pages, page, ...)) or —
+        # the serving pool's in-place layout — a per-layer TUPLE of
+        # (n_pages, page, ...) arrays (tuple leaves keep every scatter
+        # aliasable to its own donated buffer; a stacked leaf threaded
+        # through the layer scan gets copied wholesale each iteration)
         node = dict(node)
-        tag = node["pos"]
-        m = kv_reset.reshape((1, -1) + (1,) * (tag.ndim - 2))
-        node["pos"] = jnp.where(m, jnp.full((), -1, tag.dtype), tag)
-        for key, a in node.items():
+
+        def reset(tag):
+            m = kv_reset.reshape((-1,) + (1,) * (tag.ndim - 1))
+            return jnp.where(m, jnp.full((), -1, tag.dtype), tag)
+
+        def copy(a):
             # pads carry an out-of-bounds index and are dropped (the
             # clamped OOB gather on the src side feeds a dropped write)
-            node[key] = a.at[:, kv_dst].set(a[:, kv_src], mode="drop")
+            return a.at[kv_dst].set(a[kv_src], mode="drop")
+
+        per_layer = isinstance(node["pos"], tuple)
+        if per_layer:
+            node["pos"] = tuple(reset(t) for t in node["pos"])
+        else:
+            tag = node["pos"]
+            m = kv_reset.reshape((1, -1) + (1,) * (tag.ndim - 2))
+            node["pos"] = jnp.where(m, jnp.full((), -1, tag.dtype), tag)
+        if kv_copy_max == 0:         # copy-free round ({0, max} buckets)
+            return node
+        for key, a in node.items():
+            if per_layer:
+                node[key] = tuple(copy(x) for x in a)
+            else:
+                node[key] = a.at[:, kv_dst].set(a[:, kv_src], mode="drop")
         return node
 
     def stl(a):
@@ -536,14 +561,18 @@ class PagedPool:
         # restores + snapshots per dispatch rarely exceed the slot
         # count; bursts overflow into extra pre-step apply rounds
         self.st_copy_max = max(1, n_slots)
+        # per-dispatch copy pad widths of the LAST ``_build_ops`` round
+        # ({0, copy_max} buckets) — the engine passes them into its
+        # fused step as static args
+        self.last_pads: Tuple[int, int] = (self.kv_copy_max,
+                                           self.st_copy_max)
         assert n_shards == 1 or mesh is not None, \
             "sharded pool needs the page mesh"
         if mesh is None:
             self._apply = jax.jit(
-                lambda cache, ops: apply_cache_ops(cache, ops,
-                                                   self.kv_copy_max,
-                                                   self.st_copy_max),
-                donate_argnums=(0,))
+                lambda cache, ops, pads: apply_cache_ops(cache, ops,
+                                                         *pads),
+                static_argnums=(2,), donate_argnums=(0,))
         else:
             # mesh present (even 1-shard): ops come as per-shard rows,
             # so the standalone apply must be the shard_map one —
@@ -557,7 +586,13 @@ class PagedPool:
         n_pages, page, n_spages = self.n_pages, self.page, self.n_spages
 
         def kv(node):
+            # per-LAYER tuple leaves, one (n_pages, page, ...) array per
+            # stack entry: the layer loop unrolls over tuple elements so
+            # each page-pool scatter aliases its own donated buffer
+            # in-place (a single stacked leaf threaded through lax.scan
+            # is copied wholesale every layer on CPU backends)
             out = {}
+            stack = None
             for key in ("k", "v", "c_kv", "k_pe"):
                 if key in node:
                     a = node[key]
@@ -565,11 +600,13 @@ class PagedPool:
                     if key in ("k", "v"):
                         feat = a.shape[-2:]
                         lead = a.shape[:-4]
-                    out[key] = jnp.zeros(lead + (n_pages, page) + feat,
-                                         a.dtype)
-            ref = node["k"] if "k" in node else node["c_kv"]
-            lead = ref.shape[:-4] if "k" in node else ref.shape[:-3]
-            out["pos"] = jnp.full(lead + (n_pages, page), -1, jnp.int32)
+                    assert len(lead) == 1, f"kv node {key}: lead {lead}"
+                    stack = lead[0]
+                    out[key] = tuple(
+                        jnp.zeros((n_pages, page) + feat, a.dtype)
+                        for _ in range(stack))
+            out["pos"] = tuple(jnp.full((n_pages, page), -1, jnp.int32)
+                               for _ in range(stack))
             return out
 
         def st(a):
@@ -599,8 +636,7 @@ class PagedPool:
                                             shard_cache, sharded_apply)
             specs = cache_partition_specs(cache)
             cache = shard_cache(cache, self.mesh, specs)
-            self._apply = sharded_apply(self.mesh, specs,
-                                        self.kv_copy_max, self.st_copy_max)
+            self._apply = sharded_apply(self.mesh, specs)
         return cache
 
     def _take_copies(self, pending: List[Tuple[int, int]], alloc,
@@ -658,17 +694,25 @@ class PagedPool:
             base.append(self.kv.table.reshape(-1).astype(np.int32))
         if self.has_state:
             base.append(self.st.table[:, 0].astype(np.int32))
+        # copy pads bucket to {0, copy_max}: the common dirty dispatch
+        # (fresh page allocated — resets + table upload, NO copies)
+        # would otherwise gather-and-drop copy_max pages per pool leaf
+        # inside the fused step, a pure ineffectual-work tax.  The pad
+        # widths ride to ``apply_cache_ops`` as static args
+        # (``last_pads``), so each bucket is its own executable.
         kv_parts = st_parts = None
+        kv_pad = self.kv_copy_max if self._kv_copies else 0
+        st_pad = self.st_copy_max if self._st_copies else 0
         if self.has_kv:
             reset = self._take_resets(self._kv_reset, self.kv)
-            src, dst = self._take_copies(self._kv_copies, self.kv,
-                                         self.kv_copy_max)
+            src, dst = self._take_copies(self._kv_copies, self.kv, kv_pad)
             kv_parts = (reset, src, dst)
         if self.has_state:
             reset = self._take_resets(self._st_reset, self.st)
-            src, dst = self._take_copies(self._st_copies, self.st,
-                                         self.st_copy_max)
+            src, dst = self._take_copies(self._st_copies, self.st, st_pad)
             st_parts = (reset, src, dst)
+        self.last_pads = (kv_pad if self.has_kv else 0,
+                          st_pad if self.has_state else 0)
         rows = []
         for s in range(P_):
             parts = list(base)
@@ -691,7 +735,7 @@ class PagedPool:
             return cache, None
         ops = self._build_ops()
         while self._kv_copies or self._st_copies:
-            cache = self._apply(cache, ops)
+            cache = self._apply(cache, ops, self.last_pads)
             ops = self._build_ops()
         self._dirty = False
         return cache, ops
@@ -701,7 +745,7 @@ class PagedPool:
         engine prefers ``drain`` + its fused step).  No-op when clean."""
         cache, ops = self.drain(cache)
         if ops is not None:
-            cache = self._apply(cache, ops)
+            cache = self._apply(cache, ops, self.last_pads)
         return cache
 
     # -- pending page copies: the src is PINNED (one extra ref) from
@@ -852,6 +896,30 @@ class PagedPool:
 
     def advance(self, n_valid: np.ndarray) -> None:
         self.pos += np.asarray(n_valid, np.int64)
+
+    def active_blocks(self, n_valid: np.ndarray) -> Optional[int]:
+        """Block-table width this dispatch actually NEEDS (host-side,
+        count-based — no device sync): every position any slot has
+        written or will write this step lies below
+        ``max(pos + n_valid)``, so block-table columns past
+        ``ceil(need / page)`` hold only null pages — ineffectual rows
+        the attend would gather, mask and softmax for nothing.  The
+        engine slices the table to this width inside its compiled step.
+
+        Safety: a width ``W < n_blocks`` changes the ring modulus to
+        ``W * page``, which is only sound while no slot has wrapped —
+        ``pos + n_valid`` is clamped to ``ring`` so any wrap (windowed
+        rings) forces the full width.  The result is bucketed to the
+        next multiple of 4 blocks (capped at ``n_blocks``) — coarse
+        enough that the engine compiles O(n_blocks / 4) step variants,
+        fine enough that the attend width tracks the longest live
+        sequence instead of snapping to the full ring."""
+        if not self.has_kv:
+            return None
+        need = int(np.minimum(self.pos + np.asarray(n_valid, np.int64),
+                              self.ring).max(initial=0))
+        w = max(1, -(-need // self.page))
+        return min(-(-w // 4) * 4, self.n_blocks)
 
     def maybe_snapshot(self, slot: int, prompt: np.ndarray,
                        offset: int) -> None:

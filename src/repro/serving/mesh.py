@@ -48,7 +48,11 @@ def cache_partition_specs(cache: Dict) -> Dict:
     their page axis (axis 1 — the layer stack leads), tables / pos
     replicated."""
     def kv(node):
-        return {k: P(None, PAGE_AXIS) for k in node}
+        # per-layer tuple leaves: each element is (n_pages, page, ...)
+        # with the page dim LEADING (no stack axis)
+        return {k: (tuple(P(PAGE_AXIS) for _ in v)
+                    if isinstance(v, tuple) else P(None, PAGE_AXIS))
+                for k, v in node.items()}
 
     def stl(a):
         return P(None, PAGE_AXIS)
@@ -65,9 +69,12 @@ def cache_partition_specs(cache: Dict) -> Dict:
 
 def _walk2(a, b, fn):
     """Zip-walk two parallel dict trees (specs are P leaves, which jax's
-    tree utils may treat as tuples — so walk dicts explicitly)."""
+    tree utils may treat as tuples — so walk dicts and per-layer leaf
+    tuples explicitly)."""
     if isinstance(a, dict):
         return {k: _walk2(a[k], b[k], fn) for k in a}
+    if isinstance(a, tuple):                     # per-layer pool leaves
+        return tuple(fn(x, s) for x, s in zip(a, b))
     return fn(a, b)
 
 
@@ -78,19 +85,22 @@ def shard_cache(cache: Dict, mesh, specs: Dict = None) -> Dict:
                   lambda a, s: jax.device_put(a, NamedSharding(mesh, s)))
 
 
-def sharded_apply(mesh, specs: Dict, kv_copy_max: int, st_copy_max: int):
+def sharded_apply(mesh, specs: Dict):
     """The standalone (overflow-round) cache-ops apply as a shard_map
-    step: each shard applies its own ops row to its local page range."""
+    step: each shard applies its own ops row to its local page range.
+    The copy-pad widths are static (the pool buckets them to {0, max})
+    so copy-free rounds compile without the scatter."""
     n = mesh.shape[PAGE_AXIS]
 
-    def body(cache, ops):
-        with page_shard_context(PAGE_AXIS, n):
-            return kv_pool.apply_cache_ops(cache, ops[0], kv_copy_max,
-                                           st_copy_max)
+    def fn(cache, ops, pads):
+        def body(cache, ops):
+            with page_shard_context(PAGE_AXIS, n):
+                return kv_pool.apply_cache_ops(cache, ops[0], *pads)
 
-    fn = shard_map(body, mesh=mesh, in_specs=(specs, P(PAGE_AXIS)),
-                   out_specs=specs, check_rep=False)
-    return jax.jit(fn, donate_argnums=(0,))
+        return shard_map(body, mesh=mesh, in_specs=(specs, P(PAGE_AXIS)),
+                         out_specs=specs, check_rep=False)(cache, ops)
+
+    return jax.jit(fn, donate_argnums=(0,), static_argnums=(2,))
 
 
 def make_sharded_step(body, mesh, cache: Dict):
@@ -110,13 +120,17 @@ def make_sharded_step(body, mesh, cache: Dict):
     n = mesh.shape[PAGE_AXIS]
 
     def stepfn(params, mor, cache, tokens, n_valid, use_pending, pending,
-               key, ops):
+               key, ops, n_active=None, copy_pads=(0, 0)):
+        # n_active / copy_pads are static (bucketed active-block width
+        # and {0, max} copy-pad widths) — they ride into the body via
+        # closure, not as shard_map operands
         def inner(params, mor, cache, tokens, n_valid, use_pending,
                   pending, key, ops):
             with page_shard_context(PAGE_AXIS, n):
                 return body(params, mor, cache, tokens, n_valid,
                             use_pending, pending, key,
-                            None if ops is None else ops[0])
+                            None if ops is None else ops[0], n_active,
+                            copy_pads)
 
         return shard_map(
             inner, mesh=mesh,
@@ -127,4 +141,4 @@ def make_sharded_step(body, mesh, cache: Dict):
         )(params, mor, cache, tokens, n_valid, use_pending, pending, key,
           ops)
 
-    return jax.jit(stepfn, donate_argnums=(2,))
+    return jax.jit(stepfn, donate_argnums=(2,), static_argnums=(9, 10))
