@@ -250,3 +250,32 @@ def fig13_speedup_energy() -> Tuple[float, Dict]:
                      "energy_saving": 1 - e_mor / e_base,
                      "ops_saved": s, "T_acc_delta": op["acc_delta"]}
     return (float(np.mean([v["speedup"] for v in out.values()])), out)
+
+
+# --- Observability: per-layer skip table from a metrics snapshot ----------
+def obs_skip_table(metrics: Dict) -> str:
+    """Markdown per-layer tile-skip table from an obs registry snapshot
+    (``MetricsRegistry.snapshot()``): for every (group, layer[, expert])
+    series of ``repro_mor_tiles_total`` / ``_skipped_total``, the exact
+    device-counted tile totals plus the realised skip fraction and the
+    fixed-point mean live fraction from ``repro_mor_frac_tiles_live``."""
+    tot = {tuple(sorted(v["labels"].items())): v["value"]
+           for v in metrics.get("repro_mor_tiles_total",
+                                {}).get("values", [])}
+    skp = {tuple(sorted(v["labels"].items())): v["value"]
+           for v in metrics.get("repro_mor_tiles_skipped_total",
+                                {}).get("values", [])}
+    live = {tuple(sorted(v["labels"].items())): v["value"]
+            for v in metrics.get("repro_mor_frac_tiles_live",
+                                 {}).get("values", [])}
+    if not tot:
+        return "(no MoR tile counters in this snapshot)"
+    md = ["| group | layer | expert | tiles | skipped | skip frac | "
+          "mean live frac |", "|---|---|---|---|---|---|---|"]
+    for key in sorted(tot):
+        lab = dict(key)
+        t, s = tot[key], skp.get(key, 0.0)
+        md.append(f"| {lab.get('group', '-')} | {lab.get('layer', '-')} | "
+                  f"{lab.get('expert') or '-'} | {t:.0f} | {s:.0f} | "
+                  f"{s / max(t, 1):.3f} | {live.get(key, 0.0):.3f} |")
+    return "\n".join(md)

@@ -435,6 +435,89 @@ paged-kernel` (writes BENCH_paged_kernel.json).
 """
 
 
+def observability_section(path: str = "BENCH_serve.json") -> str:
+    """§Observability: obs-stack overhead + the demo run's per-layer
+    skip table and latency histograms (benchmarks/run.py --scenario
+    serve-engine writes both into BENCH_serve.json, ISSUE 7)."""
+    if not os.path.exists(path):
+        return ""
+    data = json.load(open(path))
+    demo = data.get("obs_demo")
+    if not demo:
+        return ""
+    from benchmarks.figures import obs_skip_table
+    from benchmarks.roofline_table import fmt_s
+
+    overhead = data.get("obs_overhead")
+    ov_txt = ("not measured in this run (needs the d256 compute-scale "
+              "rows)" if overhead is None else
+              f"**{overhead:+.1%}** tokens/s at the d256 "
+              f"compute-dominated point (paired measurement: both "
+              f"engines in one process, timed passes interleaved "
+              f"off/on, best-of-5 per side; acceptance budget < 3%)")
+    tr = demo.get("tracing", {})
+    lat_rows = []
+    for name, key in (("TTFT", "ttft"), ("ITL", "itl"),
+                      ("queue wait", "queue_wait")):
+        s = tr.get(key)
+        if not s or not s.get("count"):
+            continue
+        lat_rows.append(
+            f"| {name} | {s['count']} | {fmt_s(s['p50'])} | "
+            f"{fmt_s(s['p90'])} | {fmt_s(s['p99'])} | "
+            f"{fmt_s(s['max'])} |")
+    dm = demo.get("device_metrics", {})
+    dev_txt = ", ".join(f"{k}={dm[k]}" for k in
+                        ("dispatches", "prefill_tokens", "decode_tokens",
+                         "pages_touched") if k in dm)
+    return f"""\
+## §Observability (repro.obs: device-resident metrics + request tracing)
+
+`repro.obs` instruments the serving stack in three layers: a metrics
+registry (counters / gauges / histograms with labels; JSON + Prometheus
+text export), DEVICE-RESIDENT dispatch counters — a packed int32 block
+threaded through the compiled step exactly like the pool's page-edit
+ops vector, accumulated on device and drained host-side only at flush
+boundaries, so the hot loop gains ZERO extra device syncs — and a
+span tracer (queued / prefill / decode / dispatch spans per request)
+whose timeline exports as Chrome-trace JSON loadable in Perfetto or
+chrome://tracing (`serve.py --metrics-json / --trace-out`).  On the
+sharded layout the metrics block carries one row per shard
+(replicated header fields read from row 0, shard-local page-edit
+fields row-summed at drain).
+
+Measured cost of the full stack: {ov_txt}.
+
+Demo run (tiled mode, static `--capacity 0.5` clamp — random-init
+weights predict every tile live, so the clamp is what exercises the
+skip path — shared {data['trace'].get('chunk', 16) * 2}-token prompt
+prefix): {demo['tokens_per_s']:.0f} tok/s,
+{demo['trace_events']} timeline events, device counters
+{dev_txt}.
+
+Request-latency histograms (host-timeline approximation: TTFT = submit
+→ end of the dispatch that emits the request's first token; ITL =
+between emitting-dispatch ends):
+
+| histogram | count | p50 | p90 | p99 | max |
+|---|---|---|---|---|---|
+{chr(10).join(lat_rows)}
+
+Per-layer tile-skip counters (exact int32 device counts; `skip frac` =
+skipped/total, `mean live frac` = fixed-point SCALE=4096 accumulation
+of the per-dispatch live fraction):
+
+{obs_skip_table(demo["metrics"])}
+
+Reproduce: `PYTHONPATH=src python -m repro.launch.serve --reduced
+--mor tiled --capacity 0.5 --shared-prefix 32 --obs --metrics-json
+m.json --trace-out t.json` (any serve invocation takes the flags; the
+CI `obs-smoke` job asserts nonzero predictor-skip and prefix-hit
+counters and validates the Perfetto JSON on every push).
+
+"""
+
+
 def moe_section(path: str = "BENCH_moe_modes.json") -> str:
     """§MoE: expert-level MoR per-mode skip fractions from the serving
     engine benchmark (benchmarks/run.py --scenario moe-modes)."""
@@ -573,7 +656,7 @@ Dominant-bottleneck notes (one line per arch, train_4k):
     with open("EXPERIMENTS.md", "w") as f:
         f.write(header + dry + serving_section() + prefix_section()
                 + sharded_section() + paged_kernel_section()
-                + moe_section() + PERF_LOG)
+                + moe_section() + observability_section() + PERF_LOG)
     print("wrote EXPERIMENTS.md")
 
 

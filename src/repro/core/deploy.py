@@ -67,6 +67,12 @@ def attach_plans(mor, cfg: ModelConfig, mode: str,
                 cap_live = jnp.asarray(caps, jnp.float32)
                 if cap_live.ndim > 0:
                     cap_live = cap_live.reshape(inner["m"].shape[:-1])
+                else:
+                    # scalar spec (serve --capacity): same budget for
+                    # every (layer, expert) — broadcast so the stacked
+                    # plan's scan/unroll can index its leading dims
+                    cap_live = jnp.broadcast_to(cap_live,
+                                                inner["m"].shape[:-1])
             return {"experts": MoRExecutionPlan(
                 inner, mode=mode, tile_m=cfg.mor.tile_m,
                 tile_n=cfg.mor.tile_n, capacity_frac=cfg.mor.capacity,
@@ -78,6 +84,11 @@ def attach_plans(mor, cfg: ModelConfig, mode: str,
                 # a single shared layer (hybrid) observed at several
                 # call sites: provision for the worst of them
                 cap_live = cap_live.max()
+            elif cap_live.ndim == 0 and layer["m"].ndim > 1:
+                # scalar spec (serve --capacity) on a stacked plan:
+                # broadcast so scan/unroll can index the layer dim
+                cap_live = jnp.broadcast_to(cap_live,
+                                            layer["m"].shape[:1])
         return MoRExecutionPlan(layer, mode=mode, tile_m=cfg.mor.tile_m,
                                 tile_n=cfg.mor.tile_n,
                                 capacity_frac=cfg.mor.capacity,

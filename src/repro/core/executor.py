@@ -54,10 +54,15 @@ def _act(h, activation: str):
 
 def _dense_stats() -> Dict[str, jax.Array]:
     z = jnp.zeros((), jnp.float32)
+    zi = jnp.zeros((), jnp.int32)
     return {"frac_computed": jnp.ones((), jnp.float32),
             "frac_tiles_live": jnp.ones((), jnp.float32),
             "frac_tiles_computed": jnp.ones((), jnp.float32),
-            "frac_mispredicted_zero": z}
+            "frac_mispredicted_zero": z,
+            # integer tile counters (obs device-metrics lanes); dense
+            # has no tile grid, so both are zero — the keyset still has
+            # to match MoRPrediction.stats() for per-layer stacking
+            "n_tiles": zi, "tiles_skipped": zi}
 
 
 class MoRPrediction:
@@ -90,21 +95,27 @@ class MoRPrediction:
             n_live, n_comp = self.kernel_counts
             tiles_live = n_live.astype(jnp.float32) / n_tiles
             tiles_computed = n_comp.astype(jnp.float32) / n_tiles
+            n_computed = n_comp.astype(jnp.int32)
         else:
             tiles_live = self.tiles.mean(dtype=jnp.float32)
             # realised compute after the capacity clamp — the number the
             # serving telemetry compares against the demand
             tiles_computed = self.kept.mean(dtype=jnp.float32)
+            n_computed = self.kept.sum(dtype=jnp.int32)
         if self.computed is not None:
             frac_computed = self.computed.mean(dtype=jnp.float32)
         else:
             # kernel mode: the neuron mask never exists; report the
             # tile-level compute fraction (its tight upper bound).
             frac_computed = tiles_live
+        n_tiles_i = jnp.asarray(int(n_tiles), jnp.int32)
         return {"frac_computed": frac_computed,
                 "frac_tiles_live": tiles_live,
                 "frac_tiles_computed": tiles_computed,
-                "frac_mispredicted_zero": jnp.zeros((), jnp.float32)}
+                "frac_mispredicted_zero": jnp.zeros((), jnp.float32),
+                # exact integer tile counters for the obs device block
+                "n_tiles": n_tiles_i,
+                "tiles_skipped": n_tiles_i - n_computed}
 
 
 @jax.tree_util.register_pytree_node_class

@@ -38,6 +38,7 @@ oracles are ``ref.gqa_paged_ref`` / ``ref.mla_paged_ref``.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import os
 from typing import Optional
@@ -68,17 +69,43 @@ def enabled() -> bool:
 # trace-time dispatch counters: how many pallas_call sites each serving
 # step compiled in (telemetry / CI proof that the kernel path engaged —
 # a cached executable re-dispatches without retracing, so these count
-# kernel *traces*, not per-token launches)
-_TRACES = {"gqa": 0, "mla": 0}
+# kernel *traces*, not per-token launches).  Counters are a SCOPE
+# STACK: the root scope is process-global (historical behaviour), and
+# ``trace_scope()`` pushes a fresh frame so back-to-back benchmark
+# scenarios can each read their own counts without bleed-through —
+# kernels bump every active frame, ``kernel_traces()`` reads the
+# innermost.
+_SCOPES = [{"gqa": 0, "mla": 0}]
+
+
+def _bump_trace(kind: str) -> None:
+    for frame in _SCOPES:
+        frame[kind] += 1
 
 
 def kernel_traces() -> dict:
-    return dict(_TRACES)
+    """Counts in the innermost active scope (the process-global root
+    when no ``trace_scope`` is open)."""
+    return dict(_SCOPES[-1])
 
 
 def reset_kernel_traces() -> None:
-    for k in _TRACES:
-        _TRACES[k] = 0
+    """Zero the innermost active scope."""
+    for k in _SCOPES[-1]:
+        _SCOPES[-1][k] = 0
+
+
+@contextlib.contextmanager
+def trace_scope():
+    """Scoped kernel-trace counting: yields a dict that accumulates
+    only the traces that happen inside the ``with`` block (it keeps its
+    final counts after exit); outer scopes keep accumulating too."""
+    frame = {"gqa": 0, "mla": 0}
+    _SCOPES.append(frame)
+    try:
+        yield frame
+    finally:
+        _SCOPES.remove(frame)
 
 
 def _live_tables(block_table, lo, n_local):
@@ -158,7 +185,7 @@ def gqa_paged_flash(q, kpool, vpool, ppool, block_table, qpos, *,
     (B, C) query positions.  Returns (B, C, H, Dv) in q's dtype, or the
     partial flash stats ((B, hkv, G, C) m / l, (B, hkv, G, C, Dv) acc,
     all fp32) with ``partial=True`` — the ``flash_merge`` operands."""
-    _TRACES["gqa"] += 1
+    _bump_trace("gqa")
     B, C, H, D = q.shape
     page, hkv = kpool.shape[1], kpool.shape[2]
     Dv = vpool.shape[-1]
@@ -282,7 +309,7 @@ def mla_paged_flash(q_lat, q_pe, ck_pool, cpe_pool, cp_pool, block_table,
     ``cp_pool``.  Returns o_lat (B, C, h, kr) in q_lat's dtype (the
     caller absorbs W_uv), or with ``partial=True`` the flash stats
     ((B, h, C) m / l, (B, h, C, kr) acc, fp32) for ``flash_merge``."""
-    _TRACES["mla"] += 1
+    _bump_trace("mla")
     B, C, h, kr = q_lat.shape
     rd = q_pe.shape[-1]
     page = ck_pool.shape[1]

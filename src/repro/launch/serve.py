@@ -21,6 +21,12 @@ serving telemetry, the prefix-cache hit counters, and (with
 from the observed tile-liveness quantiles.  --baseline additionally
 measures the static-batch path (every prompt padded to the trace
 maximum) on the same trace.
+
+--obs / --metrics-json / --trace-out attach the ``repro.obs`` stack to
+the primary engine: a metrics registry (JSON/Prometheus export), the
+device-resident dispatch counters (accumulated inside the compiled
+step, drained only at flush boundaries — zero extra device syncs), and
+the span tracer whose timeline loads in Perfetto / chrome://tracing.
 """
 from __future__ import annotations
 
@@ -149,12 +155,12 @@ def _trace(cfg, n_requests, pmin, pmax, gmin, gmax, seed,
 def _run_engine(cfg, params, reqs, *, mor, mor_mode, n_slots, max_len,
                 chunk=0, capacities=None, layout="paged",
                 prefix_cache=True, temperature=0.0, top_k=0,
-                sample_seed=0, mesh=None):
+                sample_seed=0, mesh=None, obs=None):
     eng = Engine(cfg, params, mor=mor, mor_mode=mor_mode, n_slots=n_slots,
                  max_len=max_len, chunk=chunk, capacities=capacities,
                  layout=layout, prefix_cache=prefix_cache,
                  temperature=temperature, top_k=top_k,
-                 sample_seed=sample_seed, mesh=mesh)
+                 sample_seed=sample_seed, mesh=mesh, obs=obs)
     # first pass compiles the two dispatch shapes; then take the best of
     # three timed passes — single-shot wall clock on a shared CPU is
     # ~2x noisy (the static baseline gets the same warmup + best-of).
@@ -242,6 +248,25 @@ def main(argv=None):
     ap.add_argument("--mor", default="dense",
                     choices=("dense", "exact", "tiled", "kernel"))
     ap.add_argument("--calib-steps", type=int, default=4)
+    ap.add_argument("--capacity", type=float, default=0.0,
+                    help="static gather_matmul capacity fraction applied "
+                         "to every MoR layer (0 = cfg.mor.capacity; the "
+                         "clamp drops live tiles beyond the budget, so "
+                         "tile-skip counters are nonzero even on "
+                         "uncalibrated weights)")
+    ap.add_argument("--obs", action="store_true",
+                    help="enable the repro.obs stack (metrics registry, "
+                         "device-resident dispatch counters, request "
+                         "tracer) on the primary engine; implied by "
+                         "--metrics-json / --trace-out")
+    ap.add_argument("--metrics-json", default=None,
+                    help="write the obs metrics-registry snapshot "
+                         "(counters, gauges, histogram summaries) to "
+                         "this path as JSON")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the request tracer's timeline to this "
+                         "path as Chrome-trace JSON (load in Perfetto "
+                         "or chrome://tracing)")
     ap.add_argument("--calibrate-capacity", type=float, default=0.0,
                     help="liveness quantile for per-layer gather capacity "
                          "(0 = static cfg.mor.capacity)")
@@ -303,11 +328,23 @@ def main(argv=None):
         from repro.launch.mesh import make_page_mesh
         mesh = make_page_mesh(args.shards)
 
+    obs = None
+    if args.obs or args.metrics_json or args.trace_out:
+        from repro.obs import Observability
+        obs = Observability()
+
+    capacities = None
+    if args.capacity > 0 and args.mor != "dense":
+        from repro.serving.telemetry import mor_group_map
+        capacities = {k: args.capacity for k in mor_group_map(cfg)}
+        report["static_capacity"] = args.capacity
+
     eng, results, rep = _run_engine(
         cfg, params, reqs, mor=mor, mor_mode=args.mor, n_slots=args.batch,
-        max_len=max_len, chunk=args.chunk, layout=args.layout,
-        prefix_cache=args.prefix_cache, temperature=args.temperature,
-        top_k=args.top_k, sample_seed=args.sample_seed, mesh=mesh)
+        max_len=max_len, chunk=args.chunk, capacities=capacities,
+        layout=args.layout, prefix_cache=args.prefix_cache,
+        temperature=args.temperature, top_k=args.top_k,
+        sample_seed=args.sample_seed, mesh=mesh, obs=obs)
     report.update(rep)
     print(f"[serve] {cfg.name} mor={args.mor} layout={args.layout}: "
           f"{rep['tokens_per_s']:.1f} tok/s over {len(reqs)} requests "
@@ -415,6 +452,24 @@ def main(argv=None):
         print(f"[serve] static-batch baseline: {n_tok / wall:.1f} tok/s "
               f"(engine speedup "
               f"{report['engine_speedup_vs_static']:.2f}x)")
+
+    if obs is not None:
+        # files are written LAST so --stream / calibration re-runs on the
+        # same engine land in the exported snapshot too
+        if args.metrics_json:
+            obs.write_metrics_json(args.metrics_json)
+        if args.trace_out and obs.tracer is not None:
+            obs.write_trace(args.trace_out)
+        tr = obs.tracer.summary() if obs.tracer is not None else {}
+        ttft = (tr.get("ttft") or {}).get("p50")
+        itl = (tr.get("itl") or {}).get("p50")
+        print(f"[serve] obs: {len(obs.registry.snapshot())} metric "
+              f"families"
+              + (f", ttft p50 {ttft * 1e3:.1f} ms" if ttft else "")
+              + (f", itl p50 {itl * 1e3:.2f} ms" if itl else "")
+              + (f"; metrics -> {args.metrics_json}"
+                 if args.metrics_json else "")
+              + (f"; trace -> {args.trace_out}" if args.trace_out else ""))
 
     if args.out_json:
         with open(args.out_json, "w") as f:

@@ -1,0 +1,155 @@
+"""Device-resident dispatch counters.
+
+A packed int32 metrics block rides through the compiled step the same
+way ``apply_cache_ops`` packs page edits: the engine threads a
+``(n_rows, size)`` buffer into ``_step_impl`` as a donated operand, the
+step adds a delta vector built from values already live on device
+(token counts from ``n_valid``/``use_pending``, per-layer predictor
+tile counts from the aux stats, page-edit counts from the ops vector),
+and the host reads the buffer back ONCE at flush boundaries.  No
+``.item()`` / host sync per dispatch — the default path's device-sync
+count is identical with the block present or absent.
+
+Layout (all int32, fixed at spec construction so the jit signature is
+stable):
+
+- header fields (replicated across shard rows; read takes row 0):
+  ``dispatches, prefill_tokens, decode_tokens, pages_touched``
+- shard-local fields (each shard row accumulates its own; read sums
+  rows): ``kv_page_resets, kv_page_copies, state_page_resets,
+  state_page_copies``
+- per MoR stat group (``mor_stats`` / ``dense_mor_stats`` /
+  ``moe_mor_stats``), flattened per-layer(-expert):
+  ``tiles_total`` and ``tiles_skipped`` (exact integer tile counts)
+  and ``live_q`` (running sum of ``round(frac_tiles_live * SCALE)``,
+  fixed-point so a fraction can accumulate in an int32 lane; divide by
+  ``SCALE * dispatches`` to recover the mean).
+
+Sharded engines give the block one row per page shard with spec
+``P(PAGE_AXIS, None)``; inside ``shard_map`` each shard updates its
+local row, replicated fields land identically in every row and
+shard-local ops counts differ per row, which is exactly what ``read``
+assumes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["SCALE", "DeviceMetricsSpec"]
+
+# fixed-point scale for fraction lanes; 4096 keeps dispatch-count *
+# SCALE well inside int32 for any realistic run length
+SCALE = 4096
+
+HEADER_FIELDS = ("dispatches", "prefill_tokens", "decode_tokens",
+                 "pages_touched")
+SHARD_LOCAL_FIELDS = ("kv_page_resets", "kv_page_copies",
+                      "state_page_resets", "state_page_copies")
+GROUP_FIELDS = ("tiles_total", "tiles_skipped", "live_q")
+
+
+class DeviceMetricsSpec:
+    """Static layout of the packed metrics block.
+
+    ``stat_shapes`` maps aux stat group name -> shape of that group's
+    stacked ``frac_tiles_live`` leaf ((L,) or (L, E)), probed by the
+    engine with ``jax.eval_shape`` so no compile happens up front.
+    """
+
+    def __init__(self, stat_shapes: Dict[str, Tuple[int, ...]]):
+        self.stat_shapes: Dict[str, Tuple[int, ...]] = {
+            k: tuple(int(d) for d in v)
+            for k, v in sorted(stat_shapes.items())}
+        self.offsets: Dict[str, Tuple[int, int]] = {}
+        off = 0
+        for name in HEADER_FIELDS + SHARD_LOCAL_FIELDS:
+            self.offsets[name] = (off, 1)
+            off += 1
+        for g, shp in self.stat_shapes.items():
+            n = int(np.prod(shp)) if shp else 1
+            for f in GROUP_FIELDS:
+                self.offsets[f"{g}/{f}"] = (off, n)
+                off += n
+        self.size = off
+
+    def init(self, n_rows: int = 1):
+        import jax.numpy as jnp
+        return jnp.zeros((n_rows, self.size), jnp.int32)
+
+    # -- device side (runs under jit / shard_map) --------------------------
+    def delta(self, scalars: Dict, aux: Dict):
+        """Build the per-dispatch delta vector (size,) from traced
+        values.  ``scalars`` maps header/shard-local field name ->
+        int32 scalar (missing -> 0); ``aux`` maps stat group -> stats
+        dict carrying ``n_tiles``/``tiles_skipped``/``frac_tiles_live``
+        stacked leaves."""
+        import jax.numpy as jnp
+        segs = []
+        for name in HEADER_FIELDS + SHARD_LOCAL_FIELDS:
+            v = scalars.get(name, 0)
+            segs.append(jnp.asarray(v, jnp.int32).reshape(1))
+        for g, shp in self.stat_shapes.items():
+            n = int(np.prod(shp)) if shp else 1
+            stats = aux.get(g)
+            if stats is None:
+                segs.append(jnp.zeros(3 * n, jnp.int32))
+                continue
+            total = jnp.ravel(stats["n_tiles"]).astype(jnp.int32)
+            skipped = jnp.ravel(stats["tiles_skipped"]).astype(jnp.int32)
+            live = jnp.ravel(stats["frac_tiles_live"])
+            live_q = jnp.round(live * SCALE).astype(jnp.int32)
+            segs.append(jnp.concatenate([total, skipped, live_q]))
+        return jnp.concatenate(segs)
+
+    def accumulate(self, block, scalars: Dict, aux: Dict):
+        """block (n_rows, size) += delta, broadcast to every row.
+        Single-device blocks have one row; under shard_map each shard
+        holds its local row, so the broadcast is per-shard."""
+        return block + self.delta(scalars, aux)[None, :]
+
+    # -- host side ---------------------------------------------------------
+    def read(self, block) -> Dict:
+        """One host transfer; returns plain-python counters plus
+        per-group per-layer arrays and derived fractions."""
+        b = np.asarray(block)
+        assert b.ndim == 2 and b.shape[1] == self.size, b.shape
+
+        def seg(name):
+            off, n = self.offsets[name]
+            return b[:, off:off + n]
+
+        out: Dict = {name: int(seg(name)[0, 0]) for name in HEADER_FIELDS}
+        out.update({name: int(seg(name).sum())
+                    for name in SHARD_LOCAL_FIELDS})
+        disp = max(out["dispatches"], 1)
+        groups: Dict = {}
+        for g, shp in self.stat_shapes.items():
+            total = seg(f"{g}/tiles_total")[0].reshape(shp)
+            skipped = seg(f"{g}/tiles_skipped")[0].reshape(shp)
+            live_q = seg(f"{g}/live_q")[0].reshape(shp)
+            with np.errstate(divide="ignore", invalid="ignore"):
+                skip_frac = np.where(total > 0, skipped / np.maximum(
+                    total, 1), 0.0)
+            groups[g] = {
+                "tiles_total": total.astype(np.int64),
+                "tiles_skipped": skipped.astype(np.int64),
+                "skip_frac": skip_frac,
+                "mean_frac_tiles_live": live_q / (SCALE * disp)}
+        out["groups"] = groups
+        return out
+
+    def read_json(self, block) -> Dict:
+        """``read`` with arrays converted to JSON-safe lists."""
+        out = self.read(block)
+        groups = {}
+        for g, d in out["groups"].items():
+            groups[g] = {
+                "tiles_total": d["tiles_total"].tolist(),
+                "tiles_skipped": d["tiles_skipped"].tolist(),
+                "skip_frac": np.round(d["skip_frac"], 6).tolist(),
+                "mean_frac_tiles_live": np.round(
+                    d["mean_frac_tiles_live"], 6).tolist()}
+        out["groups"] = groups
+        return out

@@ -33,6 +33,7 @@ N)`` opts into flushing every N dispatches for incremental delivery.
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from functools import partial
 from typing import Callable, Dict, Iterator, List, Optional
@@ -45,7 +46,8 @@ from repro.configs.base import ModelConfig
 from repro.models import get_model
 from repro.serving import kv_pool
 from repro.serving.scheduler import Request, Scheduler
-from repro.serving.telemetry import (ServingTelemetry, calibrate_capacity,
+from repro.serving.telemetry import (STAT_KEYS, ServingTelemetry,
+                                     calibrate_capacity, export_telemetry,
                                      mor_group_map)
 
 __all__ = ["Engine", "Request"]
@@ -69,7 +71,7 @@ class Engine:
                  prefix_cache: bool = True,
                  spare_pages: Optional[int] = None,
                  temperature: float = 0.0, top_k: int = 0,
-                 sample_seed: int = 0, mesh=None):
+                 sample_seed: int = 0, mesh=None, obs=None):
         api = get_model(cfg)
         assert api.prefill_chunk is not None, \
             f"{cfg.name} ({cfg.family}) has no serving chunk step"
@@ -110,17 +112,31 @@ class Engine:
         self.temperature = float(temperature)
         self.top_k = int(top_k)
         self._base_key = jax.random.PRNGKey(sample_seed)
+        # observability (repro.obs.Observability): metrics registry +
+        # request tracer + packed device-resident metrics block.  The
+        # block's layout is fixed NOW from the step's aux stat shapes
+        # (jax.eval_shape — no compile) so the jit signature is stable.
+        self.obs = obs
+        self._tr = obs.tracer if obs is not None else None
+        self._mspec = self._mblock = None
+        if obs is not None and obs.device_metrics:
+            from repro.obs.device import DeviceMetricsSpec
+            self._mspec = DeviceMetricsSpec(self._probe_stat_shapes())
+            n_rows = self.pool.n_shards if self.pool is not None else 1
+            self._mblock = self._mspec.init(n_rows)
         body = partial(self._step_impl, cfg, api, mor_mode,
-                       self.temperature, self.top_k)
+                       self.temperature, self.top_k, self._mspec)
         if layout == "paged-sharded":
             from repro.serving.mesh import make_sharded_step
             self._step = make_sharded_step(body, self.mesh, self.cache)
         else:
-            # n_active (arg 9) is the static block-table width (bucketed
-            # multiples of four) and copy_pads (arg 10) the static {0,
-            # max} copy-pad widths — a handful of executables total
-            self._step = jax.jit(body, donate_argnums=(2,),
-                                 static_argnums=(9, 10))
+            # n_active (arg 10) is the static block-table width
+            # (bucketed multiples of four) and copy_pads (arg 11) the
+            # static {0, max} copy-pad widths — a handful of
+            # executables total.  The metrics block (arg 9) is donated
+            # like the cache: it round-trips through every dispatch.
+            self._step = jax.jit(body, donate_argnums=(2, 9),
+                                 static_argnums=(10, 11))
         self._stream_cbs: Dict[int, Callable[[int, int], None]] = {}
         self._stream_done: set = set()
         self._next_rid = 0
@@ -135,6 +151,9 @@ class Engine:
         self.results: Dict[int, List[int]] = {}
         self.counters = {"prefill_tokens": 0, "decode_tokens": 0,
                          "dispatches": 0, "wall_s": 0.0}
+        # last host-side read of the device metrics block (set by
+        # _flush_obs; surfaced in report()["obs"])
+        self._last_device_metrics: Optional[Dict] = None
 
     def _flush_tokens(self) -> None:
         if self._tok_log:
@@ -165,6 +184,140 @@ class Engine:
                 self.telemetry.update_sharding(self.pool.shard_report())
         self._aux_log.clear()
 
+    def _flush_obs(self) -> None:
+        """Mirror every counter source into the obs registry: the
+        device metrics block (ONE host transfer), the pool's host-side
+        accounting, kernel traces, and the telemetry summary.  Runs at
+        flush boundaries only — never on the dispatch hot path.  All
+        series are labeled by layout and written idempotently, so
+        repeated flushes (and several engines sharing one registry)
+        overwrite their own series instead of double-reporting."""
+        if self.obs is None:
+            return
+        reg = self.obs.registry
+        lay = self.layout
+        if self._mblock is not None:
+            dm = self._mspec.read(self._mblock)
+            self._last_device_metrics = dm
+            reg.counter("repro_engine_dispatches_total",
+                        "compiled-step dispatches (device-counted)",
+                        ("layout",)).set(dm["dispatches"], layout=lay)
+            ctok = reg.counter(
+                "repro_engine_tokens_total",
+                "tokens processed by the compiled step",
+                ("layout", "phase"))
+            ctok.set(dm["prefill_tokens"], layout=lay, phase="prefill")
+            ctok.set(dm["decode_tokens"], layout=lay, phase="decode")
+            reg.counter(
+                "repro_engine_pages_touched_total",
+                "live (slot, block) table entries visible to the paged "
+                "attends, summed over dispatches",
+                ("layout",)).set(dm["pages_touched"], layout=lay)
+            cpe = reg.counter(
+                "repro_pool_page_events_total",
+                "device page edits applied by the fused cache-ops step",
+                ("layout", "table", "event"))
+            for table in ("kv", "state"):
+                cpe.set(dm[f"{table}_page_resets"], layout=lay,
+                        table=table, event="reset")
+                cpe.set(dm[f"{table}_page_copies"], layout=lay,
+                        table=table, event="copy")
+            ct = reg.counter(
+                "repro_mor_tiles_total",
+                "predictor tile-grid size, summed over dispatches",
+                ("layout", "group", "layer", "expert"))
+            cs = reg.counter(
+                "repro_mor_tiles_skipped_total",
+                "tiles the predictor skipped, summed over dispatches",
+                ("layout", "group", "layer", "expert"))
+            gl = reg.gauge(
+                "repro_mor_frac_tiles_live",
+                "mean live-tile fraction (device fixed-point)",
+                ("layout", "group", "layer", "expert"))
+            for g, d in dm["groups"].items():
+                for idx in np.ndindex(d["tiles_total"].shape):
+                    lab = {"layout": lay, "group": g, "layer": idx[0],
+                           "expert": idx[1] if len(idx) > 1 else ""}
+                    ct.set(int(d["tiles_total"][idx]), **lab)
+                    cs.set(int(d["tiles_skipped"][idx]), **lab)
+                    gl.set(float(d["mean_frac_tiles_live"][idx]), **lab)
+        csd = reg.counter("repro_scheduler_dispatches_total",
+                          "dispatches built, by kind",
+                          ("layout", "kind"))
+        for kind, v in self.scheduler.dispatch_kinds.items():
+            csd.set(v, layout=lay, kind=kind)
+        if self.pool is not None:
+            cal = reg.counter(
+                "repro_pool_alloc_events_total",
+                "host allocator page alloc/free events",
+                ("layout", "table", "event"))
+            for k, v in self.pool.alloc_events().items():
+                table, event = k.split("_")
+                cal.set(v, layout=lay, table=table, event=event)
+            sh = self.pool.shard_report()
+            giu = reg.gauge("repro_pool_pages_in_use",
+                            "pages currently allocated, per shard",
+                            ("layout", "table", "shard"))
+            ghw = reg.gauge("repro_pool_pages_hiwater",
+                            "page-occupancy high-water mark, per shard",
+                            ("layout", "table", "shard"))
+            for table in ("kv", "state"):
+                key = f"{table}_pages_in_use_per_shard"
+                if key not in sh:
+                    continue
+                for s, v in enumerate(sh[key]):
+                    giu.set(v, layout=lay, table=table, shard=s)
+                for s, v in enumerate(
+                        sh[f"{table}_pages_hiwater_per_shard"]):
+                    ghw.set(v, layout=lay, table=table, shard=s)
+            if self.pool.prefix is not None:
+                pc = self._prefix_counters()
+                cpr = reg.counter("repro_prefix_events_total",
+                                  "prefix-cache event counters",
+                                  ("layout", "event"))
+                for k, v in pc.items():
+                    if k == "hit_rate":
+                        continue
+                    cpr.set(v, layout=lay, event=k)
+                reg.gauge("repro_prefix_hit_rate",
+                          "prefix-cache hit rate since last reset",
+                          ("layout",)).set(pc["hit_rate"], layout=lay)
+                gtr = reg.gauge("repro_prefix_trie",
+                                "prefix-trie occupancy",
+                                ("layout", "stat"))
+                for k, v in self.pool.prefix.stats().items():
+                    gtr.set(v, layout=lay, stat=k)
+        from repro.kernels import paged_attention as pk
+        ckt = reg.counter("repro_kernel_traces_total",
+                          "paged-attention kernel traces (innermost "
+                          "scope)", ("kind",))
+        for kind, v in pk.kernel_traces().items():
+            ckt.set(v, kind=kind)
+        if self.telemetry is not None:
+            export_telemetry(reg, self.telemetry, layout=lay,
+                             capacities=self.capacities)
+
+    def _probe_stat_shapes(self) -> Dict[str, tuple]:
+        """Shapes of the step's per-layer MoR stat leaves, via
+        ``jax.eval_shape`` on the UNJITTED step body (abstract cache —
+        nothing compiles, nothing runs).  Fixes the device metrics
+        block's layout before the first dispatch."""
+        sds = lambda a: jax.ShapeDtypeStruct(jnp.shape(a),
+                                             jnp.result_type(a))
+        cache_abs = jax.tree_util.tree_map(sds, self.cache)
+        body = partial(self._step_impl, self.cfg, self.api, self.mor_mode,
+                       self.temperature, self.top_k, None)
+        out = jax.eval_shape(
+            body, self.params, self.mor, cache_abs,
+            jax.ShapeDtypeStruct((self.n_slots, self.chunk), jnp.int32),
+            jax.ShapeDtypeStruct((self.n_slots,), jnp.int32),
+            jax.ShapeDtypeStruct((self.n_slots,), jnp.bool_),
+            jax.ShapeDtypeStruct((self.n_slots,), jnp.int32),
+            self._base_key, None)
+        aux = out[3]
+        return {k: tuple(aux[k]["frac_tiles_live"].shape)
+                for k in STAT_KEYS if aux.get(k)}
+
     # -- plan attachment ---------------------------------------------------
     def _attach(self, capacities: Optional[Dict]):
         if self.raw_mor is None:
@@ -178,9 +331,16 @@ class Engine:
                             capacities=caps)
 
     @staticmethod
-    def _step_impl(cfg, api, mor_mode, temperature, top_k,
+    def _step_impl(cfg, api, mor_mode, temperature, top_k, mspec,
                    params, mor, cache, tokens, n_valid, use_pending,
-                   pending, key, ops, n_active=None, copy_pads=(0, 0)):
+                   pending, key, ops, metrics=None, n_active=None,
+                   copy_pads=(0, 0)):
+        # obs page-edit counts mirror the ops walk against the pre-edit
+        # cache (same static slices apply_cache_ops uses) — entirely on
+        # device, rides in the metrics block
+        mcounts = {}
+        if metrics is not None and ops is not None:
+            mcounts = kv_pool.ops_counts(cache, ops, *copy_pads)
         # paged layout: fuse the pool's pending page edits (resets, COW
         # copies, table uploads — one packed int32 vector) into THIS
         # compiled step; clean steps pass ops=None and jit caches a
@@ -198,6 +358,9 @@ class Engine:
                 n_active < cache["block_table"].shape[1]:
             full_bt = cache["block_table"]
             cache = dict(cache, block_table=full_bt[:, :n_active])
+        # pages this dispatch's attends can touch: live entries in the
+        # active slots' (sliced) block tables
+        bt_active = cache.get("block_table")
         # splice each decoding slot's device-resident last token into
         # column 0 (inside jit: no extra op dispatches on the hot loop)
         tokens = tokens.at[:, 0].set(
@@ -220,7 +383,20 @@ class Engine:
         else:
             nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
         new_pending = jnp.where(n_valid > 0, nxt, pending)
-        return nxt, new_pending, cache, aux
+        if metrics is not None:
+            # all operands already live on device — the block update
+            # fuses into this executable, no extra dispatch or sync
+            dec = jnp.where(use_pending, n_valid, 0).sum(dtype=jnp.int32)
+            scalars = dict(mcounts, dispatches=1,
+                           decode_tokens=dec,
+                           prefill_tokens=n_valid.sum(
+                               dtype=jnp.int32) - dec)
+            if bt_active is not None:
+                scalars["pages_touched"] = (
+                    (bt_active > 0) & (n_valid > 0)[:, None]).sum(
+                        dtype=jnp.int32)
+            metrics = mspec.accumulate(metrics, scalars, aux)
+        return nxt, new_pending, cache, aux, metrics
 
     # -- request API -------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int = 16,
@@ -238,6 +414,8 @@ class Engine:
         self._next_rid += 1
         if on_token is not None:
             self._stream_cbs[rid] = on_token
+        if self._tr is not None:
+            self._tr.on_submit(rid)
         self.scheduler.add(Request(rid, prompt, max_new_tokens))
         return rid
 
@@ -286,10 +464,22 @@ class Engine:
                     if self.pool is not None else None)
         copy_pads = (self.pool.last_pads
                      if self.pool is not None and ops is not None else (0, 0))
-        nxt, self._pending, self.cache, aux = self._step(
-            self.params, self.mor, self.cache, jnp.asarray(tokens),
-            jnp.asarray(n_valid), jnp.asarray(use_pending), self._pending,
-            key, ops, n_active, copy_pads)
+        # tracer span bookkeeping (rid lookups must happen BEFORE feed()
+        # below frees finished slots); None when tracing is off
+        if self._tr is not None:
+            slots = self.scheduler.slots
+            tr_t0 = self._tr.now()
+            tr_admitted = [(s, slots[s].req.rid) for s in admitted]
+            tr_prefilling = [(s, slots[s].req.rid, off, take)
+                             for s, off, take in prefilling]
+            ann = self._tr.annotation(kind)
+        else:
+            ann = contextlib.nullcontext()
+        with ann:
+            nxt, self._pending, self.cache, aux, self._mblock = self._step(
+                self.params, self.mor, self.cache, jnp.asarray(tokens),
+                jnp.asarray(n_valid), jnp.asarray(use_pending),
+                self._pending, key, ops, self._mblock, n_active, copy_pads)
         if self.pool is not None:
             self.pool.advance(n_valid)
         if emits:
@@ -320,20 +510,34 @@ class Engine:
             self.counters["decode_tokens"] += ndec
             self.counters["prefill_tokens"] += nv_total - ndec
         self.counters["wall_s"] += time.time() - t0
+        if self._tr is not None:
+            self._tr.on_dispatch(
+                kind, tr_t0, self._tr.now(), admitted=tr_admitted,
+                prefilling=tr_prefilling, emits=emits,
+                finished=[req.rid for _, req in finished],
+                queue_depth=len(self.scheduler.waiting),
+                n_active=int(np.count_nonzero(n_valid)))
         return [req.rid for _, req in finished]
 
     def reset_counters(self) -> None:
         """Zero the throughput AND prefix-cache counters (e.g. between a
         compile-warmup pass and a timed pass) — so a report's hit rate /
         skipped chunks describe the same pass as its token counts.  The
-        cache CONTENTS survive: only the accounting resets."""
+        cache CONTENTS survive: only the accounting resets.  With
+        observability on, the device metrics block and the tracer reset
+        with them (registry mirrors follow at the next flush)."""
         self.counters = {"prefill_tokens": 0, "decode_tokens": 0,
                          "dispatches": 0, "wall_s": 0.0}
         self.scheduler.chunks_skipped = 0
         self.scheduler.tokens_skipped = 0
+        self.scheduler.dispatch_kinds = {"mixed": 0, "decode": 0}
         if self.pool is not None:
-            for k in self.pool.counters:
-                self.pool.counters[k] = 0
+            self.pool.reset_event_counters()
+        if self._mblock is not None:
+            n_rows = self.pool.n_shards if self.pool is not None else 1
+            self._mblock = self._mspec.init(n_rows)
+        if self._tr is not None:
+            self._tr.reset()
 
     def run(self, requests=None,
             stream_interval: int = 0) -> Dict[int, List[int]]:
@@ -355,6 +559,7 @@ class Engine:
                 self._flush_tokens()
         self._flush_tokens()
         self._flush_telemetry()
+        self._flush_obs()
         if requests:
             return {rid: toks for rid, toks in self.results.items()
                     if rid >= first_rid}
@@ -382,6 +587,7 @@ class Engine:
                     served += 1
             self._flush_tokens()
             self._flush_telemetry()
+            self._flush_obs()
             while served < len(got):
                 yield got[served]
                 served += 1
@@ -453,4 +659,13 @@ class Engine:
         if self.capacities is not None:
             rep["per_layer_capacity"] = {
                 k: np.asarray(v).tolist() for k, v in self.capacities.items()}
+        if self.obs is not None:
+            self._flush_obs()
+            obs_rep: Dict = {}
+            if self._mspec is not None and self._mblock is not None:
+                obs_rep["device_metrics"] = self._mspec.read_json(
+                    self._mblock)
+            if self._tr is not None:
+                obs_rep["tracing"] = self._tr.summary()
+            rep["obs"] = obs_rep
         return rep

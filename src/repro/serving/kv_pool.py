@@ -262,6 +262,55 @@ def apply_cache_ops(cache: Dict, ops, kv_copy_max: int,
     return out
 
 
+def ops_counts(cache: Dict, ops, kv_copy_max: int,
+               st_copy_max: int) -> Dict:
+    """Count the page edits an ops vector will perform — same static
+    ``take`` walk as ``apply_cache_ops``, reduced to four int32 scalars
+    for the obs device-metrics block.  Jit-safe; copy pads carry an
+    out-of-bounds destination (== local page count), so valid copies
+    are the in-bounds destinations.  Under ``shard_map`` this sees the
+    shard's own ops row against the shard-local page count, making the
+    counts shard-local (the metrics block sums rows at read)."""
+    has_kv = "block_table" in cache
+    has_state = "state_table" in cache
+    n_slots = cache["pos"].shape[0]
+    n_pages, n_spages = _pool_dims(cache)
+
+    def take(n):
+        nonlocal i
+        sl = ops[i:i + n]
+        i += n
+        return sl
+
+    i = n_slots                                  # skip pos upload
+    if has_kv:
+        i += n_slots * cache["block_table"].shape[1]
+    if has_state:
+        i += n_slots
+    zero = jnp.zeros((), jnp.int32)
+    out = {"kv_page_resets": zero, "kv_page_copies": zero,
+           "state_page_resets": zero, "state_page_copies": zero}
+    if has_kv:
+        kv_reset = take(n_pages)
+        take(kv_copy_max)                        # kv_src
+        kv_dst = take(kv_copy_max)
+        out["kv_page_resets"] = kv_reset.astype(bool).sum(
+            dtype=jnp.int32)
+        if kv_copy_max:
+            out["kv_page_copies"] = (kv_dst < n_pages).sum(
+                dtype=jnp.int32)
+    if has_state:
+        s_reset = take(n_spages)
+        take(st_copy_max)                        # s_src
+        s_dst = take(st_copy_max)
+        out["state_page_resets"] = s_reset.astype(bool).sum(
+            dtype=jnp.int32)
+        if st_copy_max:
+            out["state_page_copies"] = (s_dst < n_spages).sum(
+                dtype=jnp.int32)
+    return out
+
+
 def _scan_structure(cache) -> Tuple[bool, bool, int]:
     """-> (has_kv, has_state, kv ring length in rows)."""
     has_kv, has_state, ring = False, False, 0
@@ -336,6 +385,8 @@ class BlockAllocator:
         # shard-balance invariants and serve report read these
         self.in_use = np.zeros((n_shards,), np.int64)
         self.hiwater = np.zeros((n_shards,), np.int64)
+        # cumulative alloc/free event counts (obs registry export)
+        self.events = {"alloc": 0, "free": 0}
 
     @property
     def free(self) -> List[int]:
@@ -367,6 +418,7 @@ class BlockAllocator:
         sh = self.shard_of(p)
         self.in_use[sh] += 1
         self.hiwater[sh] = max(self.hiwater[sh], self.in_use[sh])
+        self.events["alloc"] += 1
         return p
 
     def retain(self, page: int) -> None:
@@ -379,6 +431,7 @@ class BlockAllocator:
         self.ref[page] = 0
         self._free[self.shard_of(page)].append(page)
         self.in_use[self.shard_of(page)] -= 1
+        self.events["free"] += 1
 
     def drop(self, page: int) -> bool:
         """Drop one reference; returns True if the page was freed."""
@@ -387,6 +440,7 @@ class BlockAllocator:
         if self.ref[page] == 0:
             self._free[self.shard_of(page)].append(page)
             self.in_use[self.shard_of(page)] -= 1
+            self.events["free"] += 1
             return True
         return False
 
@@ -1011,6 +1065,26 @@ class PagedPool:
         self._dirty = True
 
     # -- reporting ----------------------------------------------------------
+    def alloc_events(self) -> Dict:
+        """Cumulative allocator alloc/free event counts per table."""
+        out: Dict = {}
+        if self.has_kv:
+            out["kv_alloc"] = self.kv.events["alloc"]
+            out["kv_free"] = self.kv.events["free"]
+        if self.has_state:
+            out["state_alloc"] = self.st.events["alloc"]
+            out["state_free"] = self.st.events["free"]
+        return out
+
+    def reset_event_counters(self) -> None:
+        """Zero the cumulative event counters (prefix counters + alloc
+        events); occupancy/hiwater accounting is left intact."""
+        for k in self.counters:
+            self.counters[k] = 0
+        for al in (self.kv, self.st):
+            if al is not None:
+                al.events = {"alloc": 0, "free": 0}
+
     def shard_report(self) -> Dict:
         """Per-shard page occupancy: current in-use and high-water marks
         (the null page on shard 0 is excluded by the allocator's

@@ -108,37 +108,45 @@ def make_sharded_step(body, mesh, cache: Dict):
     page axis and jit it (cache donated, like the single-device step).
 
     ``body(params, mor, cache, tokens, n_valid, use_pending, pending,
-    key, ops)`` is ``Engine._step_impl`` with its static leading args
-    bound; inside the region the page-shard context is active, so the
-    models' paged branches run the distributed flash decode and the
-    fused ``apply_cache_ops`` consumes this shard's ops row.  Everything
-    except the page pools is replicated (specs ``P()``): the sharded
-    layout trades replicated FFN/projection compute for a P-way
-    partitioned KV cache and one merge collective per attention layer —
-    multi-host serving as a config flag, not a cache rewrite."""
+    key, ops, metrics)`` is ``Engine._step_impl`` with its static
+    leading args bound; inside the region the page-shard context is
+    active, so the models' paged branches run the distributed flash
+    decode and the fused ``apply_cache_ops`` consumes this shard's ops
+    row.  Everything except the page pools is replicated (specs
+    ``P()``): the sharded layout trades replicated FFN/projection
+    compute for a P-way partitioned KV cache and one merge collective
+    per attention layer — multi-host serving as a config flag, not a
+    cache rewrite.
+
+    The obs device-metrics block (``metrics``, (n_shards, size) int32,
+    None when observability is off) shards one row per page shard like
+    the ops vector: each shard accumulates into its local row (header
+    fields land replicated, page-edit counts shard-local) and the row
+    rides back out still sharded — the host aggregates rows only at
+    flush time."""
     specs = cache_partition_specs(cache)
     n = mesh.shape[PAGE_AXIS]
 
     def stepfn(params, mor, cache, tokens, n_valid, use_pending, pending,
-               key, ops, n_active=None, copy_pads=(0, 0)):
+               key, ops, metrics=None, n_active=None, copy_pads=(0, 0)):
         # n_active / copy_pads are static (bucketed active-block width
         # and {0, max} copy-pad widths) — they ride into the body via
         # closure, not as shard_map operands
         def inner(params, mor, cache, tokens, n_valid, use_pending,
-                  pending, key, ops):
+                  pending, key, ops, metrics):
             with page_shard_context(PAGE_AXIS, n):
                 return body(params, mor, cache, tokens, n_valid,
                             use_pending, pending, key,
-                            None if ops is None else ops[0], n_active,
-                            copy_pads)
+                            None if ops is None else ops[0], metrics,
+                            n_active, copy_pads)
 
         return shard_map(
             inner, mesh=mesh,
             in_specs=(P(), P(), specs, P(), P(), P(), P(), P(),
-                      P(PAGE_AXIS)),
-            out_specs=(P(), P(), specs, P()),
+                      P(PAGE_AXIS), P(PAGE_AXIS)),
+            out_specs=(P(), P(), specs, P(), P(PAGE_AXIS)),
             check_rep=False,
         )(params, mor, cache, tokens, n_valid, use_pending, pending, key,
-          ops)
+          ops, metrics)
 
-    return jax.jit(stepfn, donate_argnums=(2,), static_argnums=(9, 10))
+    return jax.jit(stepfn, donate_argnums=(2, 9), static_argnums=(10, 11))

@@ -163,3 +163,17 @@ class PrefixCache:
     @property
     def n_entries(self) -> Tuple[int, int]:
         return len(self.pages), len(self.snaps)
+
+    def stats(self) -> Dict[str, int]:
+        """Trie introspection for the obs registry: entry counts, how
+        deep the cached chains go, and the token span they cover."""
+        max_depth = max((e.depth + 1 for e in self.pages.values()),
+                        default=0)
+        return {
+            "trie_pages": len(self.pages),
+            "trie_snapshots": len(self.snaps),
+            "max_chain_pages": max_depth,
+            "tokens_covered": len(self.pages) * self.page,
+            "snap_tokens_covered": sum(e.n_tokens
+                                       for e in self.snaps.values()),
+        }

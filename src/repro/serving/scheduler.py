@@ -53,6 +53,9 @@ class Scheduler:
         # request's remaining prefill; see ``admit``)
         self.chunks_skipped = 0
         self.tokens_skipped = 0
+        # per-kind dispatch accounting (obs registry export; the engine
+        # resets these alongside its own counters)
+        self.dispatch_kinds = {"mixed": 0, "decode": 0}
 
     # -- admission ---------------------------------------------------------
     def add(self, req: Request) -> None:
@@ -93,11 +96,14 @@ class Scheduler:
                                          for s in self.slots)
 
     def next_dispatch(self) -> Optional[str]:
+        kind = None
         if any(s.state is PREFILL for s in self.slots):
-            return "mixed"
-        if any(s.state is DECODE for s in self.slots):
-            return "decode"
-        return None
+            kind = "mixed"
+        elif any(s.state is DECODE for s in self.slots):
+            kind = "decode"
+        if kind is not None:
+            self.dispatch_kinds[kind] += 1
+        return kind
 
     def build_batch(self, kind: str
                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
