@@ -611,12 +611,181 @@ def scenario_paged_kernel(batch_sizes=(2, 4, 8), blocks=(8, 16, 32),
     return result
 
 
+def scenario_serve_slo(policies=("fcfs", "priority", "sjf"),
+                       rate_mults=(0.5, 1.0, 2.5),
+                       duration_s: float = 4.0, n_slots: int = 4,
+                       chunk: int = 8, gen_max: int = 16,
+                       seed: int = 0, hi_pri_frac: float = 0.25,
+                       out: str = "BENCH_slo.json") -> dict:
+    """SLO under open-loop load (ISSUE 8): seeded Poisson arrivals at
+    0.5x/1x/2.5x the measured closed-loop capacity drive each admission
+    policy over the SAME offered load (same seed => byte-identical
+    arrivals), reporting p50/p99 TTFT per priority class and ITL per
+    policy.  A 5% oversize-injection exercises the typed rejection path
+    mid-load.  Alongside the sweep, a deterministic preemption twin
+    checks that a run with page-spill preemptions is token-identical to
+    its FCFS no-preemption twin."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config, reduce_config
+    from repro.models import get_model
+    from repro.obs import Observability
+    from repro.serving import Engine
+    from repro.serving.loadgen import (latency_stats, poisson_trace,
+                                       run_open_loop)
+
+    cfg = reduce_config(get_config("granite-3-2b")).replace(
+        serve_chunk=chunk)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    p_lo, p_hi = 6, 3 * chunk
+    max_len = p_hi + gen_max + 2
+
+    engines = {p: Engine(cfg, params, mor_mode="dense", n_slots=n_slots,
+                         max_len=max_len, chunk=chunk, telemetry=False,
+                         obs=Observability(), policy=p)
+               for p in policies}
+
+    # closed-loop capacity (also the compile warmup): how many requests
+    # per second the engine serves when the driver never lets it idle —
+    # the sweep's offered loads are multiples of this
+    rng = np.random.default_rng(seed)
+    warm = [(rng.integers(1, cfg.vocab_size,
+                          size=rng.integers(p_lo, p_hi + 1)
+                          ).astype(np.int32),
+             int(rng.integers(4, gen_max + 1))) for _ in range(12)]
+    cap_wall = None
+    for name, eng in engines.items():
+        eng.run(list(warm))                      # compile everything
+        eng.reset_counters()
+        t0 = time.perf_counter()
+        eng.run(list(warm))
+        wall = time.perf_counter() - t0
+        if name == "fcfs":
+            cap_wall = wall
+    capacity_req_s = len(warm) / cap_wall
+    print(f"serve_slo_capacity_req_s,0,{capacity_req_s:.2f}", flush=True)
+
+    # warm the preemption path too: the first spill/restore round-trip
+    # compiles its gather/scatter kernels, and without this the stall
+    # lands in the tail latencies of whichever timed run first hits
+    # pool pressure (or a priority preemption)
+    for eng in engines.values():
+        for p, _ in warm[:n_slots + 1]:
+            eng.submit(p, 4)
+        for _ in range(2):
+            eng.step()
+        victim = eng.policy.spill_victim(eng.scheduler.slots)
+        if eng._can_preempt and victim is not None:
+            eng._preempt(victim)
+        eng.run()
+        eng.reset_counters()
+
+    runs = []
+    for mult in rate_mults:
+        rate = capacity_req_s * mult
+        arrivals = poisson_trace(
+            rate, duration_s, cfg.vocab_size, seed=seed,
+            prompt_len=(p_lo, p_hi), max_new=(4, gen_max),
+            hi_pri_frac=hi_pri_frac, oversize_frac=0.05,
+            max_len=max_len)
+        for name, eng in engines.items():
+            eng.reset_counters()
+            res = run_open_loop(eng, arrivals)
+            spans = eng.obs.tracer.request_spans()
+            ttft = latency_stats(spans, res.submitted, arrivals)
+            lost = sum(
+                1 for rid, idx in res.submitted.items()
+                if len(eng.results.get(rid, ()))
+                != arrivals[idx].max_new_tokens)
+            tr = eng.obs.tracer.summary()
+            row = {
+                "policy": name, "offered_x": mult,
+                "rate_req_s": round(rate, 3),
+                "n_arrivals": len(arrivals),
+                "n_submitted": res.n_submitted,
+                "n_rejected": len(res.rejected),
+                "requests_lost": lost,
+                "preemptions": eng.counters["preemptions"],
+                "restores": eng.pool.spill_events["restores"],
+                "ttft": ttft, "itl": tr["itl"],
+                "queue_wait": tr["queue_wait"],
+                "wall_s": round(res.wall_s, 3),
+            }
+            runs.append(row)
+            p99 = ttft.get("all", {}).get("p99", float("nan"))
+            print(f"serve_slo_{name}_x{mult},0,{p99:.4f}", flush=True)
+
+    # deterministic preemption twin: same requests, priority policy
+    # (forced preemptions) vs FCFS (none) — greedy sampling makes the
+    # per-request token streams scheduling-invariant, so any divergence
+    # is a spill/restore bug
+    twin_prompts = [rng.integers(1, cfg.vocab_size,
+                                 size=rng.integers(p_lo, p_hi + 1)
+                                 ).astype(np.int32)
+                    for _ in range(n_slots + 4)]
+    e_f, e_p = engines["fcfs"], engines.get("priority")
+    rids_f = [e_f.submit(p, gen_max) for p in twin_prompts]
+    e_f.run()
+    pre0 = e_p.counters["preemptions"]
+    rids_p = [e_p.submit(p, gen_max)
+              for p in twin_prompts[:n_slots + 1]]
+    for _ in range(3):
+        e_p.step()
+    rids_p += [e_p.submit(p, gen_max, priority=5)
+               for p in twin_prompts[n_slots + 1:]]
+    e_p.run()
+    twin = {
+        "preemptions": e_p.counters["preemptions"] - pre0,
+        "identical": all(
+            e_f.results[rf] == e_p.results[rp]
+            for rf, rp in zip(rids_f, rids_p)),
+    }
+    print(f"serve_slo_twin_identical,0,{int(twin['identical'])}",
+          flush=True)
+
+    # headline: at the top offered load, does the priority policy beat
+    # FCFS on high-priority p99 TTFT?
+    top = max(rate_mults)
+    hi = {r["policy"]: r["ttft"].get("pri5", {}).get("p99")
+          for r in runs if r["offered_x"] == top}
+    headline = {
+        "offered_x": top,
+        "fcfs_hi_p99_ttft_s": hi.get("fcfs"),
+        "priority_hi_p99_ttft_s": hi.get("priority"),
+        "priority_beats_fcfs": (
+            hi.get("priority") is not None and hi.get("fcfs") is not None
+            and hi["priority"] < hi["fcfs"]),
+    }
+    print(f"serve_slo_priority_beats_fcfs,0,"
+          f"{int(bool(headline['priority_beats_fcfs']))}", flush=True)
+
+    result = {
+        "trace": {"arch": "granite-3-2b (reduced)", "n_slots": n_slots,
+                  "chunk": chunk, "prompt_len": [p_lo, p_hi],
+                  "max_new": [4, gen_max], "duration_s": duration_s,
+                  "seed": seed, "hi_pri_frac": hi_pri_frac,
+                  "oversize_frac": 0.05,
+                  "capacity_req_s": round(capacity_req_s, 3),
+                  "rate_mults": list(rate_mults),
+                  "policies": list(policies)},
+        "runs": runs,
+        "token_identity_twin": twin,
+        "headline": headline,
+    }
+    with open(out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"wrote {out}")
+    return result
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", default="figures",
                     choices=("figures", "serve-engine", "moe-modes",
                              "serve-prefix", "serve-sharded",
-                             "paged-kernel"))
+                             "paged-kernel", "serve-slo"))
     ap.add_argument("--archs", default=None,
                     help="serve-prefix: comma-separated arch list "
                          "(default granite-3-2b,rwkv6-3b)")
@@ -629,8 +798,25 @@ def main() -> None:
     ap.add_argument("--gen-len", type=int, default=96)
     ap.add_argument("--no-compute-scale", action="store_true",
                     help="skip the d256 compute-dominated row (CI smoke)")
+    ap.add_argument("--slo-duration", type=float, default=4.0,
+                    help="serve-slo: seconds of offered load per run")
+    ap.add_argument("--slo-rates", default=None,
+                    help="serve-slo: comma-separated offered-load "
+                         "multiples of capacity (default 0.5,1.0,2.5)")
+    ap.add_argument("--policies", default=None,
+                    help="serve-slo: comma-separated policy list "
+                         "(default fcfs,priority,sjf)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+    if args.scenario == "serve-slo":
+        scenario_serve_slo(
+            policies=tuple((args.policies
+                            or "fcfs,priority,sjf").split(",")),
+            rate_mults=tuple(float(x) for x in (
+                args.slo_rates or "0.5,1.0,2.5").split(",")),
+            duration_s=args.slo_duration,
+            out=args.out or "BENCH_slo.json")
+        return
     if args.scenario == "moe-modes":
         scenario_moe_modes(modes=tuple((args.modes
                                         or "dense,exact,tiled,kernel"

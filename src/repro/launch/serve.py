@@ -155,12 +155,13 @@ def _trace(cfg, n_requests, pmin, pmax, gmin, gmax, seed,
 def _run_engine(cfg, params, reqs, *, mor, mor_mode, n_slots, max_len,
                 chunk=0, capacities=None, layout="paged",
                 prefix_cache=True, temperature=0.0, top_k=0,
-                sample_seed=0, mesh=None, obs=None):
+                sample_seed=0, mesh=None, obs=None, policy=None):
     eng = Engine(cfg, params, mor=mor, mor_mode=mor_mode, n_slots=n_slots,
                  max_len=max_len, chunk=chunk, capacities=capacities,
                  layout=layout, prefix_cache=prefix_cache,
                  temperature=temperature, top_k=top_k,
-                 sample_seed=sample_seed, mesh=mesh, obs=obs)
+                 sample_seed=sample_seed, mesh=mesh, obs=obs,
+                 policy=policy)
     # first pass compiles the two dispatch shapes; then take the best of
     # three timed passes — single-shot wall clock on a shared CPU is
     # ~2x noisy (the static baseline gets the same warmup + best-of).
@@ -274,6 +275,14 @@ def main(argv=None):
                     help="also run the dense engine; report token agreement")
     ap.add_argument("--baseline", action="store_true",
                     help="also run the static-batch path on the same trace")
+    ap.add_argument("--policy", default="fcfs",
+                    choices=("fcfs", "priority", "sjf"),
+                    help="admission/preemption policy (priority can "
+                         "spill lower classes; sjf = shortest remaining "
+                         "prefill first)")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="cap on prompt tokens per mixed dispatch "
+                         "(decode-vs-prefill knob; 0 = unlimited)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out-json", default=None)
     args = ap.parse_args(argv)
@@ -339,13 +348,18 @@ def main(argv=None):
         capacities = {k: args.capacity for k in mor_group_map(cfg)}
         report["static_capacity"] = args.capacity
 
+    from repro.serving.policy import get_policy
+    policy = get_policy(args.policy, prefill_budget=args.prefill_budget)
     eng, results, rep = _run_engine(
         cfg, params, reqs, mor=mor, mor_mode=args.mor, n_slots=args.batch,
         max_len=max_len, chunk=args.chunk, capacities=capacities,
         layout=args.layout, prefix_cache=args.prefix_cache,
         temperature=args.temperature, top_k=args.top_k,
-        sample_seed=args.sample_seed, mesh=mesh, obs=obs)
+        sample_seed=args.sample_seed, mesh=mesh, obs=obs, policy=policy)
     report.update(rep)
+    report["policy"] = args.policy
+    if args.prefill_budget:
+        report["prefill_budget"] = args.prefill_budget
     print(f"[serve] {cfg.name} mor={args.mor} layout={args.layout}: "
           f"{rep['tokens_per_s']:.1f} tok/s over {len(reqs)} requests "
           f"({rep['dispatches']} dispatches, "

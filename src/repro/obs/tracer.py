@@ -93,6 +93,8 @@ class Tracer:
         self._reqs: Dict[int, _Req] = {}
         self._events: List[_Event] = []
         self._n_dispatch = 0
+        self._n_preempt = 0
+        self._n_restore = 0
         self._dropped = 0
         # the tracer owns its latency histograms: a reset boundary (the
         # engine's reset_counters between timed passes) zeroes them too,
@@ -189,6 +191,23 @@ class Tracer:
                                else round(r.t_first_token - r.t_submit,
                                           6)}))
 
+    def on_preempt(self, rid: int, slot: int,
+                   t: Optional[float] = None) -> None:
+        """Request ``rid`` was spilled out of ``slot`` (pages moved to
+        host; it re-enters the waiting queue at its exact progress)."""
+        t = self.now() if t is None else t
+        self._n_preempt += 1
+        self._emit(_Event(f"preempt rid={rid}", t, 0.0, "requests",
+                          f"rid {rid}", {"rid": rid, "slot": slot}))
+
+    def on_restore(self, rid: int, slot: int,
+                   t: Optional[float] = None) -> None:
+        """Spilled request ``rid`` re-admitted into ``slot``."""
+        t = self.now() if t is None else t
+        self._n_restore += 1
+        self._emit(_Event(f"restore rid={rid}", t, 0.0, "requests",
+                          f"rid {rid}", {"rid": rid, "slot": slot}))
+
     def _emit(self, ev: _Event) -> None:
         if len(self._events) >= self.max_events:
             self._dropped += 1
@@ -215,6 +234,8 @@ class Tracer:
     def summary(self) -> Dict:
         out: Dict = {"n_dispatches": self._n_dispatch,
                      "n_requests": len(self._reqs),
+                     "n_preemptions": self._n_preempt,
+                     "n_restores": self._n_restore,
                      "events_dropped": self._dropped}
         if self._h_ttft is not None:
             out["ttft"] = self._h_ttft.summary()

@@ -28,12 +28,25 @@ traffic; this package embeds the MoR predictor in a serving loop that
                  the hot loop one shard_map'd step with a distributed
                  flash decode (one merge collective per attention
                  layer via ``distributed.collectives.flash_merge``).
+  policy       — pluggable admission/preemption policies (FCFS /
+                 priority classes / shortest-remaining-prefill + the
+                 decode-vs-prefill token-budget knob); the engine pairs
+                 ``PriorityPolicy`` victims with page-spill preemption
+                 (``PagedPool.spill``/``restore``) so high-priority
+                 arrivals take slots without anyone losing tokens.
+  loadgen      — seeded open-loop (Poisson) arrival generator driving
+                 ``Engine.submit`` in real time for SLO benchmarks
+                 (p50/p99 TTFT + ITL per policy under offered load).
   telemetry    — per-layer tile-liveness histograms + predictor hit/miss
                  counters + prefix-cache counters accumulated during
                  serving; feeds ``calibrate_capacity`` (liveness-quantile
                  provisioning of each layer's gather_matmul capacity).
 """
-from repro.serving.engine import Engine, Request
+from repro.serving.engine import Engine, Request, RequestRejected
+from repro.serving.policy import (FCFSPolicy, Policy, PriorityPolicy,
+                                  ShortestPrefillPolicy, get_policy)
 from repro.serving.telemetry import ServingTelemetry, calibrate_capacity
 
-__all__ = ["Engine", "Request", "ServingTelemetry", "calibrate_capacity"]
+__all__ = ["Engine", "Request", "RequestRejected", "Policy",
+           "FCFSPolicy", "PriorityPolicy", "ShortestPrefillPolicy",
+           "get_policy", "ServingTelemetry", "calibrate_capacity"]

@@ -45,12 +45,14 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import get_model
 from repro.serving import kv_pool
-from repro.serving.scheduler import Request, Scheduler
+from repro.serving.policy import Policy, get_policy
+from repro.serving.scheduler import (FREE, Request, RequestRejected,
+                                     Scheduler)
 from repro.serving.telemetry import (STAT_KEYS, ServingTelemetry,
                                      calibrate_capacity, export_telemetry,
                                      mor_group_map)
 
-__all__ = ["Engine", "Request"]
+__all__ = ["Engine", "Request", "RequestRejected"]
 
 
 class Engine:
@@ -71,7 +73,8 @@ class Engine:
                  prefix_cache: bool = True,
                  spare_pages: Optional[int] = None,
                  temperature: float = 0.0, top_k: int = 0,
-                 sample_seed: int = 0, mesh=None, obs=None):
+                 sample_seed: int = 0, mesh=None, obs=None,
+                 policy=None):
         api = get_model(cfg)
         assert api.prefill_chunk is not None, \
             f"{cfg.name} ({cfg.family}) has no serving chunk step"
@@ -107,7 +110,19 @@ class Engine:
             self.pool = None
             self.cache = kv_pool.init(cfg, n_slots, max_len, self.chunk)
             self._reset = jax.jit(kv_pool.reset_slots, donate_argnums=(0,))
-        self.scheduler = Scheduler(n_slots, self.chunk)
+        # scheduling policy (SLO layer): a Policy instance or a name
+        # ("fcfs" / "priority" / "sjf") — see repro.serving.policy
+        if isinstance(policy, str):
+            policy = get_policy(policy)
+        self.scheduler = Scheduler(n_slots, self.chunk, policy=policy)
+        self.policy: Policy = self.scheduler.policy
+        # preemption spills pages through host copies of the
+        # single-device pool leaves — gated off for the sharded layout
+        # (its pages live mesh-distributed) and the slotted baseline
+        self._can_preempt = (layout == "paged")
+        # spilled (preempted) requests' host-side page images, by rid;
+        # re-admission restores them into whatever slot frees up
+        self._spilled: Dict[int, kv_pool.SpillRecord] = {}
         self.telemetry = ServingTelemetry() if telemetry else None
         self.temperature = float(temperature)
         self.top_k = int(top_k)
@@ -150,7 +165,10 @@ class Engine:
         self._tok_log: List = []
         self.results: Dict[int, List[int]] = {}
         self.counters = {"prefill_tokens": 0, "decode_tokens": 0,
-                         "dispatches": 0, "wall_s": 0.0}
+                         "dispatches": 0, "wall_s": 0.0,
+                         "preemptions": 0, "requests_rejected": 0}
+        # rejection reasons -> counts (mirrored into the obs registry)
+        self.rejections: Dict[str, int] = {}
         # last host-side read of the device metrics block (set by
         # _flush_obs; surfaced in report()["obs"])
         self._last_device_metrics: Optional[Dict] = None
@@ -246,6 +264,18 @@ class Engine:
                           ("layout", "kind"))
         for kind, v in self.scheduler.dispatch_kinds.items():
             csd.set(v, layout=lay, kind=kind)
+        crj = reg.counter("repro_requests_rejected_total",
+                          "requests rejected at submit validation",
+                          ("layout", "reason"))
+        for reason, v in self.rejections.items():
+            crj.set(v, layout=lay, reason=reason)
+        if self.pool is not None:
+            cpre = reg.counter(
+                "repro_preemptions_total",
+                "slot preemptions: page spills to host and restores",
+                ("layout", "event"))
+            for k, v in self.pool.spill_events.items():
+                cpre.set(v, layout=lay, event=k)
         if self.pool is not None:
             cal = reg.counter(
                 "repro_pool_alloc_events_total",
@@ -399,44 +429,134 @@ class Engine:
         return nxt, new_pending, cache, aux, metrics
 
     # -- request API -------------------------------------------------------
+    def _reject(self, reason: str, msg: str) -> None:
+        self.counters["requests_rejected"] += 1
+        self.rejections[reason] = self.rejections.get(reason, 0) + 1
+        raise RequestRejected(reason, msg)
+
     def submit(self, prompt, max_new_tokens: int = 16,
-               on_token: Optional[Callable[[int, int], None]] = None) -> int:
+               on_token: Optional[Callable[[int, int], None]] = None,
+               priority: int = 0) -> int:
         """Queue a request; returns its rid.  ``on_token(rid, token)``
         is the detokenizing-stream hook: invoked for each generated
         token IN ORDER when the engine flushes its device-resident token
         log (end of ``run`` by default, every ``stream_interval``
-        dispatches when opted in) — streaming adds no device syncs."""
+        dispatches when opted in) — streaming adds no device syncs.
+        ``priority`` feeds the scheduling policy (higher admits first;
+        under ``PriorityPolicy`` it may preempt lower classes).
+
+        Unservable requests raise ``RequestRejected`` (and count into
+        ``requests_rejected``) BEFORE touching the queue — arrival-
+        driven load records the rejection and keeps serving, where the
+        old bare ``assert`` vanished under ``python -O`` and took the
+        whole engine down."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
-        assert prompt.size >= 1
-        assert prompt.size + max_new_tokens + 1 <= self.max_len, \
-            "request exceeds the slot pool's max_len"
+        if prompt.size < 1:
+            self._reject("empty_prompt", "prompt must have >= 1 token")
+        if max_new_tokens < 1:
+            # max_new_tokens=0 used to slip through and STILL emit one
+            # token (prompt completion always samples) — reject upfront
+            self._reject("nonpositive_max_new_tokens",
+                         f"max_new_tokens={max_new_tokens} must be >= 1")
+        if prompt.size + max_new_tokens + 1 > self.max_len:
+            self._reject("oversize",
+                         f"prompt {prompt.size} + max_new "
+                         f"{max_new_tokens} exceeds max_len "
+                         f"{self.max_len}")
         rid = self._next_rid
         self._next_rid += 1
         if on_token is not None:
             self._stream_cbs[rid] = on_token
         if self._tr is not None:
             self._tr.on_submit(rid)
-        self.scheduler.add(Request(rid, prompt, max_new_tokens))
+        self.scheduler.add(Request(rid, prompt, max_new_tokens,
+                                   priority=priority))
         return rid
 
-    def _admit_match(self, slot: int, req: Request) -> int:
-        return self.pool.admit(slot, req.prompt)
+    # -- preemption --------------------------------------------------------
+    def _preempt(self, slot: int) -> None:
+        """Spill ``slot``'s pages to host and requeue its request at its
+        exact progress.  The slot's device-resident pending token (its
+        last sample — about to be consumed when decode resumes) rides in
+        the spill record; ``_place`` splices it back on restore."""
+        req = self.scheduler.slots[slot].req
+        self.cache, rec = self.pool.spill(slot, self.cache)
+        rec.rid = req.rid
+        rec.last_token = int(jax.device_get(self._pending[slot]))
+        self._spilled[req.rid] = rec
+        self.scheduler.preempt(slot)
+        self.counters["preemptions"] += 1
+        if self._tr is not None:
+            self._tr.on_preempt(req.rid, slot)
+
+    def _place(self, slot: int, entry) -> Optional[int]:
+        """Scheduler admission callback: attach ``entry`` to ``slot``
+        through the paged pool — prefix-cache admission for fresh
+        requests, spill-record restore for preempted resumes.  Returns
+        the prompt offset to start from, or None to DEFER the admission
+        (pool exhausted — the engine may spill a victim and retry)."""
+        if entry.resume:
+            rec = self._spilled[entry.req.rid]
+            try:
+                self.cache = self.pool.restore(slot, rec, self.cache)
+            except kv_pool.PoolExhausted:
+                return None
+            del self._spilled[entry.req.rid]
+            self._pending = self._pending.at[slot].set(rec.last_token)
+            if self._tr is not None:
+                self._tr.on_restore(entry.req.rid, slot)
+            return entry.offset
+        try:
+            return self.pool.admit(slot, entry.req.prompt)
+        except kv_pool.PoolExhausted:
+            return None
 
     def step(self) -> List[int]:
-        """One scheduler iteration: admit, dispatch, ingest.  Returns the
-        rids that finished this step."""
-        t0 = time.time()
-        admitted = self.scheduler.admit(
-            self._admit_match if self.pool is not None else None)
+        """One scheduler iteration: admit (preempting victims when the
+        policy or pool pressure demands it), dispatch, ingest.  Returns
+        the rids that finished this step."""
+        t0 = time.perf_counter()
+        sched = self.scheduler
+        # policy-driven preemption: when no slot is free, the policy may
+        # evict a running victim so the top waiting request (after its
+        # ordering) gets served now — slots are the scarce resource
+        if self._can_preempt and sched.waiting and \
+                not any(s.state is FREE for s in sched.slots):
+            self.policy.order(sched.waiting)
+            victim = self.policy.select_victim(sched.slots,
+                                               sched.waiting[0])
+            if victim is not None:
+                self._preempt(victim)
+        place = self._place if self.pool is not None else None
+        admitted = sched.admit(place)
+        if self.pool is not None:
+            # admission deferred on pool pressure: spill victims (their
+            # exclusive pages move to host) and retry — bounded, never
+            # touching slots admitted THIS step
+            for _ in range(self.n_slots):
+                if not sched.deferred or not self._can_preempt:
+                    break
+                victim = self.policy.spill_victim(sched.slots,
+                                                  exclude=admitted)
+                if victim is None:
+                    break
+                self._preempt(victim)
+                admitted += sched.admit(place)
         if admitted and self.pool is None:
             mask = np.zeros((self.n_slots,), bool)
             mask[admitted] = True
             self.cache = self._reset(self.cache, jnp.asarray(mask))
-        kind = self.scheduler.next_dispatch()
+        kind = sched.peek_kind()
         if kind is None:
+            if sched.waiting:
+                # nothing runs AND nothing can be admitted: without a
+                # victim to spill this can never make progress
+                raise kv_pool.PoolExhausted(
+                    "no waiting request can be admitted and nothing is "
+                    "running — pool exhausted with no preemption victim")
             return []
         tokens, n_valid, use_pending, emits, finishing, prefilling = \
-            self.scheduler.build_batch(kind)
+            sched.build_batch(kind)
         ops = None
         if self.pool is not None:
             # pre-dispatch: snapshot recurrent state of slots whose
@@ -446,15 +566,37 @@ class Engine:
             # are still intact NOW — after this dispatch they aren't),
             # then allocate / copy-on-write every page this dispatch
             # will touch; the resulting device edits ride into the
-            # fused step as ``ops``
-            for s, off in finishing:
-                self.pool.maybe_snapshot(s, self.scheduler.slots[s].req.prompt,
-                                         off)
-            for s, off, take in prefilling:
-                self.pool.maybe_publish_prewrap(
-                    s, self.scheduler.slots[s].req.prompt, off, take)
-            self.pool.plan_writes(n_valid)
+            # fused step as ``ops``.  Pool exhaustion mid-plan spills a
+            # victim and REBUILDS the batch (the victim may have been in
+            # it); the hooks are idempotent and ``plan_writes`` resumes
+            # past blocks already made exclusive, so retrying is safe.
+            for _ in range(self.n_slots + 1):
+                for s, off in finishing:
+                    self.pool.maybe_snapshot(
+                        s, sched.slots[s].req.prompt, off)
+                for s, off, take in prefilling:
+                    self.pool.maybe_publish_prewrap(
+                        s, sched.slots[s].req.prompt, off, take)
+                try:
+                    self.pool.plan_writes(n_valid)
+                    break
+                except kv_pool.PoolExhausted:
+                    victim = (self.policy.spill_victim(sched.slots,
+                                                       exclude=admitted)
+                              if self._can_preempt else None)
+                    if victim is None:
+                        raise
+                    self._preempt(victim)
+                    kind = sched.peek_kind()
+                    if kind is None:        # spilled the whole batch
+                        return []
+                    (tokens, n_valid, use_pending, emits, finishing,
+                     prefilling) = sched.build_batch(kind)
+            else:
+                raise kv_pool.PoolExhausted(
+                    "dispatch cannot fit even after spilling victims")
             self.cache, ops = self.pool.drain(self.cache)
+        sched.dispatch_kinds[kind] += 1
         # decode riders in a mixed dispatch: counted at BUILD time (feed()
         # below flips prefill->decode / frees finished slots)
         ndec = int(use_pending.sum()) if kind == "mixed" else 0
@@ -509,7 +651,7 @@ class Engine:
             # decode slots riding in a mixed dispatch contribute 1 each
             self.counters["decode_tokens"] += ndec
             self.counters["prefill_tokens"] += nv_total - ndec
-        self.counters["wall_s"] += time.time() - t0
+        self.counters["wall_s"] += time.perf_counter() - t0
         if self._tr is not None:
             self._tr.on_dispatch(
                 kind, tr_t0, self._tr.now(), admitted=tr_admitted,
@@ -527,7 +669,9 @@ class Engine:
         observability on, the device metrics block and the tracer reset
         with them (registry mirrors follow at the next flush)."""
         self.counters = {"prefill_tokens": 0, "decode_tokens": 0,
-                         "dispatches": 0, "wall_s": 0.0}
+                         "dispatches": 0, "wall_s": 0.0,
+                         "preemptions": 0, "requests_rejected": 0}
+        self.rejections = {}
         self.scheduler.chunks_skipped = 0
         self.scheduler.tokens_skipped = 0
         self.scheduler.dispatch_kinds = {"mixed": 0, "decode": 0}
@@ -538,6 +682,15 @@ class Engine:
             self._mblock = self._mspec.init(n_rows)
         if self._tr is not None:
             self._tr.reset()
+
+    def drain(self) -> None:
+        """Flush boundary without draining the queue: deliver the token
+        log to host (+ stream callbacks) and push telemetry/obs mirrors.
+        Open-loop drivers stepping the engine themselves call this once
+        the arrival stream ends (``run`` does it implicitly)."""
+        self._flush_tokens()
+        self._flush_telemetry()
+        self._flush_obs()
 
     def run(self, requests=None,
             stream_interval: int = 0) -> Dict[int, List[int]]:

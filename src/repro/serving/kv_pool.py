@@ -39,6 +39,7 @@ exactly this invariant.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -48,6 +49,13 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import get_model
 from repro.serving.prefix_cache import PrefixCache
+
+
+class PoolExhausted(RuntimeError):
+    """A paged pool ran out of pages (after prefix-cache eviction).
+    Recoverable under preemption: the engine spills a victim slot to
+    the host pool and retries — admission paths raise it with the pool
+    FULLY rolled back (no leaked refs, no half-attached slot)."""
 
 
 def ring_cfg(cfg: ModelConfig, chunk: int) -> ModelConfig:
@@ -475,7 +483,7 @@ class BlockAllocator:
                       if cur != 0 and self.n_shards > 1 else None)
             new = alloc(prefer=prefer)
             if new is None:
-                raise RuntimeError("paged KV pool exhausted")
+                raise PoolExhausted("paged KV pool exhausted")
             if cur == 0:
                 fresh.append(new)
             else:
@@ -526,6 +534,75 @@ class BlockAllocator:
                 owned[self.shard_of(p)] += 1
         assert np.array_equal(owned, self.in_use), \
             f"per-shard in_use {self.in_use} != owned {owned}"
+
+
+# ==========================================================================
+# spill records: host-side page images for preempted slots
+# ==========================================================================
+
+# deterministic kv-node leaf order shared by the spill gather and the
+# restore scatter (k and v share shape+dtype, so a stable walk order —
+# not just stable shapes — is what keeps the flat host lists aligned)
+_KV_KEYS = ("k", "v", "c_kv", "k_pe", "pos")
+
+
+@dataclass
+class SpillRecord:
+    """Host-side image of a preempted slot — everything ``restore``
+    needs to resume the request in ANY slot later: the slot's position,
+    its last sampled token (the engine splices it back into its
+    device-resident pending vector), the content of its exclusively
+    owned pages (copied to host), and the ids of its SHARED pages
+    (prefix-trie / multi-slot pages are retained by reference instead
+    of copied — the trie stays consistent and restore just points the
+    new block table back at them)."""
+    rid: int = -1
+    pos: int = 0
+    last_token: int = 0
+    kv_kept: List[Tuple[int, int]] = field(default_factory=list)
+    kv_blocks: List[int] = field(default_factory=list)
+    kv_host: List[np.ndarray] = field(default_factory=list)
+    st_host: List[np.ndarray] = field(default_factory=list)
+    nbytes: int = 0
+
+
+def _scatter_spill(cache: Dict, kv_ids, kv_host, st_page, st_host) -> Dict:
+    """Upload a spill record's host page images into freshly allocated
+    pool pages (jit-safe, cache donated — the restore path's one device
+    call).  ``kv_host``/``st_host`` are flat tuples in the same walk
+    order ``PagedPool._gather_kv_pages``/``_gather_state`` produced;
+    empty tuples skip that half entirely (static pytree structure)."""
+    kv_it = iter(kv_host)
+
+    def kv(node):
+        node = dict(node)
+        for key in _KV_KEYS:
+            if key not in node:
+                continue
+            v = node[key]
+            if isinstance(v, tuple):
+                node[key] = tuple(a.at[kv_ids].set(next(kv_it))
+                                  for a in v)
+            else:
+                node[key] = v.at[:, kv_ids].set(next(kv_it))
+        return node
+
+    st_it = iter(st_host)
+
+    def stl(a):
+        return a.at[:, st_page].set(next(st_it))
+
+    out = {}
+    for k, v in cache.items():
+        if k in _TABLE_KEYS:
+            out[k] = v
+            continue
+        if len(kv_host):
+            v = map_kv_nodes(v, kv)
+        if len(st_host):
+            v = map_state_leaves(v, stl)
+        out[k] = v
+    return out
 
 
 # ==========================================================================
@@ -611,6 +688,14 @@ class PagedPool:
         self._st_reset: set = set()
         self._st_copies: List[Tuple[int, int]] = []
         self._dirty = False
+        # pages held alive BY REFERENCE for spilled (preempted) requests
+        # — shared pages are not copied to host, their SpillRecord just
+        # retains them ({page: n_holds}; see ``spill``/``restore``)
+        self._spill_kv: Dict[int, int] = {}
+        self.spill_events = {"spills": 0, "restores": 0,
+                             "spilled_bytes": 0}
+        self._scatter = (jax.jit(_scatter_spill, donate_argnums=(0,))
+                         if mesh is None else None)
         self.kv_copy_max = max(1, n_slots * (chunk // page + 2))
         # restores + snapshots per dispatch rarely exceed the slot
         # count; bursts overflow into extra pre-step apply rounds
@@ -820,7 +905,12 @@ class PagedPool:
     # ``prefer`` pins the allocation (and, when eviction is needed to
     # satisfy it, the eviction hunt) to one mesh shard: COW and
     # snapshot-restore destinations must live on their source's shard
-    def _kv_alloc(self, prefer: Optional[int] = None) -> Optional[int]:
+    # ``reset=False`` (spill restore) allocates a page whose CONTENT is
+    # about to be uploaded from host — queuing the usual tag reset would
+    # wipe that upload at the next dispatch, so the pending reset (if a
+    # rolled-back admission left one behind on this id) is discarded
+    def _kv_alloc(self, prefer: Optional[int] = None,
+                  reset: bool = True) -> Optional[int]:
         p = self.kv.alloc(prefer=prefer)
         while p is None and self.prefix is not None:
             # evict only entries whose page actually frees (an entry
@@ -843,11 +933,15 @@ class PagedPool:
                 self._drop_snap(e)
             p = self.kv.alloc(prefer=prefer)
         if p is not None:
-            self._kv_reset.add(p)
+            if reset:
+                self._kv_reset.add(p)
+            else:
+                self._kv_reset.discard(p)
             self._dirty = True
         return p
 
-    def _st_alloc(self, prefer: Optional[int] = None) -> Optional[int]:
+    def _st_alloc(self, prefer: Optional[int] = None,
+                  reset: bool = True) -> Optional[int]:
         p = self.st.alloc(prefer=prefer)
         while p is None and self.prefix is not None:
             # a pinned snapshot (mid-restore this step) has spage ref
@@ -860,7 +954,10 @@ class PagedPool:
             self._drop_snap(e)
             p = self.st.alloc(prefer=prefer)
         if p is not None:
-            self._st_reset.add(p)
+            if reset:
+                self._st_reset.add(p)
+            else:
+                self._st_reset.discard(p)
             self._dirty = True
         return p
 
@@ -912,8 +1009,23 @@ class PagedPool:
                       if snap is not None and self.n_shards > 1 else None)
             new = self._st_alloc(prefer=prefer)
             if new is None:
-                raise RuntimeError("paged state pool exhausted")
-            self.st.drop(int(self.st.table[slot, 0]))
+                # ROLL BACK before surfacing the failure: the shared
+                # prefix pages were already retained into the slot's
+                # table and the snapshot pinned — leaving them leaks
+                # refcounts and half-attaches the slot (the old
+                # RuntimeError path did exactly that).  After rollback
+                # the failure is deferrable: the scheduler keeps the
+                # request queued and the engine may spill a victim.
+                if snap is not None:
+                    self.st.drop(snap.spage)     # release the admit pin
+                for i in range(len(shared_pages)):
+                    pg = int(self.kv.table[slot, i])
+                    self.kv.table[slot, i] = 0
+                    self.kv.drop(pg)
+                raise PoolExhausted("paged state pool exhausted")
+            old = int(self.st.table[slot, 0])
+            if old:
+                self.st.drop(old)
             self.st.table[slot, 0] = new
             if snap is not None:
                 self._push_st_copy(snap.spage, new)
@@ -1064,6 +1176,168 @@ class PagedPool:
         self.pos[slot] = 0
         self._dirty = True
 
+    # -- preemption: spill / restore ---------------------------------------
+    def _gather_kv_pages(self, cache: Dict, ids: List[int]
+                         ) -> List[np.ndarray]:
+        """Device -> host copy of kv-pool pages ``ids`` as a flat list
+        in the fixed ``_KV_KEYS`` walk order (``_scatter_spill`` replays
+        the identical walk on restore)."""
+        out: List[np.ndarray] = []
+        idx = np.asarray(ids, np.int32)
+
+        def kv(node):
+            # walk order must match _scatter_spill exactly — k and v
+            # share shape+dtype so a swap would corrupt silently
+            for key in _KV_KEYS:
+                if key not in node:
+                    continue
+                v = node[key]
+                if isinstance(v, tuple):
+                    out.extend(np.asarray(a[idx]) for a in v)
+                else:
+                    out.append(np.asarray(v[:, idx]))
+            return node
+
+        for k, v in cache.items():
+            if k in _TABLE_KEYS:
+                continue
+            map_kv_nodes(v, kv)
+        return out
+
+    def _gather_state(self, cache: Dict, spage: int) -> List[np.ndarray]:
+        out: List[np.ndarray] = []
+
+        def stl(a):
+            out.append(np.asarray(a[:, spage]))
+            return a
+
+        for k, v in cache.items():
+            if k in _TABLE_KEYS:
+                continue
+            map_state_leaves(v, stl)
+        return out
+
+    def spill(self, slot: int, cache: Dict
+              ) -> Tuple[Dict, SpillRecord]:
+        """Preempt ``slot``: move its cache content off the device pool
+        so the pages can serve other requests, returning a record
+        ``restore`` can replay into ANY free slot later.
+
+        Shared pages (prefix trie / other slots hold refs) are NOT
+        copied — the record retains them by reference, so a restore is
+        free for the prefix-hit part of the sequence and the trie stays
+        consistent throughout.  Exclusive pages and the slot's recurrent
+        state are copied to host; pending COW/snapshot edits are flushed
+        FIRST so the copies read post-edit content.  The slot keeps its
+        state page attached (every live slot always owns one — admission
+        cycles it), only the CONTENT moves."""
+        assert self.mesh is None, \
+            "spill/restore is single-device (layout='paged')"
+        cache = self.flush(cache)
+        rec = SpillRecord(pos=int(self.pos[slot]))
+        if self.has_kv:
+            copied: List[Tuple[int, int]] = []
+            for b in np.nonzero(self.kv.table[slot])[0]:
+                pg = int(self.kv.table[slot, b])
+                if self.kv.ref[pg] > 1:
+                    self.kv.retain(pg)
+                    self._spill_kv[pg] = self._spill_kv.get(pg, 0) + 1
+                    rec.kv_kept.append((int(b), pg))
+                else:
+                    copied.append((int(b), pg))
+            if copied:
+                rec.kv_blocks = [b for b, _ in copied]
+                rec.kv_host = self._gather_kv_pages(
+                    cache, [pg for _, pg in copied])
+            self.kv.release_slot(slot)
+        if self.has_state:
+            rec.st_host = self._gather_state(
+                cache, int(self.st.table[slot, 0]))
+        self.pos[slot] = 0
+        self._dirty = True
+        rec.nbytes = int(sum(a.nbytes for a in rec.kv_host + rec.st_host))
+        self.spill_events["spills"] += 1
+        self.spill_events["spilled_bytes"] += rec.nbytes
+        return cache, rec
+
+    def restore(self, slot: int, rec: SpillRecord, cache: Dict) -> Dict:
+        """Re-admit a spilled request into (free) ``slot``: allocate
+        fresh pages for the copied content, re-attach the
+        retained-by-reference shared pages, upload the host images in
+        one jitted donated scatter, and restore the position.  All
+        allocation happens BEFORE any table mutation — on exhaustion the
+        fresh pages are returned and ``PoolExhausted`` surfaces with the
+        pool unchanged (the engine can spill another victim and retry)."""
+        assert self.mesh is None
+        fresh: List[int] = []
+        for _ in rec.kv_blocks:
+            p = self._kv_alloc(reset=False)
+            if p is None:
+                for q in fresh:
+                    self.kv.unalloc(q)
+                raise PoolExhausted("paged KV pool exhausted (restore)")
+            fresh.append(p)
+        st_new = 0
+        if self.has_state:
+            st_new = self._st_alloc(reset=False)
+            if st_new is None:
+                for q in fresh:
+                    self.kv.unalloc(q)
+                raise PoolExhausted(
+                    "paged state pool exhausted (restore)")
+        if self.has_kv:
+            assert not self.kv.table[slot].any(), "restore into live slot"
+            for b, pg in rec.kv_kept:
+                # the spill hold becomes the table's ref — no net change
+                self.kv.table[slot, b] = pg
+                n = self._spill_kv[pg] - 1
+                if n:
+                    self._spill_kv[pg] = n
+                else:
+                    del self._spill_kv[pg]
+            for b, p in zip(rec.kv_blocks, fresh):
+                self.kv.table[slot, b] = p
+        if self.has_state:
+            old = int(self.st.table[slot, 0])
+            self.st.table[slot, 0] = st_new
+            if old:
+                self.st.drop(old)
+        self.pos[slot] = rec.pos
+        self._dirty = True
+        if rec.kv_host or rec.st_host:
+            cache = self._scatter(
+                cache, jnp.asarray(fresh or [0], jnp.int32),
+                tuple(rec.kv_host), st_new, tuple(rec.st_host))
+        self.spill_events["restores"] += 1
+        return cache
+
+    def external_refs(self, table: str = "kv") -> Dict[int, int]:
+        """Refcount holders OUTSIDE the block tables — prefix-trie
+        retains, pending-copy source pins, and spilled requests' kept
+        pages — keyed by page id, in the shape
+        ``BlockAllocator.check`` expects (invariant audits in tests)."""
+        refs: Dict[int, int] = {}
+
+        def add(p: int, n: int = 1) -> None:
+            if p:
+                refs[p] = refs.get(p, 0) + n
+
+        if table == "kv":
+            if self.prefix is not None:
+                for p, n in self.prefix.page_refs().items():
+                    add(p, n)
+            for s, _ in self._kv_copies:
+                add(s)
+            for p, n in self._spill_kv.items():
+                add(p, n)
+        else:
+            if self.prefix is not None:
+                for p, n in self.prefix.state_refs().items():
+                    add(p, n)
+            for s, _ in self._st_copies:
+                add(s)
+        return refs
+
     # -- reporting ----------------------------------------------------------
     def alloc_events(self) -> Dict:
         """Cumulative allocator alloc/free event counts per table."""
@@ -1081,6 +1355,8 @@ class PagedPool:
         events); occupancy/hiwater accounting is left intact."""
         for k in self.counters:
             self.counters[k] = 0
+        for k in self.spill_events:
+            self.spill_events[k] = 0
         for al in (self.kv, self.st):
             if al is not None:
                 al.events = {"alloc": 0, "free": 0}
@@ -1109,6 +1385,9 @@ class PagedPool:
         }
         if self.has_kv:
             rep["pages_in_use"] = int(np.sum(self.kv.ref > 0) - 1)
+        if any(self.spill_events.values()):
+            rep.update({f"spill_{k}": v
+                        for k, v in self.spill_events.items()})
         if self.n_shards > 1:
             rep["sharding"] = self.shard_report()
         if self.prefix is not None:

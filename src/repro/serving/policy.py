@@ -1,0 +1,130 @@
+"""Admission / preemption policies for the serving scheduler.
+
+The scheduler stays count-based (it never sees token values) — a
+``Policy`` only reorders the waiting queue, caps how many prefill
+tokens a mixed dispatch may consume, and picks preemption victims.
+Everything it reads (priorities, offsets, generated counts) is host
+bookkeeping, so policies plug in without touching the compiled step.
+
+Three built-ins:
+
+  * ``FCFSPolicy`` — arrival order, never preempts (the PR 2 baseline
+    behaviour, now explicit).
+  * ``PriorityPolicy`` — higher ``Request.priority`` admits first, and
+    a waiting request may PREEMPT a strictly-lower-priority running
+    slot (the engine spills the victim's pages to host and requeues it
+    at its exact progress — no tokens lost).
+  * ``ShortestPrefillPolicy`` — shortest-remaining-prefill first (SJF
+    on the work the slot pool actually serializes); preempted resumes
+    (zero remaining prefill) naturally sort to the front.
+
+All three share the decode-vs-prefill knob: ``prefill_budget`` > 0
+caps the prompt tokens one MIXED dispatch may consume, so decode
+riders keep their inter-token latency while long prompts stream
+through in sub-chunk slices (0 = unlimited).
+
+All three also share ``spill_victim`` — the pool-pressure fallback the
+engine consults when a dispatch or admission exhausts the paged pool:
+lowest priority first, then the most remaining work (it blocks a slot
+longest), then the latest arrival.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+__all__ = ["Policy", "FCFSPolicy", "PriorityPolicy",
+           "ShortestPrefillPolicy", "get_policy"]
+
+
+def _remaining(slot_or_entry) -> int:
+    """Tokens of work left: unconsumed prompt + ungenerated tokens."""
+    req = slot_or_entry.req
+    return (max(0, len(req.prompt) - slot_or_entry.offset)
+            + max(0, req.max_new_tokens - slot_or_entry.n_generated))
+
+
+class Policy:
+    """Base policy: FCFS ordering, no priority preemption, shared
+    pool-pressure victim selection.  Subclass hooks:
+
+      ``order(waiting)``          — stable in-place sort of the waiting
+                                    queue (entries carry .req/.offset/
+                                    .n_generated/.seq).
+      ``select_victim(slots, e)`` — running slot to preempt so waiting
+                                    entry ``e`` can be admitted, or
+                                    None (no voluntary preemption).
+      ``spill_victim(slots, exclude)`` — running slot to spill when the
+                                    paged pool is exhausted, or None.
+    """
+
+    name = "fcfs"
+
+    def __init__(self, prefill_budget: int = 0):
+        assert prefill_budget >= 0
+        self.prefill_budget = int(prefill_budget)
+
+    def order(self, waiting: List) -> None:
+        pass                                 # arrival order (stable)
+
+    def select_victim(self, slots: Sequence, entry) -> Optional[int]:
+        return None
+
+    def spill_victim(self, slots: Sequence,
+                     exclude: Sequence[int] = ()) -> Optional[int]:
+        cand = [s for s, sl in enumerate(slots)
+                if sl.req is not None and s not in set(exclude)]
+        if not cand:
+            return None
+        # lowest priority, then most remaining work, then latest seq
+        return max(cand, key=lambda s: (-slots[s].req.priority,
+                                        _remaining(slots[s]),
+                                        slots[s].seq))
+
+
+class FCFSPolicy(Policy):
+    name = "fcfs"
+
+
+class PriorityPolicy(Policy):
+    """Strict priority classes: the waiting queue sorts by descending
+    ``Request.priority`` (arrival order within a class), and a waiting
+    request preempts the lowest-priority running slot whose priority is
+    STRICTLY below its own — equal priorities never preempt each other,
+    so there is no ping-pong."""
+
+    name = "priority"
+
+    def order(self, waiting: List) -> None:
+        waiting.sort(key=lambda e: (-e.req.priority, e.seq))
+
+    def select_victim(self, slots: Sequence, entry) -> Optional[int]:
+        cand = [s for s, sl in enumerate(slots)
+                if sl.req is not None
+                and sl.req.priority < entry.req.priority]
+        if not cand:
+            return None
+        return max(cand, key=lambda s: (-slots[s].req.priority,
+                                        _remaining(slots[s]),
+                                        slots[s].seq))
+
+
+class ShortestPrefillPolicy(Policy):
+    """Shortest-remaining-prefill first.  Preempted resumes have zero
+    remaining prefill and sort to the front — a spilled request gets
+    its slot back before new long prompts cut in."""
+
+    name = "sjf"
+
+    def order(self, waiting: List) -> None:
+        waiting.sort(key=lambda e: (max(0, len(e.req.prompt) - e.offset),
+                                    e.seq))
+
+
+_POLICIES = {p.name: p for p in (FCFSPolicy, PriorityPolicy,
+                                 ShortestPrefillPolicy)}
+
+
+def get_policy(name: str, prefill_budget: int = 0) -> Policy:
+    assert name in _POLICIES, \
+        f"unknown policy {name!r} (have {sorted(_POLICIES)})"
+    return _POLICIES[name](prefill_budget=prefill_budget)

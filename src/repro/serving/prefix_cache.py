@@ -164,6 +164,27 @@ class PrefixCache:
     def n_entries(self) -> Tuple[int, int]:
         return len(self.pages), len(self.snaps)
 
+    def page_refs(self) -> Dict[int, int]:
+        """KV-pool refcounts the trie is responsible for, per page id:
+        one per page entry plus one per snapshot that lists the page in
+        its shared-attention ring.  Feed into
+        ``BlockAllocator.check(external_refs=...)`` to audit that every
+        non-table ref is accounted for (no leak, no over-release)."""
+        refs: Dict[int, int] = {}
+        for e in self.pages.values():
+            refs[e.page] = refs.get(e.page, 0) + 1
+        for s in self.snaps.values():
+            for pg in s.kv_pages:
+                refs[pg] = refs.get(pg, 0) + 1
+        return refs
+
+    def state_refs(self) -> Dict[int, int]:
+        """State-pool refcounts the trie holds (one per snapshot)."""
+        refs: Dict[int, int] = {}
+        for s in self.snaps.values():
+            refs[s.spage] = refs.get(s.spage, 0) + 1
+        return refs
+
     def stats(self) -> Dict[str, int]:
         """Trie introspection for the obs registry: entry counts, how
         deep the cached chains go, and the token span they cover."""

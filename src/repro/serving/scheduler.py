@@ -9,16 +9,36 @@ while every decoding slot contributes its one pending token in the same
 all remaining work is decode, dispatches shrink to (B, 1).  Finished
 sequences are evicted immediately and their slot is recycled for the
 next waiting request mid-flight.
+
+Admission order, the decode-vs-prefill token budget, and preemption
+victims are delegated to a pluggable ``policy.Policy`` (FCFS baseline /
+priority classes / shortest-remaining-prefill).  ``preempt(slot)``
+requeues a RUNNING request at its exact progress (offset + generated
+count); the engine pairs it with ``PagedPool.spill``/``restore`` so a
+preempted request never loses a token.
 """
 from __future__ import annotations
 
-from collections import deque
-from dataclasses import dataclass
-from typing import Deque, List, Optional, Tuple
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.serving.policy import FCFSPolicy, Policy
+
 FREE, PREFILL, DECODE = "free", "prefill", "decode"
+
+
+class RequestRejected(ValueError):
+    """A request the engine can never serve (oversize prompt, empty
+    prompt, nonpositive max_new_tokens) — raised by ``Engine.submit``
+    at validation time, BEFORE the request enters the queue, so
+    arrival-driven load survives bad requests (the bare ``assert`` it
+    replaces vanished under ``python -O`` and killed the engine)."""
+
+    def __init__(self, reason: str, msg: str):
+        super().__init__(msg)
+        self.reason = reason
 
 
 @dataclass
@@ -26,6 +46,19 @@ class Request:
     rid: int
     prompt: np.ndarray                  # (P,) int32 token ids
     max_new_tokens: int = 16
+    priority: int = 0                   # higher admits first (policy)
+
+
+@dataclass
+class PendingEntry:
+    """One waiting-queue item: a fresh request, or a preempted one
+    carrying its exact resume point (prompt offset + generated count —
+    the engine restores its spilled pages and pending token)."""
+    req: Request
+    offset: int = 0
+    n_generated: int = 0
+    resume: bool = False
+    seq: int = 0                        # arrival order (stable ties)
 
 
 @dataclass
@@ -34,6 +67,7 @@ class _Slot:
     req: Optional[Request] = None
     offset: int = 0                     # prompt tokens already prefilled
     n_generated: int = 0                # tokens emitted so far
+    seq: int = 0                        # arrival seq of the occupant
 
     # NOTE: the scheduler never sees token VALUES — admission, chunking
     # and eviction are all count-based (greedy sampling to a fixed
@@ -43,12 +77,18 @@ class _Slot:
 
 
 class Scheduler:
-    def __init__(self, n_slots: int, chunk: int):
+    def __init__(self, n_slots: int, chunk: int,
+                 policy: Optional[Policy] = None):
         assert n_slots >= 1 and chunk >= 1
         self.n_slots = n_slots
         self.chunk = chunk
+        self.policy = policy or FCFSPolicy()
         self.slots = [_Slot() for _ in range(n_slots)]
-        self.waiting: Deque[Request] = deque()
+        self.waiting: List[PendingEntry] = []
+        self._seq = 0
+        # set by ``admit`` when the placement callback deferred (pool
+        # exhausted) — the engine may spill a victim and retry
+        self.deferred = False
         # prefix-cache accounting (admission-time hits shrink a
         # request's remaining prefill; see ``admit``)
         self.chunks_skipped = 0
@@ -59,35 +99,67 @@ class Scheduler:
 
     # -- admission ---------------------------------------------------------
     def add(self, req: Request) -> None:
-        self.waiting.append(req)
+        self.waiting.append(PendingEntry(req, seq=self._seq))
+        self._seq += 1
 
-    def admit(self, match=None) -> List[int]:
-        """Move waiting requests into free slots; returns the admitted
-        slot indices (their cache rows must be reset before dispatch).
+    def admit(self, place=None) -> List[int]:
+        """Move waiting requests (policy order) into free slots; returns
+        the admitted slot indices (their cache rows must be reset before
+        dispatch).
 
-        ``match(slot, req) -> n_cached`` is the prefix-cache hook (the
-        paged engine binds it to ``PagedPool.admit``): the request's
-        first ``n_cached`` prompt tokens are already in the cache, so
-        prefill starts at that offset — whole chunks whose pages fully
-        hit are never dispatched."""
-        newly = []
+        ``place(slot, entry) -> offset`` is the engine's placement hook:
+        for fresh requests the paged engine binds it to
+        ``PagedPool.admit`` (prefix-cache hits shrink the remaining
+        prefill — whole chunks whose pages fully hit are never
+        dispatched); for preempted resumes it restores the spilled
+        pages and returns the entry's own offset.  Returning ``None``
+        defers admission (pool exhausted): the entry stays at the head
+        of the queue, ``self.deferred`` is set, and admission stops."""
+        self.policy.order(self.waiting)
+        newly: List[int] = []
+        self.deferred = False
         for s, slot in enumerate(self.slots):
             if not self.waiting:
                 break
-            if slot.state is FREE:
-                req = self.waiting.popleft()
-                off = 0
-                if match is not None:
-                    off = int(match(s, req))
-                    assert 0 <= off < len(req.prompt)
-                self.slots[s] = _Slot(state=PREFILL, req=req, offset=off)
-                if off:
-                    cold = -(-len(req.prompt) // self.chunk)
-                    warm = -(-(len(req.prompt) - off) // self.chunk)
-                    self.chunks_skipped += cold - warm
-                    self.tokens_skipped += off
-                newly.append(s)
+            if slot.state is not FREE:
+                continue
+            entry = self.waiting[0]
+            off = entry.offset if place is None else place(s, entry)
+            if off is None:
+                self.deferred = True
+                break
+            off = int(off)
+            self.waiting.pop(0)
+            P = len(entry.req.prompt)
+            if entry.resume:
+                assert 0 <= off <= P
+            else:
+                assert 0 <= off < P
+            state = DECODE if off >= P else PREFILL
+            self.slots[s] = _Slot(state=state, req=entry.req,
+                                  offset=min(off, P),
+                                  n_generated=entry.n_generated,
+                                  seq=entry.seq)
+            if off and not entry.resume:
+                cold = -(-P // self.chunk)
+                warm = -(-(P - off) // self.chunk)
+                self.chunks_skipped += cold - warm
+                self.tokens_skipped += off
+            newly.append(s)
         return newly
+
+    def preempt(self, slot: int) -> Request:
+        """Evict a RUNNING request from ``slot`` and requeue it at its
+        exact progress (front of the queue; the policy re-sorts at the
+        next admit).  The engine spills the slot's pages first — the
+        resume entry carries only counts, never token values."""
+        sl = self.slots[slot]
+        assert sl.state is not FREE and sl.req is not None
+        self.waiting.insert(0, PendingEntry(
+            sl.req, offset=sl.offset, n_generated=sl.n_generated,
+            resume=True, seq=sl.seq))
+        self.slots[slot] = _Slot()
+        return sl.req
 
     # -- dispatch construction --------------------------------------------
     @property
@@ -95,12 +167,15 @@ class Scheduler:
         return bool(self.waiting) or any(s.state is not FREE
                                          for s in self.slots)
 
-    def next_dispatch(self) -> Optional[str]:
-        kind = None
+    def peek_kind(self) -> Optional[str]:
         if any(s.state is PREFILL for s in self.slots):
-            kind = "mixed"
-        elif any(s.state is DECODE for s in self.slots):
-            kind = "decode"
+            return "mixed"
+        if any(s.state is DECODE for s in self.slots):
+            return "decode"
+        return None
+
+    def next_dispatch(self) -> Optional[str]:
+        kind = self.peek_kind()
         if kind is not None:
             self.dispatch_kinds[kind] += 1
         return kind
@@ -125,8 +200,18 @@ class Scheduler:
         ``prefilling`` lists every (slot, offset, take) consuming prompt
         tokens this dispatch — the paged engine's pre-wrap publish hook
         (windowed prompts longer than their ring publish their prefix
-        pages BEFORE the ring wraps over them)."""
+        pages BEFORE the ring wraps over them).
+
+        The policy's ``prefill_budget`` > 0 caps the TOTAL prompt
+        tokens a mixed dispatch consumes (decode-vs-prefill knob):
+        prefill slots past the budget contribute nothing this dispatch
+        (n_valid 0 — ``feed`` skips them), so decode riders keep their
+        cadence while prompts stream through in sub-chunk slices.  The
+        first prefilling slot always gets at least one token, so
+        prefill can never starve outright."""
         C = self.chunk if kind == "mixed" else 1
+        budget = self.policy.prefill_budget
+        left = budget if (kind == "mixed" and budget > 0) else None
         tokens = np.zeros((self.n_slots, C), np.int32)
         n_valid = np.zeros((self.n_slots,), np.int32)
         use_pending = np.zeros((self.n_slots,), bool)
@@ -136,6 +221,11 @@ class Scheduler:
         for s, slot in enumerate(self.slots):
             if slot.state is PREFILL:
                 take = min(C, len(slot.req.prompt) - slot.offset)
+                if left is not None:
+                    take = min(take, left if prefilling else max(left, 1))
+                    if take <= 0:
+                        continue
+                    left -= take
                 tokens[s, :take] = slot.req.prompt[slot.offset:
                                                    slot.offset + take]
                 n_valid[s] = take

@@ -465,3 +465,107 @@ def test_paged_pool_release_returns_pages_and_trie_pins_survive():
     pool.release(1)
     assert all(pool.kv.ref[p] == 0 for p in pinned)
     pool.kv.check()
+
+
+# -- admission rollback + spill/restore refcount invariants (ISSUE 8) ------
+
+def test_admit_rollback_on_state_exhaustion_leaks_nothing():
+    """State-pool exhaustion mid-``admit`` must roll back everything the
+    admission already attached — the shared prefix KV pages and the
+    snapshot pin — and surface ``PoolExhausted`` (deferrable), leaving
+    every refcount exactly as before the attempt.  The old RuntimeError
+    path left the slot half-attached and the trie pages over-retained."""
+    from repro.serving.kv_pool import PoolExhausted
+    cfg = reduce_config(get_config("zamba2-7b")).replace(serve_chunk=8)
+    pool = PagedPool(cfg, 2, 64, chunk=8)
+    pool.build()
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, cfg.vocab_size, size=17).astype(np.int32)
+
+    # slot 0 "prefills": allocate its pages, snapshot state at the
+    # page-aligned offset 16 (host accounting only — the queued device
+    # copies are irrelevant to the refcount invariants under test)
+    assert pool.admit(0, prompt) == 0
+    pool.kv.write_plan(0, [0, 1, 2], alloc=pool._kv_alloc)
+    pool.advance(np.array([17, 0]))
+    pool.maybe_snapshot(0, prompt, 16)
+    assert pool.counters["snapshots"] == 1
+    pool.release(0)
+    snap = pool.prefix.match_state(prompt, len(prompt))
+    assert snap is not None and snap.kv_pages
+    # pin the snapshot so pool-pressure eviction can't reclaim it (the
+    # eviction predicate requires a sole-ref spage) — the failing admit
+    # below must reach the SHARED-PAGES-ATTACHED state before its state
+    # alloc fails, which is exactly the rollback under test
+    pool.st.retain(snap.spage)
+    held = []
+    while (p := pool._st_alloc()) is not None:
+        held.append(p)
+    ext = {**{p: 1 for p in held}, snap.spage: 1}
+    kv_refs_before = pool.kv.ref.copy()
+    st_refs_before = pool.st.ref.copy()
+
+    with pytest.raises(PoolExhausted):
+        pool.admit(1, np.concatenate([prompt, prompt[:4]]))
+    assert not pool.kv.table[1].any(), "rollback left shared pages mapped"
+    np.testing.assert_array_equal(pool.kv.ref, kv_refs_before)
+    np.testing.assert_array_equal(pool.st.ref, st_refs_before)
+    pool.kv.check(pool.external_refs("kv"))
+    st_ext = pool.external_refs("state")
+    for p, n in ext.items():
+        st_ext[p] = st_ext.get(p, 0) + n
+    pool.st.check(st_ext)
+
+    # returning the held pages (and the pin) makes the SAME admit
+    # succeed — the failure was deferrable, nothing was lost
+    for p in held:
+        pool.st.drop(p)
+    pool.st.drop(snap.spage)
+    assert pool.admit(1, np.concatenate([prompt, prompt[:4]])) == 16
+
+
+def test_spill_and_restore_keep_allocator_invariants():
+    """``spill`` moves a slot's exclusive pages to host (shared pages
+    retained by reference into the spill record) and ``restore`` replays
+    them into another slot: the allocator invariants must hold at every
+    intermediate point with the spill record counted as an external
+    holder, and the block-table shape must round-trip exactly."""
+    cfg = reduce_config(get_config("granite-3-2b")).replace(serve_chunk=8)
+    pool = PagedPool(cfg, 2, 64, chunk=8)
+    cache = pool.build()
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+
+    # slot 0 writes 2 full pages + publishes them; a 4-token tail makes
+    # a third, EXCLUSIVE page (its content must be copied on spill)
+    full = np.concatenate([prompt, prompt[:4]]).astype(np.int32)
+    assert pool.admit(0, full) == 0
+    pool.kv.write_plan(0, [0, 1, 2], alloc=pool._kv_alloc)
+    pool.advance(np.array([20, 0]))
+    pool.publish(0, full)
+    table_before = pool.kv.table[0].copy()
+    shared = [int(pool.kv.table[0, i]) for i in range(2)]
+
+    cache, rec = pool.spill(0, cache)
+    assert pool.spill_events["spills"] == 1
+    assert not pool.kv.table[0].any()
+    assert rec.pos == 20
+    assert [pg for _, pg in rec.kv_kept] == shared
+    assert len(rec.kv_host) > 0                  # exclusive page copied
+    # trie ref + spill-record ref keep the shared pages alive
+    assert all(pool.kv.ref[p] == 2 for p in shared)
+    pool.kv.check(pool.external_refs("kv"))
+
+    cache = pool.restore(1, rec, cache)
+    assert pool.spill_events["restores"] == 1
+    # shared entries re-attach to the SAME physical pages; the spilled
+    # exclusive block gets a fresh (nonzero) page for its upload
+    assert [int(pool.kv.table[1, i]) for i in range(2)] == shared
+    assert pool.kv.table[1, 2] > 0
+    assert np.count_nonzero(pool.kv.table[1]) == \
+        np.count_nonzero(table_before)
+    assert pool.pos[1] == 20
+    assert all(pool.kv.ref[p] == 2 for p in shared)  # trie + slot 1
+    pool.kv.check(pool.external_refs("kv"))
+    pool.release(1)
+    pool.kv.check(pool.external_refs("kv"))
