@@ -278,4 +278,15 @@ def obs_skip_table(metrics: Dict) -> str:
         md.append(f"| {lab.get('group', '-')} | {lab.get('layer', '-')} | "
                   f"{lab.get('expert') or '-'} | {t:.0f} | {s:.0f} | "
                   f"{s / max(t, 1):.3f} | {live.get(key, 0.0):.3f} |")
-    return "\n".join(md)
+    out = "\n".join(md)
+    # speculative-decoding acceptance (engine-global device counters,
+    # ISSUE 9) — a footer line, not a per-layer row: drafts span layers
+    drafted = sum(v["value"] for v in metrics.get(
+        "repro_spec_tokens_drafted_total", {}).get("values", []))
+    accepted = sum(v["value"] for v in metrics.get(
+        "repro_spec_tokens_accepted_total", {}).get("values", []))
+    if drafted:
+        out += (f"\n\nSpeculative decoding: {drafted:.0f} tokens drafted, "
+                f"{accepted:.0f} accepted — acceptance rate "
+                f"{accepted / max(drafted, 1):.3f}.")
+    return out

@@ -648,6 +648,92 @@ on every push).
 """
 
 
+def spec_section(path: str = "BENCH_spec.json") -> str:
+    """§Speculative decoding: self-speculative draft/verify sweep over
+    (k, draft_cap) vs the non-spec engine (benchmarks/run.py --scenario
+    serve-spec, ISSUE 9)."""
+    if not os.path.exists(path):
+        return ""
+    data = json.load(open(path))
+    tr = data["trace"]
+    hl = data["headline"]
+    rows = []
+    for mode, md in data["modes"].items():
+        b = md["baseline"]
+        rows.append(f"| {mode} | baseline | - | {b['tokens_per_s']:.0f} "
+                    f"| {b['itl_per_token_p50_ms']:.2f} | - | - | - |")
+        for r in md["spec"]:
+            rows.append(
+                f"| {mode} | k={r['k']} | {r['draft_cap']} | "
+                f"{r['tokens_per_s']:.0f} | "
+                f"{r['itl_per_token_p50_ms']:.2f} | "
+                f"{r['acceptance_rate']:.2f} | "
+                f"{r['tokens_per_round']:.2f} | "
+                f"{r['replays']}/{r['aborts']} |")
+    return f"""\
+## §Speculative decoding (self-speculative draft/verify, paged COW)
+
+One set of weights serves both roles: the DRAFT pass runs the same
+model under clamped MoR execution plans (`draft_cap` is a traced leaf
+like the calibrated capacities, so sweeping it re-uses one compiled
+step) and proposes up to k tokens per decoding slot autoregressively
+into COW-forked pages; the VERIFY pass is one chunked-prefill-shaped
+dispatch under the full-capacity target plans scoring all k+1 positions
+at once.  Speculation is a block-table operation, not a cache copy —
+fork records the committed position + block-table row (recurrent state
+gets one backup page), rollback truncates the position and drops pages
+allocated wholly past it, and recurrent families replay the accepted
+tokens from the restored fork state in ONE batched dispatch.  A round
+costs exactly one host sync (the per-slot emit counts).
+
+Greedy verification is token-identical to vanilla decode BY
+CONSTRUCTION (the longest draft prefix matching the target argmax plus
+the target's own correction token) — asserted for every dense-mode row
+below and across attention / recurrent-state / hybrid families in
+`tests/test_spec.py`, including mid-speculation preemption and
+prefix-cache-warm starts.  Seeded sampling follows the exact
+rejection-sampling rule (emitted marginal = target distribution for
+any proposal; distribution-checked in the tests).
+
+Trace: {tr['n_requests']} requests, prompts {tr['prompt_min']}-\
+{tr['prompt_max']} x gens {tr['gen_min']}-{tr['gen_len']}, \
+{tr['n_slots']} slots, dims {tr['dims']} (the compute-dominated scale).
+ITL is recorded per emitting dispatch = per ROUND under speculation;
+the per-token column divides by the round's mean emitted tokens.
+
+| mode | config | draft_cap | tok/s | ITL/token p50 (ms) | acceptance | tok/round | replays/aborts |
+|---|---|---|---|---|---|---|---|
+{chr(10).join(rows)}
+
+Headline: best config k={hl['best_k']}, draft_cap={hl['best_draft_cap']}
+reaches **{hl['best_tokens_per_s']:.0f} tok/s
+({hl['speedup_vs_baseline']:.2f}x the non-spec baseline)** at acceptance
+{hl['best_acceptance_rate']:.0%}; per-token ITL
+**{hl['best_itl_per_token_p50_ms']:.2f} ms vs baseline
+{hl['baseline_itl_p50_ms']:.2f} ms** (no worse = {hl['itl_no_worse']}).
+The per-token ITL win is the robust result (one host sync per round
+instead of one per token); aggregate tok/s on this CPU container is
+parity-within-noise — dense spec rows sit stable across runs while the
+baseline swings ~+-8% run to run, and the verify dispatch pays real
+k+1-wide compute here because CPU matmuls scale near-linearly with
+width where accelerator decode is weights-bandwidth-bound.
+Dense-mode rows bound the round-shape cost (draft == target plans, so
+acceptance is ~1 and any tok/s delta is pure dispatch accounting);
+tiled rows price REAL clamped drafts, whose acceptance falls with the
+cap.  On this CPU container the tiled oracle computes dead tiles and
+masks them, so the draft pass is not actually cheaper — the wall-clock
+upside of capacitated drafts needs the gather_matmul kernel path on
+real accelerators; what these rows validate is the acceptance/identity
+machinery end to end.
+
+Reproduce: `PYTHONPATH=src python -m benchmarks.run --scenario
+serve-spec --requests 10 --prompt-max 48 --gen-len 32` (writes
+BENCH_spec.json; the CI `spec-smoke` job asserts nonzero acceptance
+and greedy token identity on every push).
+
+"""
+
+
 def main():
     bench = {}
     if os.path.exists("experiments/bench_results.json"):
@@ -713,11 +799,12 @@ Dominant-bottleneck notes (one line per arch, train_4k):
   flash-chunk tuning.
 
 """
+    from benchmarks.trajectory import trajectory_section
     with open("EXPERIMENTS.md", "w") as f:
-        f.write(header + dry + serving_section() + prefix_section()
-                + sharded_section() + paged_kernel_section()
-                + moe_section() + slo_section() + observability_section()
-                + PERF_LOG)
+        f.write(header + trajectory_section() + dry + serving_section()
+                + prefix_section() + sharded_section()
+                + paged_kernel_section() + moe_section() + slo_section()
+                + observability_section() + spec_section() + PERF_LOG)
     print("wrote EXPERIMENTS.md")
 
 

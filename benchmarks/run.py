@@ -372,6 +372,165 @@ def scenario_serve_sharded(n_requests: int = 16, prompt_min: int = 8,
     return result
 
 
+def scenario_serve_spec(ks=(2, 4, 8), caps=(0.0, 0.5), dims="256,1024,4",
+                        n_requests: int = 10, prompt_min: int = 8,
+                        prompt_max: int = 48, gen_min: int = 8,
+                        gen_len: int = 32, n_slots: int = 4,
+                        chunk: int = 32, with_mor: bool = True,
+                        out: str = "BENCH_spec.json") -> dict:
+    """Self-speculative decoding (ISSUE 9): the serve-engine mixed trace
+    through ``Engine(spec_k=k, draft_cap=c)`` swept over the draft
+    length and the MoR draft capacity, against the non-spec engine on
+    the SAME seeded trace.  Greedy identity is ASSERTED for every
+    dense-mode row (speculation must not change tokens).  Two engine
+    families: ``dense`` (draft == target plans — the acceptance
+    ceiling and the pure round-shape cost) and calibrated ``tiled``
+    (clamped draft plans; ``draft_cap`` is a traced leaf, so the sweep
+    shares one compiled step per phase).
+
+    ITL accounting: the tracer observes inter-DISPATCH latency, which
+    under speculation is the round cadence (a round emits
+    ``1 + acceptance*k`` tokens at once), so rows carry both the raw
+    round ITL and the per-token effective ITL (round ITL / mean tokens
+    per round) — the headline compares effective ITL at the
+    compute-dominated d256 scale, where a verify pass's k+1 positions
+    ride one dispatch."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, reduce_config
+    from repro.launch.serve import _run_engine, _trace
+    from repro.models import get_model
+    from repro.obs import Observability
+
+    cfg = reduce_config(get_config("granite-3-2b")).replace(
+        serve_chunk=chunk)
+    if dims and dims != "none":
+        d, f, L = (int(x) for x in dims.split(","))
+        cfg = cfg.replace(d_model=d, d_ff=f, n_layers=L)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    reqs = _trace(cfg, n_requests, prompt_min, prompt_max, gen_min,
+                  gen_len, 0)
+    max_len = prompt_max + gen_len + 2
+    # prefix cache off: best-of-3 re-runs one trace (see serve-engine)
+    kw = dict(n_slots=n_slots, max_len=max_len, chunk=chunk,
+              prefix_cache=False)
+
+    def run_one(label, params_r, mor, mor_mode, spec_k=0, draft_cap=0.0):
+        eng, results, rep = _run_engine(
+            cfg, params_r, reqs, mor=mor, mor_mode=mor_mode,
+            obs=Observability(), spec_k=spec_k, draft_cap=draft_cap,
+            **kw)
+        itl = eng.obs.tracer.summary().get("itl") or {}
+        row = {"tokens_per_s": rep["tokens_per_s"],
+               "decode_tokens_per_s": rep["decode_tokens_per_s"],
+               "itl_round_p50_ms": round((itl.get("p50") or 0.0) * 1e3,
+                                         3),
+               "itl_round_p99_ms": round((itl.get("p99") or 0.0) * 1e3,
+                                         3),
+               "dispatches": rep["dispatches"],
+               "requests": rep["requests_finished"]}
+        tokens_per_round = 1.0
+        if spec_k:
+            sp = rep["spec"]
+            tokens_per_round = (rep["decode_tokens"]
+                                / max(sp["rounds"], 1))
+            row.update(
+                k=spec_k, draft_cap=draft_cap,
+                acceptance_rate=round(sp["acceptance_rate"], 4),
+                rounds=sp["rounds"], replays=sp["replays"],
+                aborts=sp["aborts"],
+                tokens_drafted=sp["tokens_drafted"],
+                tokens_accepted=sp["tokens_accepted"],
+                tokens_per_round=round(tokens_per_round, 3))
+            dm = rep.get("obs", {}).get("device_metrics", {})
+            for key in ("tokens_drafted", "tokens_accepted"):
+                if key in dm:
+                    row[f"device_{key}"] = dm[key]
+        row["itl_per_token_p50_ms"] = round(
+            row["itl_round_p50_ms"] / max(tokens_per_round, 1.0), 3)
+        print(f"serve_spec_{label},0,{rep['tokens_per_s']:.1f}",
+              flush=True)
+        return results, row
+
+    modes = {}
+    res_base, base = run_one("dense_base", params, None, "dense")
+    dense = {"baseline": base, "spec": []}
+    for k in ks:
+        res_s, row = run_one(f"dense_k{k}", params, None, "dense",
+                             spec_k=k)
+        row["tokens_match_baseline"] = (res_s == res_base)
+        assert row["tokens_match_baseline"], \
+            f"k={k}: speculation changed greedy tokens"
+        dense["spec"].append(row)
+    modes["dense"] = dense
+    if with_mor:
+        from repro.core.deploy import calibrate_lm
+        from repro.data.pipeline import synthetic_lm_batch
+
+        def batches():
+            s = 0
+            while True:
+                b = synthetic_lm_batch(cfg, 4, 64, seed=0, step=s)
+                yield {"tokens": jnp.asarray(b["tokens"])}
+                s += 1
+        params_m, mor, _ = calibrate_lm(params, cfg, api.forward,
+                                        batches(), 2)
+        res_mb, mbase = run_one("tiled_base", params_m, mor, "tiled")
+        tiled = {"baseline": mbase, "spec": []}
+        for k in ks:
+            for cap in caps:
+                res_m, row = run_one(f"tiled_k{k}_c{cap}", params_m, mor,
+                                     "tiled", spec_k=k, draft_cap=cap)
+                # informational only: tile capacity couples tokens
+                # within a dispatch, so K+1-wide verify under tiled
+                # plans is not bit-equal to 1-wide decode (greedy
+                # identity is a dense-mode guarantee)
+                row["tokens_match_baseline"] = (res_m == res_mb)
+                tiled["spec"].append(row)
+        modes["tiled"] = tiled
+
+    # headline: best dense-mode config meeting the acceptance bar, its
+    # effective ITL against the non-spec baseline (5% wall noise slack)
+    cand = [r for r in dense["spec"] if r["acceptance_rate"] >= 0.5]
+    best = max(cand or dense["spec"], key=lambda r: r["tokens_per_s"])
+    headline = {
+        "baseline_tokens_per_s": base["tokens_per_s"],
+        "baseline_itl_p50_ms": base["itl_per_token_p50_ms"],
+        "best_k": best["k"], "best_draft_cap": best["draft_cap"],
+        "best_tokens_per_s": best["tokens_per_s"],
+        "best_itl_per_token_p50_ms": best["itl_per_token_p50_ms"],
+        "best_acceptance_rate": best["acceptance_rate"],
+        "speedup_vs_baseline": round(
+            best["tokens_per_s"] / max(base["tokens_per_s"], 1e-9), 3),
+        "meets_acceptance": best["acceptance_rate"] >= 0.5,
+        "itl_no_worse": (best["itl_per_token_p50_ms"]
+                         <= base["itl_per_token_p50_ms"] * 1.05),
+    }
+    print(f"serve_spec_best_k{best['k']},0,"
+          f"{headline['speedup_vs_baseline']:.3f}", flush=True)
+    print(f"serve_spec_acceptance,0,{best['acceptance_rate']:.4f}",
+          flush=True)
+    result = {"trace": {"arch": "granite-3-2b (reduced)", "dims": dims,
+                        "n_requests": n_requests,
+                        "prompt_min": prompt_min,
+                        "prompt_max": prompt_max, "gen_min": gen_min,
+                        "gen_len": gen_len, "n_slots": n_slots,
+                        "chunk": chunk, "ks": list(ks),
+                        "draft_caps": list(caps),
+                        "note": "ITL is per emitting dispatch = per "
+                                "round under speculation; per-token "
+                                "effective ITL divides by the round's "
+                                "mean emitted tokens"},
+              "modes": modes,
+              "headline": headline}
+    with open(out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"wrote {out}")
+    return result
+
+
 def scenario_moe_modes(modes=("dense", "exact", "tiled", "kernel"),
                        n_requests: int = 8, prompt_min: int = 4,
                        prompt_max: int = 24, gen_min: int = 4,
@@ -785,7 +944,7 @@ def main() -> None:
     ap.add_argument("--scenario", default="figures",
                     choices=("figures", "serve-engine", "moe-modes",
                              "serve-prefix", "serve-sharded",
-                             "paged-kernel", "serve-slo"))
+                             "paged-kernel", "serve-slo", "serve-spec"))
     ap.add_argument("--archs", default=None,
                     help="serve-prefix: comma-separated arch list "
                          "(default granite-3-2b,rwkv6-3b)")
@@ -806,8 +965,32 @@ def main() -> None:
     ap.add_argument("--policies", default=None,
                     help="serve-slo: comma-separated policy list "
                          "(default fcfs,priority,sjf)")
+    ap.add_argument("--spec-ks", default=None,
+                    help="serve-spec: comma-separated draft lengths "
+                         "(default 2,4)")
+    ap.add_argument("--spec-caps", default=None,
+                    help="serve-spec: comma-separated draft_cap values "
+                         "for the tiled rows (default 0.0,0.5)")
+    ap.add_argument("--spec-dims", default="256,1024,4",
+                    help="serve-spec: d_model,d_ff,n_layers override "
+                         "('none' keeps the plain reduced config — the "
+                         "CI smoke size)")
+    ap.add_argument("--no-mor-draft", action="store_true",
+                    help="serve-spec: skip the calibrated tiled rows "
+                         "(CI smoke)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+    if args.scenario == "serve-spec":
+        scenario_serve_spec(
+            ks=tuple(int(x) for x in (args.spec_ks or "2,4,8").split(",")),
+            caps=tuple(float(x) for x in
+                       (args.spec_caps or "0.0,0.5").split(",")),
+            dims=args.spec_dims,
+            n_requests=args.requests,
+            prompt_max=args.prompt_max, gen_len=args.gen_len,
+            with_mor=not args.no_mor_draft,
+            out=args.out or "BENCH_spec.json")
+        return
     if args.scenario == "serve-slo":
         scenario_serve_slo(
             policies=tuple((args.policies

@@ -1,0 +1,210 @@
+"""Cross-PR benchmark trajectory: one headline row per BENCH_*.json.
+
+Every serving-layer PR leaves a ``BENCH_<name>.json`` artifact behind
+(serve-engine, moe-modes, serve-prefix, serve-sharded, paged-kernel,
+serve-slo, serve-spec).  This module reads whichever exist and distills
+each into one row — the subsystem, its headline number, and the
+one-line context needed to read it — so EXPERIMENTS.md carries a
+single table showing how the system's measured capabilities accreted
+across the PR stack.  Extraction is defensive (``.get`` chains):
+a missing or older-schema file yields a "(not run)" row, never a crash.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+
+def _load(path: str) -> Optional[Dict]:
+    if not os.path.exists(path):
+        return None
+    try:
+        return json.load(open(path))
+    except (OSError, ValueError):
+        return None
+
+
+def _serve(d: Dict) -> List[Dict]:
+    rows = []
+    tiled = d.get("modes", {}).get("tiled", {})
+    if "engine_speedup_vs_static" in tiled:
+        rows.append({
+            "pr": "2", "subsystem": "continuous batching",
+            "benchmark": "serve-engine",
+            "headline": f"{tiled['engine_speedup_vs_static']:.2f}x vs "
+                        "static batch",
+            "detail": f"{tiled.get('tokens_per_s', 0):.0f} tok/s, "
+                      "tiled MoR, mixed trace"})
+    d256 = d.get("modes", {}).get("dense@d256", {})
+    if "layout_cost_tokens_per_s" in d256:
+        rows.append({
+            "pr": "6", "subsystem": "paged KV layout",
+            "benchmark": "serve-engine (d256)",
+            "headline": f"paged/slotted = "
+                        f"{d256['layout_cost_tokens_per_s']:.2f}x",
+            "detail": ">= 1 means the page indirection is free at the "
+                      "compute-bound scale"})
+    if "obs_overhead" in d:
+        rows.append({
+            "pr": "7", "subsystem": "observability",
+            "benchmark": "serve-engine (obs A/B)",
+            "headline": f"{d['obs_overhead'] * 100:.1f}% tokens/s "
+                        "overhead",
+            "detail": "device-resident counters + span tracer vs plain "
+                      "engine, paired best-of-5"})
+    return rows
+
+
+def _moe(d: Dict) -> List[Dict]:
+    tiled = d.get("modes", {}).get("tiled", {})
+    if "expert_tile_skip_frac" not in tiled:
+        return []
+    return [{
+        "pr": "3", "subsystem": "expert-level MoR",
+        "benchmark": "moe-modes",
+        "headline": f"{tiled['expert_tile_skip_frac'] * 100:.0f}% expert "
+                    "tiles skipped",
+        "detail": "per-(layer, expert) predictors, injected column "
+                  "sparsity, tiled mode"}]
+
+
+def _prefix(d: Dict) -> List[Dict]:
+    archs = d.get("archs", {})
+    if not archs:
+        return []
+    best = max(archs.items(), key=lambda kv: kv[1].get("speedup", 0))
+    return [{
+        "pr": "4", "subsystem": "prefix caching",
+        "benchmark": "serve-prefix",
+        "headline": f"{best[1].get('speedup', 0):.2f}x warm vs cold "
+                    f"({best[0]})",
+        "detail": f"hit rate {best[1].get('hit_rate', 0):.0%}, "
+                  "token-identical, shared-prompt trace"}]
+
+
+def _sharded(d: Dict) -> List[Dict]:
+    on = d.get("modes", {}).get("prefix_on", {})
+    if not on:
+        return []
+    per = on.get("kv_pages_per_shard")
+    single = on.get("kv_pages_single_device")
+    return [{
+        "pr": "5", "subsystem": "mesh-sharded pages",
+        "benchmark": "serve-sharded",
+        "headline": f"{single} -> {per} KV pages/device",
+        "detail": "token-identical on forced host devices, one merge "
+                  "collective per attention layer"}]
+
+
+def _kernel(d: Dict) -> List[Dict]:
+    rows = d.get("rows", [])
+    if not rows:
+        return []
+    best = max(rows, key=lambda r: r.get("jnp_pool_direct_gbps", 0))
+    return [{
+        "pr": "6", "subsystem": "flash-decode kernel",
+        "benchmark": "paged-kernel",
+        "headline": f"{best.get('jnp_pool_direct_gbps', 0):.1f} GB/s "
+                    "pool-direct decode",
+        "detail": f"B={best.get('batch')}, ring={best.get('ring')}; "
+                  f"kernel backend {d.get('kernel_backend', '?')}"}]
+
+
+def _slo(d: Dict) -> List[Dict]:
+    hl = d.get("headline", {})
+    twin = d.get("token_identity_twin", {})
+    if not hl:
+        return []
+    pri, fcfs = hl.get("priority_hi_p99_ttft_s"), hl.get("fcfs_hi_p99_ttft_s")
+    head = ("priority p99 TTFT "
+            f"{pri * 1e3:.0f} ms vs fcfs {fcfs * 1e3:.0f} ms"
+            if pri is not None and fcfs is not None else "(partial run)")
+    return [{
+        "pr": "8", "subsystem": "SLO scheduling",
+        "benchmark": "serve-slo",
+        "headline": head,
+        "detail": f"at {hl.get('offered_x', '?')}x overload; preemption "
+                  f"twin identical = {twin.get('identical')}"}]
+
+
+def _spec(d: Dict) -> List[Dict]:
+    hl = d.get("headline", {})
+    if not hl:
+        return []
+    return [{
+        "pr": "9", "subsystem": "speculative decoding",
+        "benchmark": "serve-spec",
+        "headline": f"k={hl.get('best_k')}, acceptance "
+                    f"{hl.get('best_acceptance_rate', 0):.0%}, "
+                    f"{hl.get('speedup_vs_baseline', 0):.2f}x tokens/s",
+        "detail": "self-speculative draft/verify through COW block "
+                  "tables, greedy token-identical; ITL no worse = "
+                  f"{hl.get('itl_no_worse')}"}]
+
+
+_EXTRACTORS = [
+    ("BENCH_serve.json", _serve),
+    ("BENCH_moe_modes.json", _moe),
+    ("BENCH_prefix.json", _prefix),
+    ("BENCH_sharded.json", _sharded),
+    ("BENCH_paged_kernel.json", _kernel),
+    ("BENCH_slo.json", _slo),
+    ("BENCH_spec.json", _spec),
+]
+
+
+def collect(root: str = ".") -> List[Dict]:
+    """One row per headline found across the BENCH artifacts in
+    ``root``, ordered by PR number."""
+    rows: List[Dict] = []
+    for fname, extract in _EXTRACTORS:
+        d = _load(os.path.join(root, fname))
+        if d is None:
+            continue
+        rows.extend(extract(d))
+    rows.sort(key=lambda r: (int(r["pr"]), r["benchmark"]))
+    return rows
+
+
+def markdown(rows: List[Dict]) -> str:
+    md = ["| PR | subsystem | benchmark | headline | context |",
+          "|---|---|---|---|---|"]
+    for r in rows:
+        md.append(f"| {r['pr']} | {r['subsystem']} | {r['benchmark']} | "
+                  f"{r['headline']} | {r['detail']} |")
+    return "\n".join(md)
+
+
+def trajectory_section(root: str = ".") -> str:
+    """The §Trajectory block for EXPERIMENTS.md (empty string when no
+    BENCH artifact exists yet)."""
+    rows = collect(root)
+    if not rows:
+        return ""
+    return f"""\
+## §Trajectory (cross-PR benchmark summary)
+
+One headline per serving-layer PR, distilled from the BENCH_*.json
+artifacts present in the repo root (regenerate any of them with
+`PYTHONPATH=src python -m benchmarks.run --scenario <name>`; this table
+rebuilds via `python -m benchmarks.trajectory` or
+`make_experiments_md`).  Numbers are CPU-container measurements on
+reduced configs — trends and invariants (token identity, overhead
+bounds) are the signal, absolute tok/s is not.
+
+{markdown(rows)}
+
+"""
+
+
+def main() -> None:
+    rows = collect()
+    if not rows:
+        print("no BENCH_*.json artifacts found")
+        return
+    print(markdown(rows))
+
+
+if __name__ == "__main__":
+    main()

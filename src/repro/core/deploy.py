@@ -29,7 +29,8 @@ def _stack_mor(layers: List[Dict]) -> Dict:
 
 
 def attach_plans(mor, cfg: ModelConfig, mode: str,
-                 capacities: Optional[Dict] = None):
+                 capacities: Optional[Dict] = None,
+                 draft_cap: Optional[float] = None):
     """Wrap calibrated MoR layers in per-layer execution plans.
 
     Replaces the old convention of threading bare ``(mor, mode, tile_m,
@@ -42,6 +43,11 @@ def attach_plans(mor, cfg: ModelConfig, mode: str,
     traced ``cap_live`` leaf (``serving.telemetry.calibrate_capacity``'s
     output): a stacked plan rides through ``lax.scan`` with one static
     provisioning while every layer clamps to its own observed budget.
+
+    ``draft_cap`` (optional scalar fraction) additionally stores the
+    self-speculative draft budget on every plan (see
+    ``executor.attach_draft_caps``); it stays dormant until the serving
+    engine derives the draft twin with ``as_draft()``.
 
     Accepts the shapes the calibrators emit — a dict of stacked layer
     pytrees (``calibrate_lm``: plans ride through ``lax.scan`` because
@@ -97,19 +103,24 @@ def attach_plans(mor, cfg: ModelConfig, mode: str,
     if mor is None or mode == "dense":
         return mor
     if isinstance(mor, MoRExecutionPlan):
-        return mor
-    if isinstance(mor, list):
-        return [wrap(m) for m in mor]
-    if isinstance(mor, dict) and "enable" not in mor:
+        out = mor
+    elif isinstance(mor, list):
+        out = [wrap(m) for m in mor]
+    elif isinstance(mor, dict) and "enable" not in mor:
         caps = capacities or {}
-        return {k: wrap(v, caps.get(k)) for k, v in mor.items()}
-    # bare single layer: only an unambiguous capacity spec is accepted
-    caps = capacities
-    if isinstance(caps, dict):
-        assert len(caps) <= 1, \
-            f"ambiguous capacities for a single MoR layer: {sorted(caps)}"
-        caps = next(iter(caps.values())) if caps else None
-    return wrap(mor, caps)
+        out = {k: wrap(v, caps.get(k)) for k, v in mor.items()}
+    else:
+        # bare single layer: only an unambiguous capacity spec is accepted
+        caps = capacities
+        if isinstance(caps, dict):
+            assert len(caps) <= 1, \
+                f"ambiguous capacities for a single MoR layer: {sorted(caps)}"
+            caps = next(iter(caps.values())) if caps else None
+        out = wrap(mor, caps)
+    if draft_cap is not None:
+        from repro.core.executor import attach_draft_caps
+        out = attach_draft_caps(out, draft_cap)
+    return out
 
 
 def calibrate_lm(params: Dict, cfg: ModelConfig, forward: Callable,

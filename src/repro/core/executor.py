@@ -134,11 +134,20 @@ class MoRExecutionPlan:
     the telemetry-calibrated PER-LAYER budget clamped under it
     (``serving.telemetry.calibrate_capacity``): updating its values
     re-provisions every layer without recompiling the serving step.
+
+    ``draft_cap`` (traced, optional) is a SECOND capacity budget for
+    self-speculative decoding: the same weights/predictor with a much
+    harsher clamp act as the draft model.  The static ``draft`` flag
+    selects which budget is active — draft=True plans read ``draft_cap``
+    where target plans read ``cap_live`` — so the serving engine
+    compiles exactly two step executables (target + draft treedefs) and
+    sweeping draft_cap VALUES never recompiles either.
     """
 
     def __init__(self, mor: Optional[MoRLayer], *, mode: str = "dense",
                  tile_m: int = 8, tile_n: int = 128,
-                 capacity_frac: float = 1.0, cap_live=None):
+                 capacity_frac: float = 1.0, cap_live=None,
+                 draft_cap=None, draft: bool = False):
         if mode not in MODES:
             raise ValueError(f"unknown MoR mode {mode!r}")
         self.mor = mor
@@ -147,29 +156,53 @@ class MoRExecutionPlan:
         self.tile_n = tile_n
         self.capacity_frac = capacity_frac
         self.cap_live = cap_live
+        self.draft_cap = draft_cap
+        self.draft = draft
 
     # -- pytree plumbing ---------------------------------------------------
     def tree_flatten(self):
-        return (self.mor, self.cap_live), (self.mode, self.tile_m,
-                                           self.tile_n, self.capacity_frac)
+        return ((self.mor, self.cap_live, self.draft_cap),
+                (self.mode, self.tile_m, self.tile_n, self.capacity_frac,
+                 self.draft))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        mode, tile_m, tile_n, capacity_frac = aux
+        mode, tile_m, tile_n, capacity_frac, draft = aux
         return cls(children[0], mode=mode, tile_m=tile_m, tile_n=tile_n,
-                   capacity_frac=capacity_frac, cap_live=children[1])
+                   capacity_frac=capacity_frac, cap_live=children[1],
+                   draft_cap=children[2], draft=draft)
 
     def __repr__(self):
         return (f"MoRExecutionPlan(mode={self.mode!r}, tile_m={self.tile_m},"
                 f" tile_n={self.tile_n}, capacity_frac={self.capacity_frac},"
                 f" calibrated={self.mor is not None},"
-                f" per_layer_capacity={self.cap_live is not None})")
+                f" per_layer_capacity={self.cap_live is not None},"
+                f" draft={self.draft})")
+
+    def as_draft(self, draft_cap=None) -> "MoRExecutionPlan":
+        """The draft-mode twin of this plan: same weights and leaves,
+        ``draft=True`` so ``draft_cap`` becomes the active budget.  When
+        ``draft_cap`` is given it replaces the stored leaf (scalar or
+        per-layer, broadcastable like ``cap_live``)."""
+        dc = self.draft_cap if draft_cap is None else draft_cap
+        return MoRExecutionPlan(
+            self.mor, mode=self.mode, tile_m=self.tile_m, tile_n=self.tile_n,
+            capacity_frac=self.capacity_frac, cap_live=self.cap_live,
+            draft_cap=dc, draft=True)
 
     # -- predicates --------------------------------------------------------
     @property
     def active(self) -> bool:
         """True when the predictor actually runs (calibrated + not dense)."""
         return self.mor is not None and self.mode != "dense"
+
+    @property
+    def _active_cap(self):
+        """The traced capacity budget in force: ``draft_cap`` when this
+        plan runs as the speculative drafter, ``cap_live`` otherwise."""
+        if self.draft and self.draft_cap is not None:
+            return self.draft_cap
+        return self.cap_live
 
     # -- the single predictor pass -----------------------------------------
     def predict(self, x: jax.Array, w: jax.Array, *,
@@ -228,7 +261,7 @@ class MoRExecutionPlan:
         tiles = tile_mask_from_neuron_mask(
             computed.reshape(-1, computed.shape[-1]), self.tile_m, self.tile_n)
         kept = (self._capacity_clip(tiles)
-                if self.mode == "kernel" or self.cap_live is not None
+                if self.mode == "kernel" or self._active_cap is not None
                 else None)
         return MoRPrediction(computed, tiles, kept=kept)
 
@@ -237,14 +270,15 @@ class MoRExecutionPlan:
         the first ``capacity`` live tiles (row-major) are computed.  The
         static ``capacity_frac`` provisions; the traced ``cap_live``
         (per-layer calibrated fraction) clamps under it."""
-        if self.capacity_frac >= 1.0 and self.cap_live is None:
+        cap_live = self._active_cap
+        if self.capacity_frac >= 1.0 and cap_live is None:
             return tiles
         n_tiles = tiles.shape[0] * tiles.shape[1]
         capacity = jnp.asarray(max(1, int(self.capacity_frac * n_tiles)),
                                jnp.int32)
-        if self.cap_live is not None:
+        if cap_live is not None:
             capacity = jnp.minimum(capacity, jnp.maximum(1, jnp.ceil(
-                jnp.asarray(self.cap_live, jnp.float32) * n_tiles)
+                jnp.asarray(cap_live, jnp.float32) * n_tiles)
             ).astype(jnp.int32))
         flat = tiles.reshape(-1)
         live_rank = jnp.cumsum(flat) - 1
@@ -266,7 +300,7 @@ class MoRExecutionPlan:
             # expansion + select on the serving hot path
             pre, n_live, n_comp = kops.gather_matmul(
                 x, w, pred.tiles, capacity_frac=self.capacity_frac,
-                capacity_frac_live=self.cap_live, tile_m=self.tile_m,
+                capacity_frac_live=self._active_cap, tile_m=self.tile_m,
                 tile_n=self.tile_n, with_counts=True)
             # the kernel's own tile counters feed the serving telemetry
             pred.kernel_counts = (n_live, n_comp)
@@ -393,7 +427,7 @@ class MoRExecutionPlan:
         telemetry feed)."""
         assert self.active, "expert_ffn() on an inactive plan"
         mode, tm, tn = self.mode, self.tile_m, self.tile_n
-        cf = self.capacity_frac
+        cf, draft = self.capacity_frac, self.draft
         operands = {"x": eb, "w_up": w_up, "w_down": w_down,
                     "mor": self.mor}
         if w_gate is not None:
@@ -403,11 +437,15 @@ class MoRExecutionPlan:
         if self.cap_live is not None:
             operands["cap"] = jnp.broadcast_to(
                 jnp.asarray(self.cap_live, jnp.float32), (eb.shape[0],))
+        if self.draft_cap is not None:
+            operands["dcap"] = jnp.broadcast_to(
+                jnp.asarray(self.draft_cap, jnp.float32), (eb.shape[0],))
 
         def one(o):
             plan = MoRExecutionPlan(o["mor"], mode=mode, tile_m=tm,
                                     tile_n=tn, capacity_frac=cf,
-                                    cap_live=o.get("cap"))
+                                    cap_live=o.get("cap"),
+                                    draft_cap=o.get("dcap"), draft=draft)
             return plan.ffn(o["x"], o["w_up"], o["w_down"],
                             activation=activation, w_gate=o.get("w_gate"),
                             row_mask=o.get("row_mask"))
@@ -453,6 +491,36 @@ def as_expert_plan(em, *, mode: str = "dense", tile_m: int = 8,
         return MoRExecutionPlan(None)
     return MoRExecutionPlan(em, mode=mode, tile_m=tile_m, tile_n=tile_n,
                             capacity_frac=capacity_frac)
+
+
+def attach_draft_caps(mor, draft_cap):
+    """Store a draft capacity budget on every plan in an attached-MoR
+    pytree.  ``draft_cap`` (scalar fraction, or anything broadcastable
+    to a plan's stacked leading dims) lands as the traced ``draft_cap``
+    leaf — broadcast exactly like ``cap_live`` so stacked plans can ride
+    ``lax.scan``/unrolled layer loops — and stays dormant until
+    ``as_draft()`` flips the plan into draft mode."""
+    def one(p):
+        if p.mor is None:
+            return p
+        dc = jnp.broadcast_to(jnp.asarray(draft_cap, jnp.float32),
+                              p.mor["m"].shape[:-1])
+        return MoRExecutionPlan(
+            p.mor, mode=p.mode, tile_m=p.tile_m, tile_n=p.tile_n,
+            capacity_frac=p.capacity_frac, cap_live=p.cap_live,
+            draft_cap=dc, draft=p.draft)
+    return map_plans(mor, one)
+
+
+def map_plans(mor, fn):
+    """Apply ``fn`` to every MoRExecutionPlan inside an attached-MoR
+    pytree (plans are pytree NODES, so a plain tree_map would descend
+    into their leaves; this one stops at the plan boundary).  Non-plan
+    leaves pass through untouched.  Used by the serving engine to derive
+    the draft-mode twin of an attached model in one sweep."""
+    return jax.tree_util.tree_map(
+        lambda p: fn(p) if isinstance(p, MoRExecutionPlan) else p, mor,
+        is_leaf=lambda x: isinstance(x, MoRExecutionPlan))
 
 
 def _looks_like_mor_layer(mor) -> bool:

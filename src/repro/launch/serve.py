@@ -155,13 +155,15 @@ def _trace(cfg, n_requests, pmin, pmax, gmin, gmax, seed,
 def _run_engine(cfg, params, reqs, *, mor, mor_mode, n_slots, max_len,
                 chunk=0, capacities=None, layout="paged",
                 prefix_cache=True, temperature=0.0, top_k=0,
-                sample_seed=0, mesh=None, obs=None, policy=None):
+                sample_seed=0, mesh=None, obs=None, policy=None,
+                spec_k=0, draft_cap=0.0, spec_draft_temperature=None):
     eng = Engine(cfg, params, mor=mor, mor_mode=mor_mode, n_slots=n_slots,
                  max_len=max_len, chunk=chunk, capacities=capacities,
                  layout=layout, prefix_cache=prefix_cache,
                  temperature=temperature, top_k=top_k,
                  sample_seed=sample_seed, mesh=mesh, obs=obs,
-                 policy=policy)
+                 policy=policy, spec_k=spec_k, draft_cap=draft_cap,
+                 spec_draft_temperature=spec_draft_temperature)
     # first pass compiles the two dispatch shapes; then take the best of
     # three timed passes — single-shot wall clock on a shared CPU is
     # ~2x noisy (the static baseline gets the same warmup + best-of).
@@ -246,6 +248,18 @@ def main(argv=None):
                     help="top-k truncation for temperature sampling "
                          "(0 = full distribution)")
     ap.add_argument("--sample-seed", type=int, default=0)
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="self-speculative decoding: draft up to k "
+                         "tokens per slot per round and verify them in "
+                         "one target pass (0 = off; paged layout only; "
+                         "greedy output is token-identical to vanilla)")
+    ap.add_argument("--draft-cap", type=float, default=0.0,
+                    help="MoR capacity fraction for the DRAFT pass "
+                         "(traced leaf — sweeping it never recompiles; "
+                         "0 = draft at full target capacity)")
+    ap.add_argument("--spec-draft-temperature", type=float, default=None,
+                    help="draft-pass sampling temperature (default: "
+                         "the target --temperature)")
     ap.add_argument("--mor", default="dense",
                     choices=("dense", "exact", "tiled", "kernel"))
     ap.add_argument("--calib-steps", type=int, default=4)
@@ -355,7 +369,9 @@ def main(argv=None):
         max_len=max_len, chunk=args.chunk, capacities=capacities,
         layout=args.layout, prefix_cache=args.prefix_cache,
         temperature=args.temperature, top_k=args.top_k,
-        sample_seed=args.sample_seed, mesh=mesh, obs=obs, policy=policy)
+        sample_seed=args.sample_seed, mesh=mesh, obs=obs, policy=policy,
+        spec_k=args.spec_k, draft_cap=args.draft_cap,
+        spec_draft_temperature=args.spec_draft_temperature)
     report.update(rep)
     report["policy"] = args.policy
     if args.prefill_budget:
@@ -364,6 +380,13 @@ def main(argv=None):
           f"{rep['tokens_per_s']:.1f} tok/s over {len(reqs)} requests "
           f"({rep['dispatches']} dispatches, "
           f"prompts {pmin}-{pmax})")
+    if "spec" in rep:
+        sp = rep["spec"]
+        print(f"[serve] spec: k={sp['k']} draft_cap={sp['draft_cap']} "
+              f"acceptance {sp['acceptance_rate']:.2f} "
+              f"({sp['tokens_accepted']}/{sp['tokens_drafted']} drafts "
+              f"over {sp['rounds']} rounds, {sp['replays']} replays, "
+              f"{sp['aborts']} aborts)")
     if "sharding" in rep:
         sh = rep["sharding"]
         print(f"[serve] page mesh: {sh['n_shards']} shards, kv pages "

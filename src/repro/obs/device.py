@@ -14,7 +14,10 @@ Layout (all int32, fixed at spec construction so the jit signature is
 stable):
 
 - header fields (replicated across shard rows; read takes row 0):
-  ``dispatches, prefill_tokens, decode_tokens, pages_touched``
+  ``dispatches, prefill_tokens, decode_tokens, pages_touched,
+  tokens_drafted, tokens_accepted`` (the last two advance only on
+  speculative draft/verify dispatches — engine.spec — and drain with
+  the rest of the block, zero extra syncs)
 - shard-local fields (each shard row accumulates its own; read sums
   rows): ``kv_page_resets, kv_page_copies, state_page_resets,
   state_page_copies``
@@ -44,7 +47,7 @@ __all__ = ["SCALE", "DeviceMetricsSpec"]
 SCALE = 4096
 
 HEADER_FIELDS = ("dispatches", "prefill_tokens", "decode_tokens",
-                 "pages_touched")
+                 "pages_touched", "tokens_drafted", "tokens_accepted")
 SHARD_LOCAL_FIELDS = ("kv_page_resets", "kv_page_copies",
                       "state_page_resets", "state_page_copies")
 GROUP_FIELDS = ("tiles_total", "tiles_skipped", "live_q")

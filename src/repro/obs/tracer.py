@@ -128,21 +128,31 @@ class Tracer:
                     admitted: Sequence[Tuple[int, int]] = (),
                     prefilling: Sequence[Tuple[int, int, int, int]] = (),
                     emits: Sequence[Tuple[int, int]] = (),
+                    emit_counts: Optional[Sequence[int]] = None,
                     finished: Sequence[int] = (),
                     queue_depth: int = 0,
                     n_active: int = 0) -> None:
         """One engine step.  admitted: (slot, rid) pairs newly placed;
         prefilling: (slot, rid, offset, take) chunks consumed this
         dispatch; emits: (slot, rid) that produced a token; finished:
-        rids that completed."""
+        rids that completed.  Speculative verify dispatches emit UP TO
+        k+1 tokens per slot at once — ``emit_counts`` (aligned with
+        ``emits``) carries the per-slot count so request token totals
+        stay exact; TTFT/ITL remain per-emitting-dispatch timestamps
+        (an accepted run reaches the host as one batch, so the
+        per-round gap IS its inter-token cadence).  Any ``kind`` string
+        flows through to the span name and the dispatch histogram
+        label — the speculative round uses draft/verify/replay."""
         i = self._n_dispatch
         self._n_dispatch += 1
+        n_emits = (sum(emit_counts) if emit_counts is not None
+                   else len(emits))
         self._emit(_Event(f"dispatch/{kind}", t0, t1 - t0, "engine",
                           "dispatch",
                           {"i": i, "kind": kind,
                            "queue_depth": queue_depth,
                            "n_active": n_active,
-                           "n_emits": len(emits)}))
+                           "n_emits": n_emits}))
         if self._h_dispatch is not None:
             self._h_dispatch.observe(t1 - t0, kind=kind)
 
@@ -164,13 +174,15 @@ class Tracer:
                               t0, t1 - t0, "slots", f"slot {slot}",
                               {"rid": rid, "offset": off, "take": take}))
 
-        for slot, rid in emits:
+        for j, (slot, rid) in enumerate(emits):
+            n_tok = emit_counts[j] if emit_counts is not None else 1
             r = self._reqs.get(rid)
             self._emit(_Event(f"decode rid={rid}", t0, t1 - t0, "slots",
-                              f"slot {slot}", {"rid": rid}))
+                              f"slot {slot}",
+                              {"rid": rid, "n_tokens": n_tok}))
             if r is None:
                 continue
-            r.n_tokens += 1
+            r.n_tokens += n_tok
             if r.t_first_token is None:
                 r.t_first_token = t1
                 if self._h_ttft is not None:

@@ -48,6 +48,7 @@ from repro.serving import kv_pool
 from repro.serving.policy import Policy, get_policy
 from repro.serving.scheduler import (FREE, Request, RequestRejected,
                                      Scheduler)
+from repro.serving.spec import SpecDecoder, sample_step
 from repro.serving.telemetry import (STAT_KEYS, ServingTelemetry,
                                      calibrate_capacity, export_telemetry,
                                      mor_group_map)
@@ -74,7 +75,8 @@ class Engine:
                  spare_pages: Optional[int] = None,
                  temperature: float = 0.0, top_k: int = 0,
                  sample_seed: int = 0, mesh=None, obs=None,
-                 policy=None):
+                 policy=None, spec_k: int = 0, draft_cap: float = 0.0,
+                 spec_draft_temperature: Optional[float] = None):
         api = get_model(cfg)
         assert api.prefill_chunk is not None, \
             f"{cfg.name} ({cfg.family}) has no serving chunk step"
@@ -152,6 +154,23 @@ class Engine:
             # like the cache: it round-trips through every dispatch.
             self._step = jax.jit(body, donate_argnums=(2, 9),
                                  static_argnums=(10, 11))
+        # self-speculative decoding: MoR-capacitated draft passes
+        # verified through the paged-COW block tables (serving.spec).
+        # Gated to the single-device paged layout — rounds use
+        # spill-style host-side fork/rollback and their own jitted
+        # phase bodies, not the sharded step's fixed out_specs.
+        self.spec: Optional[SpecDecoder] = None
+        if spec_k > 0:
+            assert layout == "paged", \
+                "speculative decoding requires layout='paged'"
+            # draft rows past the committed position must stay outside
+            # any window: the pool sizes windowed rings with `chunk`
+            # slack, which bounds how far a round may write ahead
+            assert spec_k <= self.chunk, \
+                f"spec_k={spec_k} must be <= chunk={self.chunk}"
+            self.spec = SpecDecoder(
+                self, spec_k=spec_k, draft_cap=draft_cap,
+                draft_temperature=spec_draft_temperature)
         self._stream_cbs: Dict[int, Callable[[int, int], None]] = {}
         self._stream_done: set = set()
         self._next_rid = 0
@@ -175,14 +194,27 @@ class Engine:
 
     def _flush_tokens(self) -> None:
         if self._tok_log:
-            toks = np.asarray(jnp.stack([nxt for _, nxt in self._tok_log]))
-            for i, (emits, _) in enumerate(self._tok_log):
+            # ONE host transfer for the whole log.  Entries are either
+            # (emits, nxt (B,)) vanilla dispatches or
+            # (emits, tokens (B, K+1), counts (B,)) speculative rounds
+            # (counts already host-side — it was the round's one sync)
+            fetched = jax.device_get([e[1] for e in self._tok_log])
+            for entry, toks in zip(self._tok_log, fetched):
+                emits = entry[0]
+                counts = entry[2] if len(entry) > 2 else None
+                toks = np.asarray(toks)
                 for s, rid in emits:
-                    t = int(toks[i, s])
-                    self.results.setdefault(rid, []).append(t)
+                    if counts is None:
+                        vals = (int(toks[s]),)
+                    else:
+                        vals = tuple(int(t)
+                                     for t in toks[s, :int(counts[s])])
                     cb = self._stream_cbs.get(rid)
-                    if cb is not None:
-                        cb(rid, t)
+                    res = self.results.setdefault(rid, [])
+                    for t in vals:
+                        res.append(t)
+                        if cb is not None:
+                            cb(rid, t)
             self._tok_log.clear()
         # a flush drains every pending dispatch, so finished requests'
         # callbacks have now delivered their last token — drop them
@@ -231,6 +263,16 @@ class Engine:
                 "live (slot, block) table entries visible to the paged "
                 "attends, summed over dispatches",
                 ("layout",)).set(dm["pages_touched"], layout=lay)
+            reg.counter(
+                "repro_spec_tokens_drafted_total",
+                "draft tokens proposed by speculative rounds "
+                "(device-counted)",
+                ("layout",)).set(dm["tokens_drafted"], layout=lay)
+            reg.counter(
+                "repro_spec_tokens_accepted_total",
+                "draft tokens the target verify accepted "
+                "(device-counted)",
+                ("layout",)).set(dm["tokens_accepted"], layout=lay)
             cpe = reg.counter(
                 "repro_pool_page_events_total",
                 "device page edits applied by the fused cache-ops step",
@@ -403,15 +445,11 @@ class Engine:
             cache = dict(cache, block_table=full_bt)
         last = jnp.clip(n_valid - 1, 0)
         lg = jnp.take_along_axis(logits, last[:, None, None], axis=1)[:, 0]
-        if temperature > 0.0:
-            lgs = lg.astype(jnp.float32) / temperature
-            if top_k > 0:
-                k = min(top_k, lgs.shape[-1])
-                kth = jax.lax.top_k(lgs, k)[0][:, -1]
-                lgs = jnp.where(lgs < kth[:, None], -jnp.inf, lgs)
-            nxt = jax.random.categorical(key, lgs, axis=-1).astype(jnp.int32)
-        else:
-            nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        # shared sampling head (serving.spec) — the speculative verify
+        # uses the same function per position, which is what makes
+        # greedy speculation token-identical to this vanilla step
+        nxt, _ = sample_step(lg, temperature=temperature, top_k=top_k,
+                             key=key)
         new_pending = jnp.where(n_valid > 0, nxt, pending)
         if metrics is not None:
             # all operands already live on device — the block update
@@ -555,6 +593,14 @@ class Engine:
                     "no waiting request can be admitted and nothing is "
                     "running — pool exhausted with no preemption victim")
             return []
+        # decode-only dispatches upgrade to a speculative round (draft
+        # k tokens cheap, verify them in one target pass) — atomic
+        # inside this step, so preemption above always sees committed
+        # state.  ready() backs off one step after a pool-pressure
+        # abort so the vanilla path's spill machinery can run.
+        if self.spec is not None and kind == "decode" and \
+                self.spec.ready():
+            return self.spec.round(t0, admitted)
         tokens, n_valid, use_pending, emits, finishing, prefilling = \
             sched.build_batch(kind)
         ops = None
@@ -674,7 +720,11 @@ class Engine:
         self.rejections = {}
         self.scheduler.chunks_skipped = 0
         self.scheduler.tokens_skipped = 0
-        self.scheduler.dispatch_kinds = {"mixed": 0, "decode": 0}
+        self.scheduler.dispatch_kinds = {"mixed": 0, "decode": 0,
+                                         "draft": 0, "verify": 0,
+                                         "replay": 0}
+        if self.spec is not None:
+            self.spec.reset()
         if self.pool is not None:
             self.pool.reset_event_counters()
         if self._mblock is not None:
@@ -760,6 +810,9 @@ class Engine:
                                   floor=floor)
         self.capacities = caps
         self.mor = self._attach(caps)
+        if self.spec is not None:
+            # the draft tree wraps the (re-attached) target plans
+            self.spec.refresh()
         return caps
 
     def _prefix_counters(self) -> Dict:
@@ -800,6 +853,8 @@ class Engine:
         if self.temperature > 0.0:
             rep["sampling"] = {"temperature": self.temperature,
                                "top_k": self.top_k}
+        if self.spec is not None:
+            rep["spec"] = self.spec.report()
         if self.pool is not None:
             rep["page"] = self.pool.page
             if self.pool.n_shards > 1:

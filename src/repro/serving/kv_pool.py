@@ -547,6 +547,22 @@ _KV_KEYS = ("k", "v", "c_kv", "k_pe", "pos")
 
 
 @dataclass
+class SpecFork:
+    """Host-side restore point for one slot's speculative round: the
+    committed position, the block-table row at fork time (tells
+    rollback which pages the round allocated fresh), and — for
+    recurrent-state families — a backup state page holding the
+    pre-round state (a page COPY, because draft/verify dispatches
+    advance the live state page in place; KV pages need no backup at
+    all — stale future rows self-mask on the causal position check, so
+    KV rollback is pure position truncation + fresh-page drop)."""
+    slot: int
+    pos: int
+    kv_row: Optional[np.ndarray] = None
+    st_backup: int = 0
+
+
+@dataclass
 class SpillRecord:
     """Host-side image of a preempted slot — everything ``restore``
     needs to resume the request in ANY slot later: the slot's position,
@@ -1310,6 +1326,93 @@ class PagedPool:
                 tuple(rec.kv_host), st_new, tuple(rec.st_host))
         self.spill_events["restores"] += 1
         return cache
+
+    # -- speculative decoding: fork / rollback ------------------------------
+    # A speculative round is a block-table operation, not a cache copy:
+    # fork records the committed position + the slot's block-table row
+    # and backs up the recurrent state to a spare page; rollback drops
+    # the pages the round allocated past the accepted prefix and
+    # truncates the position.  KV content never moves — draft rows past
+    # the committed position carry tags > any future query position and
+    # self-mask on the causal check, and the next dispatch's
+    # write-before-attend overwrites the committed frontier row.
+
+    def spec_fork(self, slot: int) -> SpecFork:
+        """Host-side restore point for ``slot`` before a speculative
+        round.  Raises ``PoolExhausted`` when no spare state page is
+        available for the backup (the caller falls back to vanilla
+        decode for this step)."""
+        rec = SpecFork(slot=slot, pos=int(self.pos[slot]))
+        if self.has_kv:
+            rec.kv_row = self.kv.table[slot].copy()
+        if self.has_state:
+            backup = self._st_alloc(reset=False)
+            if backup is None:
+                raise PoolExhausted(
+                    "paged state pool exhausted (spec fork)")
+            rec.st_backup = backup
+            # content copy rides the next drain, BEFORE the first draft
+            # dispatch advances the live page in place
+            self._push_st_copy(int(self.st.table[slot, 0]), backup)
+        return rec
+
+    def spec_set_pos(self, slot: int, pos: int) -> None:
+        """Host-side position override (pre-verify reset to the fork
+        point / post-verify truncation to the accepted prefix); dirties
+        the pool so the next drain re-uploads the position row."""
+        self.pos[slot] = int(pos)
+        self._dirty = True
+
+    def spec_restore_state(self, rec: SpecFork) -> None:
+        """Queue backup -> live state-page copy (the live page holds
+        draft-advanced or over-verified state; the backup holds the
+        state at the fork point)."""
+        if rec.st_backup:
+            self._push_st_copy(rec.st_backup,
+                               int(self.st.table[rec.slot, 0]))
+
+    def spec_rollback_pages(self, rec: SpecFork, committed_pos: int
+                            ) -> int:
+        """Drop blocks the round allocated FRESH entirely past the
+        accepted prefix (null in the fork row, live now, first position
+        >= committed).  COW'd blocks are kept — their shared source was
+        already released by write_plan, and their stale draft rows
+        self-mask.  Fresh blocks only exist pre-wrap, where block ``b``
+        covers positions ``[b*page, (b+1)*page)`` exactly, so the
+        position test is well defined.  Returns the drop count."""
+        if not self.has_kv:
+            return 0
+        dropped = 0
+        for b in range(self.n_blocks):
+            pg = int(self.kv.table[rec.slot, b])
+            if pg and rec.kv_row[b] == 0 and \
+                    b * self.page >= committed_pos:
+                self.kv.drop(pg)
+                self.kv.table[rec.slot, b] = 0
+                dropped += 1
+        if dropped:
+            self._dirty = True
+        return dropped
+
+    def spec_drop_backup(self, rec: SpecFork) -> None:
+        """Release the state backup page.  Safe while a restore copy is
+        still queued: ``_push_st_copy`` pinned the source until
+        ``_build_ops`` emits the pair."""
+        if rec.st_backup:
+            self.st.drop(rec.st_backup)
+            rec.st_backup = 0
+
+    def spec_abort(self, rec: SpecFork) -> None:
+        """Unwind a round that died mid-flight (pool exhausted during a
+        draft/verify plan): truncate to the fork point, drop any pages
+        the partial round allocated, restore the state backup.  Handles
+        ``write_plan``'s partial mutation on raise — the fork-row diff
+        covers exactly the blocks it touched."""
+        self.spec_rollback_pages(rec, rec.pos)
+        if rec.st_backup:
+            self.spec_restore_state(rec)
+            self.spec_drop_backup(rec)
+        self.spec_set_pos(rec.slot, rec.pos)
 
     def external_refs(self, table: str = "kv") -> Dict[int, int]:
         """Refcount holders OUTSIDE the block tables — prefix-trie

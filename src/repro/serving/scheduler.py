@@ -94,8 +94,10 @@ class Scheduler:
         self.chunks_skipped = 0
         self.tokens_skipped = 0
         # per-kind dispatch accounting (obs registry export; the engine
-        # resets these alongside its own counters)
-        self.dispatch_kinds = {"mixed": 0, "decode": 0}
+        # resets these alongside its own counters).  draft/verify/replay
+        # are the speculative-decode round's dispatches (engine.spec).
+        self.dispatch_kinds = {"mixed": 0, "decode": 0,
+                               "draft": 0, "verify": 0, "replay": 0}
 
     # -- admission ---------------------------------------------------------
     def add(self, req: Request) -> None:
@@ -239,6 +241,16 @@ class Scheduler:
                 emits.append((s, slot.req.rid))
         return tokens, n_valid, use_pending, emits, finishing, prefilling
 
+    def decode_remaining(self, slot: int) -> int:
+        """Tokens this slot may still emit (max_new_tokens minus those
+        already generated); 0 for non-DECODE slots.  The speculative
+        decoder caps its per-slot draft length with this so a round can
+        never overshoot a request's budget."""
+        sl = self.slots[slot]
+        if sl.state is not DECODE or sl.req is None:
+            return 0
+        return max(0, sl.req.max_new_tokens - sl.n_generated)
+
     # -- result ingestion --------------------------------------------------
     def feed(self, n_valid: np.ndarray
              ) -> Tuple[List[Tuple[int, Request]],
@@ -269,3 +281,22 @@ class Scheduler:
                 finished.append((s, slot.req))
                 self.slots[s] = _Slot()
         return finished, entering
+
+    def feed_counts(self, counts) -> List[Tuple[int, Request]]:
+        """Advance DECODE slots by a per-slot emitted-token COUNT (the
+        speculative verify emits 1..k+1 tokens per round, vs ``feed``'s
+        one-per-dispatch).  Still count-based — token values never reach
+        the scheduler.  Returns finished (slot, request) pairs; their
+        slots are freed for recycling."""
+        finished = []
+        for s, slot in enumerate(self.slots):
+            n = int(counts[s])
+            if n == 0 or slot.state is not DECODE:
+                continue
+            slot.n_generated += n
+            assert slot.n_generated <= slot.req.max_new_tokens, \
+                (s, slot.n_generated, slot.req.max_new_tokens)
+            if slot.n_generated >= slot.req.max_new_tokens:
+                finished.append((s, slot.req))
+                self.slots[s] = _Slot()
+        return finished
