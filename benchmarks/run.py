@@ -939,12 +939,191 @@ def scenario_serve_slo(policies=("fcfs", "priority", "sjf"),
     return result
 
 
+def scenario_serve_quality(n_requests: int = 8, prompt_min: int = 8,
+                           prompt_max: int = 48, gen_min: int = 4,
+                           gen_len: int = 16, n_slots: int = 4,
+                           chunk: int = 16, shadow_rate: float = 0.25,
+                           drift_threshold: float = 0.25,
+                           inject_drift: bool = True,
+                           inject_layer: int = 1,
+                           compute_scale: bool = True,
+                           out: str = "BENCH_quality.json") -> dict:
+    """Predictor-quality observability (ISSUE 10): shadow-oracle
+    scoring + per-layer drift detection, in four phases —
+
+    1. PARITY: the same trace through a shadow-off and a shadow-on
+       engine; the shadow pass writes only to the metrics block, so
+       generated tokens must be bit-identical.
+    2. CLEAN: several passes with shadow scoring on a healthy
+       calibrated predictor — the drift detector must stay silent.
+    3. INJECTED (``inject_drift``): one layer's calibration
+       coefficients are perturbed mid-run
+       (``obs.quality.inject_coefficient_drift`` via
+       ``Engine.update_mor`` — no recompile) and the detector must
+       flag that layer, and ONLY that layer, with a drift event in the
+       Perfetto timeline.
+    4. OVERHEAD (``compute_scale``): paired A/B at the d256
+       compute-dominated point, shadow_rate=1/16 vs 0, interleaved
+       timed passes in ONE process (same harness as serve-engine's obs
+       A/B — separate-process A/B can't resolve a few percent on a
+       shared CPU); acceptance budget < 5% tokens/s."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config, reduce_config
+    from repro.core.deploy import calibrate_lm
+    from repro.data.pipeline import synthetic_lm_batch
+    from repro.launch.serve import _trace
+    from repro.models import get_model
+    from repro.obs import Observability, validate_chrome_trace
+    from repro.obs.quality import inject_coefficient_drift
+    from repro.serving import Engine
+
+    cfg = reduce_config(get_config("granite-3-2b"))
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+
+    def batches(c, a):
+        s = 0
+        while True:
+            b = synthetic_lm_batch(c, n_slots, 64, seed=0, step=s)
+            yield {"tokens": jnp.asarray(b["tokens"])}
+            s += 1
+
+    params, mor, _cal = calibrate_lm(params, cfg, api.forward,
+                                     batches(cfg, api), 2)
+    reqs = _trace(cfg, n_requests, prompt_min, prompt_max, gen_min,
+                  gen_len, 0)
+    max_len = prompt_max + gen_len + 2
+    kw = dict(mor=mor, mor_mode="tiled", n_slots=n_slots,
+              max_len=max_len, chunk=chunk, prefix_cache=False)
+
+    def tok(res):
+        return {int(r): [int(t) for t in np.asarray(v)]
+                for r, v in res.items()}
+
+    # 1) parity: shadow scoring must not touch the primary path's tokens
+    eng_off = Engine(cfg, params, **kw)
+    res_off = eng_off.run(list(reqs))
+    obs = Observability()
+    eng = Engine(cfg, params, obs=obs, shadow_rate=shadow_rate,
+                 drift_threshold=drift_threshold, **kw)
+    res_on = eng.run(list(reqs))
+    parity = tok(res_off) == tok(res_on)
+    print(f"serve_quality_parity,0,{int(parity)}", flush=True)
+
+    # 2) clean passes: a healthy predictor must not trip the detector
+    eng.run(list(reqs))
+    rep_clean = eng.report()
+    q_clean = rep_clean["quality"]
+    clean = {"shadow_dispatches": q_clean["shadow_dispatches"],
+             "groups": q_clean["groups"],
+             "n_drifted": q_clean["drift"]["n_drifted"],
+             "n_series": q_clean["drift"]["n_series"]}
+    print(f"serve_quality_clean_drifted,0,{clean['n_drifted']}",
+          flush=True)
+
+    # 3) mid-run coefficient injection -> the detector must fire on the
+    # perturbed layer only (two passes: the EWMA needs two drifted
+    # flushes to cross an absolute threshold — by design, one noisy
+    # flush can't flap the flag)
+    injected = None
+    if inject_drift:
+        group = sorted(eng.raw_mor.keys())[0]
+        eng.update_mor(inject_coefficient_drift(eng.raw_mor, group,
+                                                inject_layer))
+        eng.run(list(reqs))
+        eng.run(list(reqs))
+        rep_inj = eng.report()
+        q_inj = rep_inj["quality"]
+        # drift events carry the STAT-group name (e.g. "mor_stats"),
+        # not the raw-mor group the injection keyed on — compare the
+        # (layer, expert) coordinates, which are shared
+        drifted = sorted({(e["layer"], e["expert"])
+                          for e in q_inj["drift"]["drifted"]})
+        trace = obs.tracer.to_chrome_trace()
+        n_drift_ev = sum(1 for e in trace["traceEvents"]
+                         if str(e.get("name", "")).startswith("drift "))
+        injected = {
+            "group": group, "layer": inject_layer,
+            "shadow_dispatches": q_inj["shadow_dispatches"],
+            "groups": q_inj["groups"],
+            "drifted": q_inj["drift"]["drifted"],
+            "fired_on_injected_only": drifted == [(inject_layer, None)],
+            "trace_drift_events": n_drift_ev,
+            "trace_problems": validate_chrome_trace(trace),
+        }
+        print(f"serve_quality_injected_fired,0,"
+              f"{int(injected['fired_on_injected_only'])}", flush=True)
+
+    # 4) shadow-overhead A/B at the compute-dominated scale
+    overhead = None
+    rows = {}
+    if compute_scale:
+        cfg2 = reduce_config(get_config("granite-3-2b")).replace(
+            serve_chunk=32, d_model=256, d_ff=1024, n_layers=4)
+        api2 = get_model(cfg2)
+        params2 = api2.init(jax.random.PRNGKey(0), cfg2)
+        params2, mor2, _ = calibrate_lm(params2, cfg2, api2.forward,
+                                        batches(cfg2, api2), 2)
+        reqs2 = _trace(cfg2, n_requests, prompt_min, prompt_max,
+                       gen_min, gen_len, 0)
+        kw2 = dict(mor=mor2, mor_mode="tiled", n_slots=n_slots,
+                   max_len=max_len, chunk=32, prefix_cache=False)
+        eng0 = Engine(cfg2, params2, obs=Observability(),
+                      shadow_rate=0.0, **kw2)
+        eng1 = Engine(cfg2, params2, obs=Observability(),
+                      shadow_rate=1.0 / 16, **kw2)
+        eng0.run(list(reqs2))
+        eng1.run(list(reqs2))           # compile warmup, untimed
+        walls = {"off": float("inf"), "on": float("inf")}
+        for _ in range(5):
+            for label, e in (("off", eng0), ("on", eng1)):
+                e.reset_counters()
+                t0 = time.time()
+                e.run(list(reqs2))
+                walls[label] = min(walls[label], time.time() - t0)
+        rep1 = eng1.report()
+        n_tok = rep1["prefill_tokens"] + rep1["decode_tokens"]
+        overhead = round(1.0 - walls["off"] / walls["on"], 4)
+        rows["tiled@d256-shadow"] = {
+            "tokens_per_s": n_tok / walls["on"],
+            "paired_off_tokens_per_s": n_tok / walls["off"],
+            "shadow_rate": 1.0 / 16,
+            "shadow_dispatches":
+                rep1["quality"]["shadow_dispatches"],
+        }
+        print(f"serve_quality_overhead,0,{overhead:.4f}", flush=True)
+
+    result = {"trace": {"n_requests": n_requests,
+                        "prompt_min": prompt_min,
+                        "prompt_max": prompt_max, "gen_min": gen_min,
+                        "gen_len": gen_len, "n_slots": n_slots,
+                        "chunk": chunk,
+                        "arch": "granite-3-2b (reduced)",
+                        "shadow_rate": shadow_rate,
+                        "drift_threshold": drift_threshold,
+                        "compute_scale": compute_scale},
+              "token_parity": parity,
+              "clean": clean,
+              "injected": injected,
+              "modes": rows}
+    if overhead is not None:
+        result["shadow_overhead"] = overhead
+    with open(out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"wrote {out}")
+    return result
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", default="figures",
                     choices=("figures", "serve-engine", "moe-modes",
                              "serve-prefix", "serve-sharded",
-                             "paged-kernel", "serve-slo", "serve-spec"))
+                             "paged-kernel", "serve-slo", "serve-spec",
+                             "serve-quality"))
     ap.add_argument("--archs", default=None,
                     help="serve-prefix: comma-separated arch list "
                          "(default granite-3-2b,rwkv6-3b)")
@@ -978,8 +1157,18 @@ def main() -> None:
     ap.add_argument("--no-mor-draft", action="store_true",
                     help="serve-spec: skip the calibrated tiled rows "
                          "(CI smoke)")
+    ap.add_argument("--no-inject-drift", action="store_true",
+                    help="serve-quality: skip the mid-run coefficient "
+                         "injection phase")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+    if args.scenario == "serve-quality":
+        scenario_serve_quality(
+            n_requests=args.requests,
+            inject_drift=not args.no_inject_drift,
+            compute_scale=not args.no_compute_scale,
+            out=args.out or "BENCH_quality.json")
+        return
     if args.scenario == "serve-spec":
         scenario_serve_spec(
             ks=tuple(int(x) for x in (args.spec_ks or "2,4,8").split(",")),

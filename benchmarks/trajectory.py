@@ -143,6 +143,22 @@ def _spec(d: Dict) -> List[Dict]:
                   f"{hl.get('itl_no_worse')}"}]
 
 
+def _quality(d: Dict) -> List[Dict]:
+    inj = d.get("injected") or {}
+    if not inj:
+        return []
+    ov = d.get("shadow_overhead")
+    return [{
+        "pr": "10", "subsystem": "predictor quality",
+        "benchmark": "serve-quality",
+        "headline": "drift fired on injected layer only = "
+                    f"{inj.get('fired_on_injected_only')}",
+        "detail": "shadow-oracle scoring, token parity = "
+                  f"{d.get('token_parity')}, scored-dispatch overhead "
+                  + ("n/a" if ov is None else f"{ov * 100:+.1f}%")
+                  + " tokens/s at 1/16 sampling"}]
+
+
 _EXTRACTORS = [
     ("BENCH_serve.json", _serve),
     ("BENCH_moe_modes.json", _moe),
@@ -151,6 +167,7 @@ _EXTRACTORS = [
     ("BENCH_paged_kernel.json", _kernel),
     ("BENCH_slo.json", _slo),
     ("BENCH_spec.json", _spec),
+    ("BENCH_quality.json", _quality),
 ]
 
 

@@ -199,6 +199,60 @@ def calibrate_lm(params: Dict, cfg: ModelConfig, forward: Callable,
     return new_params, {layer_key: mor_stack}, report
 
 
+def calibrate_hybrid(params: Dict, cfg: ModelConfig, forward: Callable,
+                     batches: Iterator[Dict], n_batches: int
+                     ) -> Tuple[Dict, Dict, Dict]:
+    """Calibrate a hybrid (mamba + shared-attention) model.
+
+    The ONE shared block's MLP is the only ReLU-family FFN; it is
+    observed at every segment boundary, so its taps come back
+    (n_seg, ...)-stacked and the segment axis folds into the batch —
+    one regression, one clustering pass, one MoRLayer under the
+    ``"shared"`` key (which is where the runtime looks:
+    ``mor.get("shared")`` in the hybrid forward / chunk paths and
+    ``telemetry.mor_group_map``)."""
+    mlp = params["shared"]["mlp"]
+    w = mlp["w_gate"] if "w_gate" in mlp else mlp["w_up"]
+    N = w.shape[-1]
+    acc = init_accumulator(N)
+    upd = jax.jit(update_accumulator)
+    fwd = jax.jit(lambda p, b: forward(p, cfg, b, with_taps=True)[1]["taps"])
+    seen = 0
+    for batch in batches:
+        taps = fwd(params, batch)
+        acc = upd(acc, taps["p_bin"], taps["p_base"])
+        seen += 1
+        if seen >= n_batches:
+            break
+    m, b, c = finalize_regression(acc)
+    m, b, c = np.asarray(m), np.asarray(b), np.asarray(c)
+    cl = cluster_layer(np.asarray(w, np.float32),
+                       cfg.mor.max_cluster_angle)
+    ml = build_mor_layer(m, b, c, cl, cfg.mor)
+
+    # fold the permutation into the shared MLP weights (offline)
+    perm = np.asarray(ml["perm"])
+    mlp2 = dict(mlp)
+    if "w_gate" in mlp2:
+        mlp2["w_gate"] = jnp.asarray(
+            np.take(np.asarray(mlp2["w_gate"]), perm, axis=1))
+    mlp2["w_up"] = jnp.asarray(
+        np.take(np.asarray(mlp2["w_up"]), perm, axis=1))
+    mlp2["w_down"] = jnp.asarray(
+        np.take(np.asarray(mlp2["w_down"]), perm, axis=0))
+    new_params = jax.tree_util.tree_map(lambda x: x, params)
+    new_params["shared"] = dict(params["shared"], mlp=mlp2)
+
+    report = {
+        "pearson_mean": float(c.mean()),
+        "pearson_frac_above_T": float((c > cfg.mor.corr_threshold).mean()),
+        "n_proxies_mean": float(
+            len(np.unique(np.asarray(ml["proxy_slot"])))),
+        "enabled_frac": float(np.asarray(ml["enable"]).mean()),
+    }
+    return new_params, {"shared": ml}, report
+
+
 def calibrate_moe(params: Dict, cfg: ModelConfig, forward: Callable,
                   batches: Iterator[Dict], n_batches: int, *,
                   cluster_experts: bool = True,

@@ -24,6 +24,17 @@ Execution modes (see ``core/masked_ffn.py`` for the thin dispatcher):
            ``gather_matmul``, which only DMAs live weight tiles, under a
            static ``capacity`` budget; the down-projection skips dead
            contraction blocks via ``masked_matmul_kdim``.
+  shadow — the dense-oracle scoring twin (predictor-quality
+           observability): PROPAGATES the plain dense activations (so a
+           shadow forward is the reference computation, bit-for-bit the
+           dense path) while evaluating the predictor alongside and
+           scoring its tile decisions against the dense truth —
+           false-skip / false-keep tile counts, neuron sign agreement,
+           and the output-error norm the skips would have caused land
+           in the stats dict as ``shadow_*`` leaves.  The serving
+           engine samples 1-in-N dispatches through ``as_shadow()``
+           twins of the active plans and drains the scores through the
+           device metrics block.
 
 Plans are registered pytrees: the MoRLayer is the only child, the mode /
 tile / capacity knobs are static aux data.  A plan built from a stacked
@@ -41,7 +52,14 @@ import jax.numpy as jnp
 from repro.core.predictor import MoRLayer, hybrid_predict
 from repro.core.policy import expand_tile_mask, tile_mask_from_neuron_mask
 
-MODES = ("dense", "exact", "tiled", "kernel")
+MODES = ("dense", "exact", "tiled", "kernel", "shadow", "scored")
+
+# per-layer predictor-quality leaves the shadow mode adds to its stats
+# dict (int tile counters + f32 fractions; the obs device block packs
+# them into its quality lanes)
+SHADOW_STAT_KEYS = ("shadow_tiles", "shadow_false_skip",
+                    "shadow_false_keep", "shadow_truth_live",
+                    "shadow_sign_agree", "shadow_err")
 
 
 def _act(h, activation: str):
@@ -52,17 +70,30 @@ def _act(h, activation: str):
     raise ValueError(f"MoR requires a ReLU-family activation, got {activation!r}")
 
 
-def _dense_stats() -> Dict[str, jax.Array]:
+def _dense_stats(shadow: bool = False) -> Dict[str, jax.Array]:
     z = jnp.zeros((), jnp.float32)
     zi = jnp.zeros((), jnp.int32)
-    return {"frac_computed": jnp.ones((), jnp.float32),
-            "frac_tiles_live": jnp.ones((), jnp.float32),
-            "frac_tiles_computed": jnp.ones((), jnp.float32),
-            "frac_mispredicted_zero": z,
-            # integer tile counters (obs device-metrics lanes); dense
-            # has no tile grid, so both are zero — the keyset still has
-            # to match MoRPrediction.stats() for per-layer stacking
-            "n_tiles": zi, "tiles_skipped": zi}
+    out = {"frac_computed": jnp.ones((), jnp.float32),
+           "frac_tiles_live": jnp.ones((), jnp.float32),
+           "frac_tiles_computed": jnp.ones((), jnp.float32),
+           "frac_mispredicted_zero": z,
+           # integer tile counters (obs device-metrics lanes); dense
+           # has no tile grid, so both are zero — the keyset still has
+           # to match MoRPrediction.stats() for per-layer stacking
+           "n_tiles": zi, "tiles_skipped": zi}
+    if shadow:
+        # inactive layers inside a shadow-mode stack score nothing but
+        # must emit the same keyset so per-layer stacking stays regular
+        out.update(_zero_shadow_stats())
+    return out
+
+
+def _zero_shadow_stats() -> Dict[str, jax.Array]:
+    z = jnp.zeros((), jnp.float32)
+    zi = jnp.zeros((), jnp.int32)
+    return {"shadow_tiles": zi, "shadow_false_skip": zi,
+            "shadow_false_keep": zi, "shadow_truth_live": zi,
+            "shadow_sign_agree": z, "shadow_err": z}
 
 
 class MoRPrediction:
@@ -190,6 +221,43 @@ class MoRExecutionPlan:
             capacity_frac=self.capacity_frac, cap_live=self.cap_live,
             draft_cap=dc, draft=True)
 
+    def as_shadow(self) -> "MoRExecutionPlan":
+        """The dense-oracle scoring twin of this plan: same leaves and
+        capacity budgets, ``mode="shadow"`` so the forward propagates
+        plain dense activations while scoring the predictor's decisions
+        against them.  Uncalibrated plans pass through unchanged (there
+        is no predictor to score)."""
+        if self.mor is None:
+            return self
+        return MoRExecutionPlan(
+            self.mor, mode="shadow", tile_m=self.tile_m,
+            tile_n=self.tile_n, capacity_frac=self.capacity_frac,
+            cap_live=self.cap_live, draft_cap=self.draft_cap,
+            draft=self.draft)
+
+    def as_scored(self) -> "MoRExecutionPlan":
+        """The IN-STEP scoring twin of a TILED plan: same dense-oracle
+        scoring as ``as_shadow()``, but the forward propagates the
+        tile-MASKED activations — bitwise identical to what the tiled
+        plan computes, because tiled mode itself evaluates the dense
+        matmul and selects (``masked_matmul``).  A scored dispatch can
+        therefore REPLACE the primary tiled dispatch outright: one
+        forward, tokens unchanged, and the only extra work is the
+        elementwise truth/score arithmetic — this is what keeps the
+        sampled-scoring overhead a few percent instead of a whole
+        second forward.  Only valid as a stand-in for ``tiled`` plans
+        (kernel's gather matmul may reassociate accumulation; exact
+        mode is neuron- not tile-granular)."""
+        if self.mor is None:
+            return self
+        assert self.mode in ("tiled", "scored"), \
+            f"as_scored() replaces tiled plans only, not {self.mode!r}"
+        return MoRExecutionPlan(
+            self.mor, mode="scored", tile_m=self.tile_m,
+            tile_n=self.tile_n, capacity_frac=self.capacity_frac,
+            cap_live=self.cap_live, draft_cap=self.draft_cap,
+            draft=self.draft)
+
     # -- predicates --------------------------------------------------------
     @property
     def active(self) -> bool:
@@ -260,8 +328,12 @@ class MoRExecutionPlan:
             computed = computed & row_mask[..., None]
         tiles = tile_mask_from_neuron_mask(
             computed.reshape(-1, computed.shape[-1]), self.tile_m, self.tile_n)
+        # shadow mode mirrors whatever clip the active plan would apply
+        # (identity when uncapped), so its scored `kept` mask equals the
+        # tiled/kernel decision it shadows
         kept = (self._capacity_clip(tiles)
-                if self.mode == "kernel" or self._active_cap is not None
+                if self.mode in ("kernel", "shadow", "scored")
+                or self._active_cap is not None
                 else None)
         return MoRPrediction(computed, tiles, kept=kept)
 
@@ -345,8 +417,14 @@ class MoRExecutionPlan:
             pre = x @ w
             y = _act(pre + (residual if residual is not None else 0.0),
                      activation)
-            return y, None, _dense_stats()
+            return y, None, _dense_stats(
+                shadow=self.mode in ("shadow", "scored"))
         mor = self.mor
+
+        if self.mode in ("shadow", "scored"):
+            return self._shadow_relu_matmul(x, w, activation=activation,
+                                            residual=residual,
+                                            row_mask=row_mask)
 
         if self.mode == "exact":
             pre = (x @ w).astype(jnp.float32)
@@ -375,6 +453,57 @@ class MoRExecutionPlan:
         y = jnp.where(keep, _act(pre_bn, activation), 0.0).astype(x.dtype)
         return y, pred, pred.stats()
 
+    def _shadow_relu_matmul(self, x, w, *, activation: str,
+                            residual: Optional[jax.Array] = None,
+                            row_mask: Optional[jax.Array] = None):
+        """Dense-oracle scoring pass (modes "shadow" / "scored"):
+        compute the DENSE reference pre-activations, run the predictor
+        exactly as the tiled/kernel plan would (no ``preact_full`` —
+        same decision basis, same capacity clip), and score the tile
+        decisions against the dense truth; the stats dict gains the
+        ``shadow_*`` quality leaves.  Mode "shadow" propagates the
+        DENSE activations (a standalone twin forward IS the reference
+        computation); mode "scored" propagates the tile-MASKED
+        activations, bitwise identical to the tiled path it stands in
+        for (inside a kept tile both paths apply the same elementwise
+        BN/act chain to the same dense matmul result; outside, both
+        are exact zeros)."""
+        mor = self.mor
+        T, N = x.shape[0], w.shape[1]
+        pre = (x @ w).astype(jnp.float32)
+        pre_bn = pre * mor["bn_scale"] + mor["bn_bias"]
+        if residual is not None:
+            pre_bn = pre_bn + residual
+        pred = self.predict(x, w, residual=residual, row_mask=row_mask)
+        truth = pre_bn > 0
+        if row_mask is not None:
+            truth = truth & row_mask[:, None]
+        truth_tiles = tile_mask_from_neuron_mask(
+            truth.reshape(-1, N), self.tile_m, self.tile_n)
+        stats = pred.stats()
+        # exact integer tile counters: a false skip silently zeroes a
+        # truly-live tile; a false keep burns compute on a dead one
+        stats["shadow_tiles"] = jnp.asarray(int(truth_tiles.size),
+                                            jnp.int32)
+        stats["shadow_false_skip"] = (
+            truth_tiles & ~pred.kept).sum(dtype=jnp.int32)
+        stats["shadow_false_keep"] = (
+            pred.kept & ~truth_tiles).sum(dtype=jnp.int32)
+        stats["shadow_truth_live"] = truth_tiles.sum(dtype=jnp.int32)
+        stats["shadow_sign_agree"] = (
+            pred.computed == truth).mean(dtype=jnp.float32)
+        y = _act(pre_bn, activation)
+        # relative output-error norm the active plan's skips would have
+        # caused on THIS dispatch (<= 1 by construction: the masked
+        # output is a subset of the dense one)
+        y_mor = jnp.where(pred.keep_mask(T, N, self.tile_m, self.tile_n),
+                          y, 0.0)
+        norm = jnp.sqrt(jnp.sum(jnp.square(y)))
+        stats["shadow_err"] = (jnp.sqrt(jnp.sum(jnp.square(y_mor - y)))
+                               / (norm + 1e-6))
+        out = y_mor if self.mode == "scored" else y
+        return out.astype(x.dtype), pred, stats
+
     def ffn(self, x: jax.Array, w_up: jax.Array, w_down: jax.Array, *,
             activation: str, w_gate: Optional[jax.Array] = None,
             row_mask: Optional[jax.Array] = None,
@@ -391,7 +520,8 @@ class MoRExecutionPlan:
             g, pred, stats = self._relu_matmul_pred(x, w_gate,
                                                     activation=activation,
                                                     row_mask=row_mask)
-            if pred is not None and self.mode in ("tiled", "kernel"):
+            if pred is not None and self.mode in ("tiled", "kernel",
+                                                  "scored"):
                 u = self.masked_matmul(x, w_up, pred).astype(x.dtype)
             else:
                 # dense / exact: g already zeroes h where skipped; the

@@ -156,14 +156,16 @@ def _run_engine(cfg, params, reqs, *, mor, mor_mode, n_slots, max_len,
                 chunk=0, capacities=None, layout="paged",
                 prefix_cache=True, temperature=0.0, top_k=0,
                 sample_seed=0, mesh=None, obs=None, policy=None,
-                spec_k=0, draft_cap=0.0, spec_draft_temperature=None):
+                spec_k=0, draft_cap=0.0, spec_draft_temperature=None,
+                shadow_rate=0.0, drift_threshold=0.25):
     eng = Engine(cfg, params, mor=mor, mor_mode=mor_mode, n_slots=n_slots,
                  max_len=max_len, chunk=chunk, capacities=capacities,
                  layout=layout, prefix_cache=prefix_cache,
                  temperature=temperature, top_k=top_k,
                  sample_seed=sample_seed, mesh=mesh, obs=obs,
                  policy=policy, spec_k=spec_k, draft_cap=draft_cap,
-                 spec_draft_temperature=spec_draft_temperature)
+                 spec_draft_temperature=spec_draft_temperature,
+                 shadow_rate=shadow_rate, drift_threshold=drift_threshold)
     # first pass compiles the two dispatch shapes; then take the best of
     # three timed passes — single-shot wall clock on a shared CPU is
     # ~2x noisy (the static baseline gets the same warmup + best-of).
@@ -282,6 +284,24 @@ def main(argv=None):
                     help="write the request tracer's timeline to this "
                          "path as Chrome-trace JSON (load in Perfetto "
                          "or chrome://tracing)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve GET /metrics (Prometheus text) and "
+                         "GET /metrics.json (registry snapshot) on "
+                         "this port from a stdlib http.server thread "
+                         "for the run's duration (implies --obs; 0 = "
+                         "ephemeral port, printed at startup)")
+    ap.add_argument("--shadow-rate", type=float, default=0.0,
+                    help="shadow-oracle predictor scoring: sample "
+                         "1-in-round(1/RATE) dispatches through a "
+                         "dense-oracle twin that scores the predictor's "
+                         "tile decisions (false skips / false keeps) "
+                         "into the device metrics block; tokens stay "
+                         "identical to --shadow-rate 0 (implies --obs; "
+                         "needs --mor != dense)")
+    ap.add_argument("--drift-threshold", type=float, default=0.25,
+                    help="per-(layer, expert) EWMA false-skip-rate "
+                         "threshold above which the drift detector "
+                         "flags the series")
     ap.add_argument("--calibrate-capacity", type=float, default=0.0,
                     help="liveness quantile for per-layer gather capacity "
                          "(0 = static cfg.mor.capacity)")
@@ -319,7 +339,8 @@ def main(argv=None):
     mor = None
     report = {"arch": cfg.name, "mor_mode": args.mor}
     if args.mor != "dense":
-        from repro.core.deploy import calibrate_lm, calibrate_moe
+        from repro.core.deploy import (calibrate_hybrid, calibrate_lm,
+                                       calibrate_moe)
 
         def batches():
             s = 0
@@ -333,6 +354,11 @@ def main(argv=None):
             # calibrate_lm treatment for any leading dense layers
             params, mor, cal = calibrate_moe(params, cfg, api.forward,
                                              batches(), args.calib_steps)
+        elif cfg.family == "hybrid":
+            # the one shared block's MLP, observed at every segment
+            # boundary, gets a single MoRLayer under mor["shared"]
+            params, mor, cal = calibrate_hybrid(params, cfg, api.forward,
+                                                batches(), args.calib_steps)
         else:
             params, mor, cal = calibrate_lm(params, cfg, api.forward,
                                             batches(), args.calib_steps)
@@ -351,10 +377,21 @@ def main(argv=None):
         from repro.launch.mesh import make_page_mesh
         mesh = make_page_mesh(args.shards)
 
+    if args.shadow_rate > 0:
+        assert args.mor != "dense", \
+            "--shadow-rate scores the MoR predictor; pick --mor " \
+            "exact/tiled/kernel"
     obs = None
-    if args.obs or args.metrics_json or args.trace_out:
+    if args.obs or args.metrics_json or args.trace_out or \
+            args.shadow_rate > 0 or args.metrics_port is not None:
         from repro.obs import Observability
         obs = Observability()
+    server = None
+    if args.metrics_port is not None:
+        from repro.obs import MetricsServer
+        server = MetricsServer(obs, port=args.metrics_port)
+        print(f"[serve] metrics endpoint: {server.url}/metrics "
+              f"(+ /metrics.json)")
 
     capacities = None
     if args.capacity > 0 and args.mor != "dense":
@@ -371,7 +408,9 @@ def main(argv=None):
         temperature=args.temperature, top_k=args.top_k,
         sample_seed=args.sample_seed, mesh=mesh, obs=obs, policy=policy,
         spec_k=args.spec_k, draft_cap=args.draft_cap,
-        spec_draft_temperature=args.spec_draft_temperature)
+        spec_draft_temperature=args.spec_draft_temperature,
+        shadow_rate=args.shadow_rate,
+        drift_threshold=args.drift_threshold)
     report.update(rep)
     report["policy"] = args.policy
     if args.prefill_budget:
@@ -380,6 +419,14 @@ def main(argv=None):
           f"{rep['tokens_per_s']:.1f} tok/s over {len(reqs)} requests "
           f"({rep['dispatches']} dispatches, "
           f"prompts {pmin}-{pmax})")
+    if "quality" in rep:
+        q = rep["quality"]
+        dr = q.get("drift", {})
+        print(f"[serve] shadow oracle: rate {q['shadow_rate']:.4f} "
+              f"(1 in {q['shadow_every']}), "
+              f"{q.get('shadow_dispatches', 0)} dispatches scored, "
+              f"{dr.get('n_drifted', 0)}/{dr.get('n_series', 0)} "
+              f"series drifted")
     if "spec" in rep:
         sp = rep["spec"]
         print(f"[serve] spec: k={sp['k']} draft_cap={sp['draft_cap']} "
@@ -507,6 +554,10 @@ def main(argv=None):
               + (f"; metrics -> {args.metrics_json}"
                  if args.metrics_json else "")
               + (f"; trace -> {args.trace_out}" if args.trace_out else ""))
+    if server is not None:
+        # written files above already captured the final flush; shut
+        # the scrape thread down cleanly with the run
+        server.close()
 
     if args.out_json:
         with open(args.out_json, "w") as f:

@@ -14,7 +14,7 @@ from repro.distributed import decode_attention as da
 from repro.distributed.sharding_rules import constrain
 from repro.models.layers import attention as attn
 from repro.models.layers.common import embed_init, dense_init, split_keys
-from repro.models.layers.mlp import mlp_init, mlp_apply
+from repro.models.layers.mlp import mlp_init, mlp_apply, mlp_taps
 from repro.models.layers.norms import norm_init, apply_norm
 from repro.models.layers.ssm import (
     mamba2_init, mamba2_forward, mamba2_cache_init, mamba2_chunk,
@@ -64,14 +64,15 @@ def _mamba_block(lp, cfg, x):
     return constrain(x + mamba2_forward(lp["mamba"], cfg, h), "residual")
 
 
-def _shared_block(sp, cfg, x, positions, mor, mor_mode):
+def _shared_block(sp, cfg, x, positions, mor, mor_mode, with_taps=False):
     h = apply_norm(cfg.norm, sp["ln1"], x)
     swa_cfg = cfg.replace(sliding_window=cfg.shared_attn_window)
     a = attn.gqa_forward(sp["attn"], swa_cfg, h, positions)
     x = constrain(x + a, "residual")
     h2 = apply_norm(cfg.norm, sp["ln2"], x)
     f, stats = mlp_apply(sp["mlp"], cfg, h2, mor=mor, mor_mode=mor_mode)
-    return constrain(x + f, "residual"), stats
+    taps = mlp_taps(sp["mlp"], cfg, h2) if with_taps else None
+    return constrain(x + f, "residual"), stats, taps
 
 
 def forward(params: Dict, cfg: ModelConfig, batch: Dict, *,
@@ -97,11 +98,16 @@ def forward(params: Dict, cfg: ModelConfig, batch: Dict, *,
             inner = jax.checkpoint(
                 inner, policy=jax.checkpoint_policies.nothing_saveable)
         c, _ = jax.lax.scan(inner, carry, seg_lp)
-        c, stats = _shared_block(params["shared"], cfg, c, positions,
-                                 shared_mor, mor_mode)
-        return c, stats
+        c, stats, taps = _shared_block(params["shared"], cfg, c, positions,
+                                       shared_mor, mor_mode, with_taps)
+        return c, ((stats, taps) if with_taps else stats)
 
-    x, stats = jax.lax.scan(seg_body, x, seg_params)
+    x, ys = jax.lax.scan(seg_body, x, seg_params)
+    taps = None
+    if with_taps:
+        stats, taps = ys
+    else:
+        stats = ys
     if tail:
         def inner(c, lp):
             return _mamba_block(lp, cfg, c), None
@@ -109,6 +115,11 @@ def forward(params: Dict, cfg: ModelConfig, batch: Dict, *,
     x = apply_norm(cfg.norm, params["final_norm"], x)
     logits = x @ params["lm_head"].astype(dt)
     aux = {"mor_stats": stats} if stats else {}
+    if taps is not None:
+        # one shared FFN observed at every segment boundary: the taps
+        # come back (n_seg, B*S, N)-stacked; the calibrator folds the
+        # segment axis into the batch (core.deploy.calibrate_hybrid)
+        aux["taps"] = taps
     return constrain(logits, "logits"), aux
 
 

@@ -17,13 +17,19 @@ See README.md in this directory for the metric namespace.
 from __future__ import annotations
 
 from repro.obs.device import SCALE, DeviceMetricsSpec
+from repro.obs.quality import (DriftDetector, EwmaDetector,
+                               PageHinkleyDetector,
+                               inject_coefficient_drift)
 from repro.obs.registry import (DEFAULT_LATENCY_BUCKETS, Counter, Gauge,
                                 Histogram, MetricsRegistry)
+from repro.obs.server import MetricsServer
 from repro.obs.tracer import Tracer, validate_chrome_trace
 
 __all__ = ["Observability", "MetricsRegistry", "Counter", "Gauge",
            "Histogram", "Tracer", "DeviceMetricsSpec", "SCALE",
-           "DEFAULT_LATENCY_BUCKETS", "validate_chrome_trace"]
+           "DEFAULT_LATENCY_BUCKETS", "validate_chrome_trace",
+           "DriftDetector", "EwmaDetector", "PageHinkleyDetector",
+           "inject_coefficient_drift", "MetricsServer"]
 
 
 class Observability:

@@ -27,6 +27,17 @@ stable):
   and ``live_q`` (running sum of ``round(frac_tiles_live * SCALE)``,
   fixed-point so a fraction can accumulate in an int32 lane; divide by
   ``SCALE * dispatches`` to recover the mean).
+- per stat group, the predictor-QUALITY lanes fed by shadow-oracle
+  dispatches (``QUALITY_FIELDS``, same per-layer(-expert) shape):
+  exact ``shadow_tiles`` / ``false_skip`` / ``false_keep`` /
+  ``truth_live`` tile counts plus fixed-point running sums
+  ``sign_agree_q`` / ``err_q`` (divide by ``SCALE *
+  shadow_dispatches`` for the means).  The lanes exist
+  unconditionally — the layout is internal and stays stable whether
+  shadow scoring is on or off; a primary dispatch's aux simply lacks
+  the ``shadow_*`` keys and writes zeros, while a shadow dispatch's
+  aux is filtered TO those keys so it never double-counts the base
+  tile lanes.
 
 Sharded engines give the block one row per page shard with spec
 ``P(PAGE_AXIS, None)``; inside ``shard_map`` each shard updates its
@@ -40,17 +51,29 @@ from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["SCALE", "DeviceMetricsSpec"]
+__all__ = ["SCALE", "DeviceMetricsSpec", "QUALITY_FIELDS"]
 
 # fixed-point scale for fraction lanes; 4096 keeps dispatch-count *
 # SCALE well inside int32 for any realistic run length
 SCALE = 4096
 
 HEADER_FIELDS = ("dispatches", "prefill_tokens", "decode_tokens",
-                 "pages_touched", "tokens_drafted", "tokens_accepted")
+                 "pages_touched", "tokens_drafted", "tokens_accepted",
+                 "shadow_dispatches")
 SHARD_LOCAL_FIELDS = ("kv_page_resets", "kv_page_copies",
                       "state_page_resets", "state_page_copies")
 GROUP_FIELDS = ("tiles_total", "tiles_skipped", "live_q")
+# (lane name, aux stats key, fixed-point?) — shadow-oracle quality
+# lanes; the aux keys are the SHADOW_STAT_KEYS the shadow execution
+# mode emits (core.executor)
+QUALITY_FIELDS = (
+    ("shadow_tiles", "shadow_tiles", False),
+    ("false_skip", "shadow_false_skip", False),
+    ("false_keep", "shadow_false_keep", False),
+    ("truth_live", "shadow_truth_live", False),
+    ("sign_agree_q", "shadow_sign_agree", True),
+    ("err_q", "shadow_err", True),
+)
 
 
 class DeviceMetricsSpec:
@@ -72,7 +95,7 @@ class DeviceMetricsSpec:
             off += 1
         for g, shp in self.stat_shapes.items():
             n = int(np.prod(shp)) if shp else 1
-            for f in GROUP_FIELDS:
+            for f in GROUP_FIELDS + tuple(q[0] for q in QUALITY_FIELDS):
                 self.offsets[f"{g}/{f}"] = (off, n)
                 off += n
         self.size = off
@@ -93,17 +116,30 @@ class DeviceMetricsSpec:
         for name in HEADER_FIELDS + SHARD_LOCAL_FIELDS:
             v = scalars.get(name, 0)
             segs.append(jnp.asarray(v, jnp.int32).reshape(1))
+        n_lanes = len(GROUP_FIELDS) + len(QUALITY_FIELDS)
         for g, shp in self.stat_shapes.items():
             n = int(np.prod(shp)) if shp else 1
             stats = aux.get(g)
             if stats is None:
-                segs.append(jnp.zeros(3 * n, jnp.int32))
+                segs.append(jnp.zeros(n_lanes * n, jnp.int32))
                 continue
-            total = jnp.ravel(stats["n_tiles"]).astype(jnp.int32)
-            skipped = jnp.ravel(stats["tiles_skipped"]).astype(jnp.int32)
-            live = jnp.ravel(stats["frac_tiles_live"])
-            live_q = jnp.round(live * SCALE).astype(jnp.int32)
-            segs.append(jnp.concatenate([total, skipped, live_q]))
+
+            # every lane is optional: primary dispatches carry the base
+            # tile keys but no shadow_* keys, shadow dispatches are
+            # filtered to ONLY shadow_* keys — missing lanes add zero
+            def lane(key, fixed_point=False):
+                v = stats.get(key)
+                if v is None:
+                    return jnp.zeros(n, jnp.int32)
+                v = jnp.ravel(v)
+                if fixed_point:
+                    v = jnp.round(v * SCALE)
+                return v.astype(jnp.int32)
+
+            segs.append(jnp.concatenate(
+                [lane("n_tiles"), lane("tiles_skipped"),
+                 lane("frac_tiles_live", fixed_point=True)]
+                + [lane(key, fp) for _, key, fp in QUALITY_FIELDS]))
         return jnp.concatenate(segs)
 
     def accumulate(self, block, scalars: Dict, aux: Dict):
@@ -127,6 +163,7 @@ class DeviceMetricsSpec:
         out.update({name: int(seg(name).sum())
                     for name in SHARD_LOCAL_FIELDS})
         disp = max(out["dispatches"], 1)
+        sdisp = max(out["shadow_dispatches"], 1)
         groups: Dict = {}
         for g, shp in self.stat_shapes.items():
             total = seg(f"{g}/tiles_total")[0].reshape(shp)
@@ -135,11 +172,29 @@ class DeviceMetricsSpec:
             with np.errstate(divide="ignore", invalid="ignore"):
                 skip_frac = np.where(total > 0, skipped / np.maximum(
                     total, 1), 0.0)
+            # shadow-oracle quality lanes (zero when shadow scoring is
+            # off or no dispatch was sampled yet)
+            stiles = seg(f"{g}/shadow_tiles")[0].reshape(shp)
+            fskip = seg(f"{g}/false_skip")[0].reshape(shp)
+            fkeep = seg(f"{g}/false_keep")[0].reshape(shp)
+            tlive = seg(f"{g}/truth_live")[0].reshape(shp)
+            sa_q = seg(f"{g}/sign_agree_q")[0].reshape(shp)
+            err_q = seg(f"{g}/err_q")[0].reshape(shp)
             groups[g] = {
                 "tiles_total": total.astype(np.int64),
                 "tiles_skipped": skipped.astype(np.int64),
                 "skip_frac": skip_frac,
-                "mean_frac_tiles_live": live_q / (SCALE * disp)}
+                "mean_frac_tiles_live": live_q / (SCALE * disp),
+                "shadow_tiles": stiles.astype(np.int64),
+                "false_skip": fskip.astype(np.int64),
+                "false_keep": fkeep.astype(np.int64),
+                "truth_live": tlive.astype(np.int64),
+                # rate denominators: a false skip is scored against the
+                # truly-live tiles, a false keep against the truly-dead
+                "false_skip_rate": fskip / np.maximum(tlive, 1),
+                "false_keep_rate": fkeep / np.maximum(stiles - tlive, 1),
+                "mean_sign_agree": sa_q / (SCALE * sdisp),
+                "mean_shadow_err": err_q / (SCALE * sdisp)}
         out["groups"] = groups
         return out
 
@@ -153,6 +208,18 @@ class DeviceMetricsSpec:
                 "tiles_skipped": d["tiles_skipped"].tolist(),
                 "skip_frac": np.round(d["skip_frac"], 6).tolist(),
                 "mean_frac_tiles_live": np.round(
-                    d["mean_frac_tiles_live"], 6).tolist()}
+                    d["mean_frac_tiles_live"], 6).tolist(),
+                "shadow_tiles": d["shadow_tiles"].tolist(),
+                "false_skip": d["false_skip"].tolist(),
+                "false_keep": d["false_keep"].tolist(),
+                "truth_live": d["truth_live"].tolist(),
+                "false_skip_rate": np.round(
+                    d["false_skip_rate"], 6).tolist(),
+                "false_keep_rate": np.round(
+                    d["false_keep_rate"], 6).tolist(),
+                "mean_sign_agree": np.round(
+                    d["mean_sign_agree"], 6).tolist(),
+                "mean_shadow_err": np.round(
+                    d["mean_shadow_err"], 6).tolist()}
         out["groups"] = groups
         return out

@@ -232,10 +232,17 @@ class MetricsRegistry:
     def to_prometheus(self) -> str:
         """Prometheus text exposition (counters get no _total suffix
         appended — name them *_total at creation)."""
+        def esc(v) -> str:
+            # label VALUES escape backslash, double-quote and newline
+            # (exposition format) — model/config names with odd
+            # characters would otherwise break the scrape
+            return (str(v).replace("\\", r"\\").replace('"', r"\"")
+                    .replace("\n", r"\n"))
+
         def fmt_labels(d: Dict) -> str:
             if not d:
                 return ""
-            body = ",".join(f'{k}="{v}"' for k, v in d.items())
+            body = ",".join(f'{k}="{esc(v)}"' for k, v in d.items())
             return "{" + body + "}"
 
         lines: List[str] = []

@@ -95,6 +95,7 @@ class Tracer:
         self._n_dispatch = 0
         self._n_preempt = 0
         self._n_restore = 0
+        self._n_drift = 0
         self._dropped = 0
         # the tracer owns its latency histograms: a reset boundary (the
         # engine's reset_counters between timed passes) zeroes them too,
@@ -220,6 +221,20 @@ class Tracer:
         self._emit(_Event(f"restore rid={rid}", t, 0.0, "requests",
                           f"rid {rid}", {"rid": rid, "slot": slot}))
 
+    def on_drift(self, group: str, layer: int, expert: Optional[int],
+                 rate: float, t: Optional[float] = None) -> None:
+        """Predictor drift flagged on one (group, layer[, expert])
+        series — an instant marker on its own "quality" track so the
+        degradation onset lines up against the dispatch timeline."""
+        t = self.now() if t is None else t
+        self._n_drift += 1
+        where = f"{group}/L{layer}" + ("" if expert is None
+                                       else f"/E{expert}")
+        self._emit(_Event(f"drift {where}", t, 0.0, "quality", group,
+                          {"group": group, "layer": layer,
+                           "expert": expert,
+                           "false_skip_rate": round(rate, 6)}))
+
     def _emit(self, ev: _Event) -> None:
         if len(self._events) >= self.max_events:
             self._dropped += 1
@@ -248,6 +263,7 @@ class Tracer:
                      "n_requests": len(self._reqs),
                      "n_preemptions": self._n_preempt,
                      "n_restores": self._n_restore,
+                     "n_drift_events": self._n_drift,
                      "events_dropped": self._dropped}
         if self._h_ttft is not None:
             out["ttft"] = self._h_ttft.summary()

@@ -76,7 +76,9 @@ class Engine:
                  temperature: float = 0.0, top_k: int = 0,
                  sample_seed: int = 0, mesh=None, obs=None,
                  policy=None, spec_k: int = 0, draft_cap: float = 0.0,
-                 spec_draft_temperature: Optional[float] = None):
+                 spec_draft_temperature: Optional[float] = None,
+                 shadow_rate: float = 0.0, drift_threshold: float = 0.25,
+                 drift_detector: str = "ewma"):
         api = get_model(cfg)
         assert api.prefill_chunk is not None, \
             f"{cfg.name} ({cfg.family}) has no serving chunk step"
@@ -154,6 +156,64 @@ class Engine:
             # like the cache: it round-trips through every dispatch.
             self._step = jax.jit(body, donate_argnums=(2, 9),
                                  static_argnums=(10, 11))
+        # shadow-oracle predictor scoring (obs.quality): every Nth
+        # vanilla dispatch is scored against the dense oracle and the
+        # exact per-(layer, expert) false-skip / false-keep counts land
+        # in the device metrics block.  TWO execution strategies,
+        # picked per plan mode:
+        #
+        # - tiled plans: the cheap IN-STEP twin (mode="scored") — the
+        #   sampled dispatch itself runs the scoring forward, whose
+        #   activations are bitwise identical to the tiled path (tiled
+        #   mode evaluates the dense matmul and selects), so it
+        #   REPLACES the primary dispatch and the only extra cost is
+        #   the elementwise truth arithmetic;
+        # - kernel / exact plans: a standalone dense twin
+        #   (mode="shadow") dispatched alongside the primary — those
+        #   modes cannot guarantee bitwise identity (gather_matmul may
+        #   reassociate the accumulation; exact is neuron-granular), so
+        #   the primary's tokens stay authoritative and the twin's only
+        #   output is the updated metrics block.
+        #
+        # Either way shadow-on is token-identical to shadow-off, and
+        # shadow_rate=0 never builds or calls any twin, so the default
+        # path's device-sync count is untouched.  Speculative rounds
+        # bypass step()'s vanilla dispatch, so sampling covers vanilla
+        # dispatches only.
+        self.shadow_rate = float(shadow_rate)
+        self._shadow_every: Optional[int] = None
+        self._shadow_step = None
+        self._shadow_mor = None
+        self.drift = None
+        if self.shadow_rate > 0.0:
+            assert self.raw_mor is not None, \
+                "shadow_rate needs a calibrated MoR tree " \
+                "(mor_mode != 'dense')"
+            assert self._mspec is not None, \
+                "shadow_rate needs Observability(device_metrics=True)"
+            from repro.core.executor import map_plans
+            from repro.obs.quality import DriftDetector
+            self._shadow_every = max(1, int(round(1.0 / self.shadow_rate)))
+            modes = set()
+            map_plans(self.mor, lambda p: (
+                modes.add(p.mode) if p.active else None, p)[1])
+            twin = bool(modes - {"tiled"})
+            self._shadow_as = (
+                (lambda p: p.as_shadow()) if twin else
+                (lambda p: p.as_scored() if p.mode == "tiled" else p))
+            self._shadow_mor = map_plans(self.mor, self._shadow_as)
+            if twin:
+                sbody = partial(self._shadow_impl, cfg, api, mor_mode,
+                                self._mspec)
+                if layout == "paged-sharded":
+                    from repro.serving.mesh import make_sharded_shadow_step
+                    self._shadow_step = make_sharded_shadow_step(
+                        sbody, self.mesh, self.cache)
+                else:
+                    self._shadow_step = jax.jit(sbody, donate_argnums=(8,),
+                                                static_argnums=(9, 10))
+            self.drift = DriftDetector(threshold=drift_threshold,
+                                       detector=drift_detector)
         # self-speculative decoding: MoR-capacitated draft passes
         # verified through the paged-COW block tables (serving.spec).
         # Gated to the single-device paged layout — rounds use
@@ -301,6 +361,60 @@ class Engine:
                     ct.set(int(d["tiles_total"][idx]), **lab)
                     cs.set(int(d["tiles_skipped"][idx]), **lab)
                     gl.set(float(d["mean_frac_tiles_live"][idx]), **lab)
+            if self._shadow_every is not None:
+                # predictor-quality mirrors + drift detection over the
+                # freshly drained shadow-oracle counters (obs.quality)
+                reg.counter(
+                    "repro_engine_shadow_dispatches_total",
+                    "dispatches scored by the shadow-oracle twin",
+                    ("layout",)).set(dm["shadow_dispatches"], layout=lay)
+                cfs = reg.counter(
+                    "repro_mor_false_skip_total",
+                    "tiles the predictor skipped that the dense oracle "
+                    "says were live (shadow-sampled)",
+                    ("layout", "group", "layer", "expert"))
+                cfk = reg.counter(
+                    "repro_mor_false_keep_total",
+                    "tiles the predictor kept that the dense oracle "
+                    "says were dead (shadow-sampled)",
+                    ("layout", "group", "layer", "expert"))
+                gfs = reg.gauge(
+                    "repro_mor_false_skip_rate",
+                    "false skips over truly-live tiles, last flush "
+                    "window (drift-detector input)",
+                    ("layout", "group", "layer", "expert"))
+                gsa = reg.gauge(
+                    "repro_mor_shadow_sign_agree",
+                    "mean predictor/oracle sign-agreement rate per "
+                    "shadow dispatch",
+                    ("layout", "group", "layer", "expert"))
+                gse = reg.gauge(
+                    "repro_mor_shadow_err",
+                    "mean relative output-error norm of the MoR-masked "
+                    "activation vs dense, per shadow dispatch",
+                    ("layout", "group", "layer", "expert"))
+                gdr = reg.gauge(
+                    "repro_mor_drift",
+                    "1 while the drift detector flags this series",
+                    ("layout", "group", "layer", "expert"))
+                for ev in self.drift.update(dm):
+                    if self._tr is not None:
+                        self._tr.on_drift(ev["group"], ev["layer"],
+                                          ev["expert"], ev["rate"])
+                dst = self.drift.state()
+                for g, d in dm["groups"].items():
+                    drifted = dst.get(g, {}).get("drifted")
+                    for idx in np.ndindex(d["false_skip"].shape):
+                        lab = {"layout": lay, "group": g,
+                               "layer": idx[0],
+                               "expert": idx[1] if len(idx) > 1 else ""}
+                        cfs.set(int(d["false_skip"][idx]), **lab)
+                        cfk.set(int(d["false_keep"][idx]), **lab)
+                        gfs.set(float(d["false_skip_rate"][idx]), **lab)
+                        gsa.set(float(d["mean_sign_agree"][idx]), **lab)
+                        gse.set(float(d["mean_shadow_err"][idx]), **lab)
+                        gdr.set(1.0 if drifted is not None
+                                and bool(drifted[idx]) else 0.0, **lab)
         csd = reg.counter("repro_scheduler_dispatches_total",
                           "dispatches built, by kind",
                           ("layout", "kind"))
@@ -459,12 +573,54 @@ class Engine:
                            decode_tokens=dec,
                            prefill_tokens=n_valid.sum(
                                dtype=jnp.int32) - dec)
+            # an in-step scored dispatch (mode="scored" plans) carries
+            # shadow_* quality leaves in its aux; it IS the primary
+            # dispatch, so base lanes count once and the quality lanes
+            # ride the same delta
+            if any(isinstance(st, dict) and "shadow_false_skip" in st
+                   for st in aux.values()):
+                scalars["shadow_dispatches"] = 1
             if bt_active is not None:
                 scalars["pages_touched"] = (
                     (bt_active > 0) & (n_valid > 0)[:, None]).sum(
                         dtype=jnp.int32)
             metrics = mspec.accumulate(metrics, scalars, aux)
         return nxt, new_pending, cache, aux, metrics
+
+    @staticmethod
+    def _shadow_impl(cfg, api, mor_mode, mspec, params, mor, cache,
+                     tokens, n_valid, use_pending, pending, ops, metrics,
+                     n_active=None, copy_pads=(0, 0)):
+        """The dense-oracle twin of ``_step_impl``: reconstruct exactly
+        the cache state the primary dispatch will see (the same pending
+        page edits, the same active-block slice, the same pending-token
+        splice), run the forward through mode="shadow" plans — dense
+        math, with the predictor SCORED against the dense truth — and
+        fold the shadow_* stat leaves into the metrics block.  Nothing
+        else escapes: the cache copy is discarded (NOT donated — the
+        primary step consumes the real one right after) and no tokens
+        are sampled, so the primary path stays authoritative."""
+        if ops is not None:
+            cache = kv_pool.apply_cache_ops(cache, ops, *copy_pads)
+        if n_active is not None and "block_table" in cache and \
+                n_active < cache["block_table"].shape[1]:
+            cache = dict(cache, block_table=cache["block_table"][:, :n_active])
+        tokens = tokens.at[:, 0].set(
+            jnp.where(use_pending, pending, tokens[:, 0]))
+        _, _, aux = api.prefill_chunk(params, cfg, tokens, cache,
+                                      n_valid=n_valid, mor=mor,
+                                      mor_mode=mor_mode)
+        # keep ONLY the shadow_* quality leaves: the primary dispatch
+        # already accumulated this batch's base tile lanes, and the
+        # quality lanes are what the shadow pass exists to fill
+        qaux = {}
+        for g, st in (aux or {}).items():
+            if isinstance(st, dict):
+                sh = {k: v for k, v in st.items()
+                      if k.startswith("shadow_")}
+                if sh:
+                    qaux[g] = sh
+        return mspec.accumulate(metrics, {"shadow_dispatches": 1}, qaux)
 
     # -- request API -------------------------------------------------------
     def _reject(self, reason: str, msg: str) -> None:
@@ -663,9 +819,25 @@ class Engine:
             ann = self._tr.annotation(kind)
         else:
             ann = contextlib.nullcontext()
+        # shadow-oracle sampling: every Nth vanilla dispatch is scored.
+        # Tiled plans swap the scored twin INTO the primary dispatch
+        # (bitwise-identical activations, no extra forward); kernel /
+        # exact plans run the standalone dense twin first — BEFORE the
+        # primary step, which donates the cache and metrics block the
+        # twin reads — and keep the primary's tokens authoritative.
+        sampled = (self._shadow_every is not None and
+                   self.counters["dispatches"] % self._shadow_every == 0)
+        if sampled and self._shadow_step is not None:
+            self._mblock = self._shadow_step(
+                self.params, self._shadow_mor, self.cache,
+                jnp.asarray(tokens), jnp.asarray(n_valid),
+                jnp.asarray(use_pending), self._pending, ops,
+                self._mblock, n_active, copy_pads)
+        mor_step = (self._shadow_mor
+                    if sampled and self._shadow_step is None else self.mor)
         with ann:
             nxt, self._pending, self.cache, aux, self._mblock = self._step(
-                self.params, self.mor, self.cache, jnp.asarray(tokens),
+                self.params, mor_step, self.cache, jnp.asarray(tokens),
                 jnp.asarray(n_valid), jnp.asarray(use_pending),
                 self._pending, key, ops, self._mblock, n_active, copy_pads)
         if self.pool is not None:
@@ -730,6 +902,10 @@ class Engine:
         if self._mblock is not None:
             n_rows = self.pool.n_shards if self.pool is not None else 1
             self._mblock = self._mspec.init(n_rows)
+        if self.drift is not None:
+            # the cumulative source counters just zeroed; detector
+            # state (EWMA / PH accumulators, raised flags) survives
+            self.drift.rebase()
         if self._tr is not None:
             self._tr.reset()
 
@@ -810,10 +986,30 @@ class Engine:
                                   floor=floor)
         self.capacities = caps
         self.mor = self._attach(caps)
+        if self._shadow_mor is not None:
+            # the shadow twin mirrors the active plans' capacity clip
+            from repro.core.executor import map_plans
+            self._shadow_mor = map_plans(self.mor, self._shadow_as)
         if self.spec is not None:
             # the draft tree wraps the (re-attached) target plans
             self.spec.refresh()
         return caps
+
+    def update_mor(self, raw_mor: Dict) -> None:
+        """Swap the calibrated MoR tree in place — the online-recalib
+        hook (ROADMAP item 4) and the benchmark's drift-injection knob.
+        Coefficients are traced leaves of the attached plans, so the
+        compiled step does NOT recompile; the shadow twin and the
+        speculative draft tree re-wrap the fresh plans."""
+        assert self.raw_mor is not None, \
+            "engine was built without a MoR tree"
+        self.raw_mor = raw_mor
+        self.mor = self._attach(self.capacities)
+        if self._shadow_mor is not None:
+            from repro.core.executor import map_plans
+            self._shadow_mor = map_plans(self.mor, self._shadow_as)
+        if self.spec is not None:
+            self.spec.refresh()
 
     def _prefix_counters(self) -> Dict:
         """Prefix-cache counters merged across the pool (pages, hits)
@@ -876,4 +1072,27 @@ class Engine:
             if self._tr is not None:
                 obs_rep["tracing"] = self._tr.summary()
             rep["obs"] = obs_rep
+        if self._shadow_every is not None:
+            q: Dict = {"shadow_rate": self.shadow_rate,
+                       "shadow_every": self._shadow_every}
+            dm = self._last_device_metrics
+            if dm is not None:
+                q["shadow_dispatches"] = dm["shadow_dispatches"]
+                q["groups"] = {
+                    g: {"shadow_tiles": int(d["shadow_tiles"].sum()),
+                        "false_skip": int(d["false_skip"].sum()),
+                        "false_keep": int(d["false_keep"].sum()),
+                        "truth_live": int(d["truth_live"].sum()),
+                        "false_skip_rate": np.round(
+                            d["false_skip_rate"], 6).tolist(),
+                        "false_keep_rate": np.round(
+                            d["false_keep_rate"], 6).tolist(),
+                        "mean_sign_agree": np.round(
+                            d["mean_sign_agree"], 6).tolist(),
+                        "mean_shadow_err": np.round(
+                            d["mean_shadow_err"], 6).tolist()}
+                    for g, d in dm["groups"].items()}
+            if self.drift is not None:
+                q["drift"] = self.drift.summary()
+            rep["quality"] = q
         return rep

@@ -40,7 +40,7 @@ from repro.distributed.sharding_rules import PAGE_AXIS
 from repro.serving import kv_pool
 
 __all__ = ["cache_partition_specs", "shard_cache", "sharded_apply",
-           "make_sharded_step"]
+           "make_sharded_step", "make_sharded_shadow_step"]
 
 
 def cache_partition_specs(cache: Dict) -> Dict:
@@ -150,3 +150,35 @@ def make_sharded_step(body, mesh, cache: Dict):
           ops, metrics)
 
     return jax.jit(stepfn, donate_argnums=(2, 9), static_argnums=(10, 11))
+
+
+def make_sharded_shadow_step(body, mesh, cache: Dict):
+    """The shadow-oracle scoring pass (``Engine._shadow_impl`` with its
+    leading args bound) under the same page-axis ``shard_map`` as the
+    primary step.  It reads the SAME sharded cache the primary step is
+    about to consume — so the cache is NOT donated here (only the
+    metrics block, its one output, is) — and returns the per-shard
+    metrics rows, ``P(PAGE_AXIS)`` like the primary step's."""
+    specs = cache_partition_specs(cache)
+    n = mesh.shape[PAGE_AXIS]
+
+    def stepfn(params, mor, cache, tokens, n_valid, use_pending, pending,
+               ops, metrics, n_active=None, copy_pads=(0, 0)):
+        def inner(params, mor, cache, tokens, n_valid, use_pending,
+                  pending, ops, metrics):
+            with page_shard_context(PAGE_AXIS, n):
+                return body(params, mor, cache, tokens, n_valid,
+                            use_pending, pending,
+                            None if ops is None else ops[0], metrics,
+                            n_active, copy_pads)
+
+        return shard_map(
+            inner, mesh=mesh,
+            in_specs=(P(), P(), specs, P(), P(), P(), P(),
+                      P(PAGE_AXIS), P(PAGE_AXIS)),
+            out_specs=P(PAGE_AXIS),
+            check_rep=False,
+        )(params, mor, cache, tokens, n_valid, use_pending, pending,
+          ops, metrics)
+
+    return jax.jit(stepfn, donate_argnums=(8,), static_argnums=(9, 10))

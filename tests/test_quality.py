@@ -1,0 +1,431 @@
+"""Predictor-quality observability tests (shadow-oracle scoring +
+drift detection): exact false-skip/false-keep tile counts against a
+host-side numpy oracle, scored-mode bitwise identity with the tiled
+path, engine token identity shadow-on vs shadow-off across all three
+architecture families and both cache layouts, drift detector unit
+behaviour (EWMA two-flush crossing, Page-Hinkley, rebase semantics)
+and engine-level firing on an injected coefficient perturbation only,
+no extra device syncs or dispatches from the scoring machinery, the
+Prometheus label-escaping fix, the empty-histogram quantile fix, and
+the live metrics endpoint."""
+import json
+import urllib.error
+import urllib.request
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.core.executor import MoRExecutionPlan
+from repro.models import get_model
+from repro.obs import (DriftDetector, MetricsRegistry, MetricsServer,
+                       Observability, inject_coefficient_drift)
+from repro.serving import Engine
+
+
+# -- numpy oracle for the shadow scores ------------------------------------
+
+def _np_tiles(mask, tile_m, tile_n):
+    M, N = mask.shape
+    pm, pn = (-M) % tile_m, (-N) % tile_n
+    p = np.pad(mask, ((0, pm), (0, pn)))
+    t = p.reshape((M + pm) // tile_m, tile_m, (N + pn) // tile_n, tile_n)
+    return t.any(axis=(1, 3))
+
+
+def _np_shadow_oracle(x, w, mor, tile_m, tile_n):
+    """Host-side reimplementation of hybrid_predict + the shadow tile
+    scoring, in numpy float32.  With quantised inputs (all intermediate
+    values dyadic rationals well inside float32's exact-integer range)
+    every comparison is exact, so the counts must match the jitted
+    plan's BITWISE."""
+    x = np.asarray(x, np.float32)
+    w = np.asarray(w, np.float32)
+    m, b = np.asarray(mor["m"]), np.asarray(mor["b"])
+    bs, bb = np.asarray(mor["bn_scale"]), np.asarray(mor["bn_bias"])
+    pslot = np.asarray(mor["proxy_slot"])
+    enable = np.asarray(mor["enable"])
+    is_proxy = np.asarray(mor["is_proxy"])
+    # proxy rookie: evaluate the assigned proxy column at base precision
+    slot = np.maximum(pslot, 0)
+    proxy_relu_in = (x @ w[:, slot]) * bs[slot] + bb[slot]
+    proxy_zero = (proxy_relu_in < 0.0) | (pslot < 0)
+    # binary rookie: sign dot -> fitted line -> BN fold
+    xs = np.where(x > 0, 1, -1).astype(np.int32)
+    ws = np.where(w >= 0, 1, -1).astype(np.int32)
+    p_hat = (m * (xs @ ws).astype(np.float32) + b) * bs + bb
+    skip = proxy_zero & (p_hat < 0.0) & enable & ~is_proxy
+    computed = ~skip
+    kept = _np_tiles(computed, tile_m, tile_n)
+    truth = ((x @ w) * bs + bb) > 0.0
+    truth_tiles = _np_tiles(truth, tile_m, tile_n)
+    return {
+        "shadow_tiles": int(truth_tiles.size),
+        "shadow_false_skip": int((truth_tiles & ~kept).sum()),
+        "shadow_false_keep": int((kept & ~truth_tiles).sum()),
+        "shadow_truth_live": int(truth_tiles.sum()),
+        "shadow_sign_agree": float((computed == truth).mean()),
+    }
+
+
+def _quantised_case(seed=0, T=24, K=32, N=128):
+    """Seeded (x, w, mor) whose every intermediate (matmuls, BN folds,
+    fitted lines) is an exactly-representable float32, so numpy and XLA
+    agree bitwise regardless of accumulation order.  Two engineered
+    column spans guarantee both error kinds at TILE granularity
+    (tile_n=16): columns 32..63 carry broken fitted lines (predictor
+    skips whole tile columns that are truly live -> false skips),
+    columns 96..127 are disabled with a hard-negative BN bias (always
+    computed, truth all-dead -> false keeps)."""
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-2, 3, size=(T, K)).astype(np.float32)
+    w = rng.integers(-2, 3, size=(K, N)).astype(np.float32)
+    m = (rng.integers(-8, 9, size=N) / 4.0).astype(np.float32)
+    b = (rng.integers(-8, 9, size=N) / 4.0 + 0.125).astype(np.float32)
+    bn_scale = rng.choice([0.5, 1.0, 2.0], size=N).astype(np.float32)
+    # odd multiples of 1/4: pre*bn_scale is a multiple of 1/2, so
+    # pre_bn is never exactly zero -> the > 0 truth test has no ties
+    bn_bias = ((2 * rng.integers(-4, 4, size=N) + 1) / 4.0
+               ).astype(np.float32)
+    proxy_slot = rng.integers(-1, N, size=N).astype(np.int32)
+    is_proxy = np.zeros(N, bool)
+    is_proxy[np.unique(np.maximum(proxy_slot, 0))[:N // 8]] = True
+    enable = rng.random(N) < 0.8
+    # false-skip span: binary rookie always says zero, no proxy veto,
+    # force-enabled -> the predictor kills these tile columns outright
+    broken = np.arange(32, 64)
+    b[broken] = -100.0
+    m[broken] = 0.0
+    proxy_slot[broken] = -1
+    enable[broken] = True
+    is_proxy[broken] = False
+    # false-keep span: disabled (always computed) but truly all-dead
+    dead = np.arange(96, 128)
+    enable[dead] = False
+    is_proxy[dead] = False
+    bn_bias[dead] = -1000.25
+    mor = {
+        "m": jnp.asarray(m), "b": jnp.asarray(b),
+        "enable": jnp.asarray(enable),
+        "proxy_slot": jnp.asarray(proxy_slot),
+        "is_proxy": jnp.asarray(is_proxy),
+        "perm": jnp.arange(N, dtype=jnp.int32),
+        "inv_perm": jnp.arange(N, dtype=jnp.int32),
+        "bn_scale": jnp.asarray(bn_scale),
+        "bn_bias": jnp.asarray(bn_bias),
+    }
+    return x, w, mor
+
+
+@pytest.mark.parametrize("mode", ["shadow", "scored"])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_shadow_counts_match_numpy_oracle(mode, seed):
+    x, w, mor = _quantised_case(seed=seed)
+    tile_m, tile_n = 8, 16
+    want = _np_shadow_oracle(x, w, mor, tile_m, tile_n)
+    # non-degenerate: the seeded case must exercise both error kinds
+    assert want["shadow_false_skip"] > 0
+    assert want["shadow_false_keep"] > 0
+    assert 0 < want["shadow_truth_live"] < want["shadow_tiles"]
+    plan = MoRExecutionPlan(mor, mode=mode, tile_m=tile_m, tile_n=tile_n)
+    _, stats = plan.relu_matmul(jnp.asarray(x), jnp.asarray(w))
+    for k in ("shadow_tiles", "shadow_false_skip", "shadow_false_keep",
+              "shadow_truth_live"):
+        assert int(stats[k]) == want[k], (k, int(stats[k]), want[k])
+    assert float(stats["shadow_sign_agree"]) == pytest.approx(
+        want["shadow_sign_agree"], abs=1e-6)
+    assert 0.0 <= float(stats["shadow_err"]) <= 1.0
+
+
+def test_scored_output_bitwise_equals_tiled():
+    """A scored dispatch REPLACES the tiled primary, so its output must
+    be bitwise identical to the tiled plan's — and the shadow twin's
+    output must be the dense reference."""
+    x, w, mor = _quantised_case(seed=2)
+    kw = dict(tile_m=8, tile_n=16)
+    y_tiled, _ = MoRExecutionPlan(mor, mode="tiled", **kw).relu_matmul(
+        jnp.asarray(x), jnp.asarray(w))
+    y_scored, _ = MoRExecutionPlan(mor, mode="scored", **kw).relu_matmul(
+        jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(y_tiled), np.asarray(y_scored))
+    y_shadow, _ = MoRExecutionPlan(mor, mode="shadow", **kw).relu_matmul(
+        jnp.asarray(x), jnp.asarray(w))
+    pre_bn = ((np.asarray(x) @ np.asarray(w))
+              * np.asarray(mor["bn_scale"]) + np.asarray(mor["bn_bias"]))
+    np.testing.assert_array_equal(np.asarray(y_shadow),
+                                  np.maximum(pre_bn, 0.0).astype(np.float32))
+    # and the tiled output differs from dense somewhere (skips happened)
+    assert not np.array_equal(np.asarray(y_tiled), np.asarray(y_shadow))
+
+
+def test_as_scored_rejects_non_tiled_plans():
+    x, w, mor = _quantised_case(seed=3)
+    plan = MoRExecutionPlan(mor, mode="kernel", tile_m=8, tile_n=128)
+    with pytest.raises(AssertionError):
+        plan.as_scored()
+    tiled = MoRExecutionPlan(mor, mode="tiled", tile_m=8, tile_n=128)
+    assert tiled.as_scored().mode == "scored"
+    assert tiled.as_scored().as_scored().mode == "scored"   # idempotent
+    assert plan.as_shadow().mode == "shadow"
+
+
+# -- engine integration: token identity + zero overhead machinery ----------
+
+_CAL = {}
+
+
+def _calibrated_arch(arch, seed=0):
+    if arch not in _CAL:
+        from repro.core.deploy import calibrate_hybrid, calibrate_lm
+        from repro.data.pipeline import synthetic_lm_batch
+        cfg = reduce_config(get_config(arch))
+        api = get_model(cfg)
+        params = api.init(jax.random.PRNGKey(seed), cfg)
+
+        def batches():
+            s = 0
+            while True:
+                b = synthetic_lm_batch(cfg, 2, 32, seed=seed, step=s)
+                yield {"tokens": jnp.asarray(b["tokens"])}
+                s += 1
+        cal = calibrate_hybrid if cfg.family == "hybrid" else calibrate_lm
+        params, mor, _ = cal(params, cfg, api.forward, batches(), 2)
+        _CAL[arch] = (cfg, api, params, mor)
+    return _CAL[arch]
+
+
+def _run_engine(arch, layout, shadow_rate, mor_mode="tiled", gen=4,
+                drift_threshold=0.25):
+    cfg, _api, params, mor = _calibrated_arch(arch)
+    rng = np.random.default_rng(11)
+    reqs = [(rng.integers(1, cfg.vocab_size, size=n).astype(np.int32), gen)
+            for n in (6, 11)]
+    eng = Engine(cfg, params, mor=mor, mor_mode=mor_mode, n_slots=2,
+                 max_len=64, chunk=8, layout=layout,
+                 obs=Observability(), shadow_rate=shadow_rate,
+                 drift_threshold=drift_threshold)
+    out = eng.run(reqs)
+    return eng, {r: list(map(int, np.asarray(t))) for r, t in out.items()}
+
+
+@pytest.mark.parametrize("layout", ["paged", "slotted"])
+@pytest.mark.parametrize("arch", ["granite-3-2b", "rwkv6-3b", "zamba2-7b"])
+def test_engine_shadow_token_identity(arch, layout):
+    """Shadow-on must be token-identical to shadow-off: the scored
+    dispatch is bitwise the tiled forward, only instrumented."""
+    _e0, out0 = _run_engine(arch, layout, shadow_rate=0.0)
+    e1, out1 = _run_engine(arch, layout, shadow_rate=0.5)
+    assert out1 == out0
+    dm = e1._last_device_metrics
+    assert dm["shadow_dispatches"] > 0
+    q = e1.report()["quality"]
+    assert q["shadow_dispatches"] == dm["shadow_dispatches"]
+    g = next(iter(q["groups"].values()))
+    assert g["shadow_tiles"] > 0 and g["truth_live"] > 0
+
+
+def test_engine_shadow_twin_mode_kernel():
+    """Non-tiled plans cannot be replaced in-step; the engine falls back
+    to the standalone shadow twin and tokens still match."""
+    _e0, out0 = _run_engine("granite-3-2b", "paged", 0.0, mor_mode="kernel")
+    e1, out1 = _run_engine("granite-3-2b", "paged", 0.5, mor_mode="kernel")
+    assert out1 == out0
+    assert e1._shadow_step is not None       # twin path, not scored
+    assert e1._last_device_metrics["shadow_dispatches"] > 0
+
+
+def test_engine_shadow_rate_zero_no_extra_syncs(monkeypatch):
+    """shadow_rate=0 must build NO twin and add NO device reads: step
+    count equals the dispatch count and the metrics block drains exactly
+    once, at run()'s flush — same budget as plain observability."""
+    cfg, _api, params, mor = _calibrated_arch("granite-3-2b")
+    rng = np.random.default_rng(5)
+    reqs = [(rng.integers(1, cfg.vocab_size, size=9).astype(np.int32), 4)]
+    eng = Engine(cfg, params, mor=mor, mor_mode="tiled", n_slots=2,
+                 max_len=64, chunk=8, obs=Observability(), shadow_rate=0.0)
+    assert eng._shadow_every is None and eng._shadow_step is None
+    assert eng._shadow_mor is None and eng.drift is None
+    calls = {"step": 0, "drain": 0}
+    inner_step = eng._step
+
+    def counting_step(*a, **kw):
+        calls["step"] += 1
+        return inner_step(*a, **kw)
+
+    eng._step = counting_step
+    inner_read = eng._mspec.read
+    monkeypatch.setattr(eng._mspec, "read",
+                        lambda blk: (calls.__setitem__(
+                            "drain", calls["drain"] + 1), inner_read(blk))[1])
+    eng.run(reqs)
+    assert calls["step"] == eng.counters["dispatches"]
+    assert calls["drain"] == 1
+
+
+def test_engine_scored_shadow_adds_no_dispatches(monkeypatch):
+    """Even at shadow_rate=1.0 the tiled engine issues ZERO extra
+    dispatches and ZERO extra drains — every sampled step IS the primary
+    step, swapped to the scored plan tree."""
+    cfg, _api, params, mor = _calibrated_arch("granite-3-2b")
+    rng = np.random.default_rng(5)
+    reqs = [(rng.integers(1, cfg.vocab_size, size=9).astype(np.int32), 4)]
+    eng = Engine(cfg, params, mor=mor, mor_mode="tiled", n_slots=2,
+                 max_len=64, chunk=8, obs=Observability(), shadow_rate=1.0)
+    assert eng._shadow_step is None          # tiled -> scored, no twin
+    calls = {"step": 0, "drain": 0}
+    inner_step = eng._step
+
+    def counting_step(*a, **kw):
+        calls["step"] += 1
+        return inner_step(*a, **kw)
+
+    eng._step = counting_step
+    inner_read = eng._mspec.read
+    monkeypatch.setattr(eng._mspec, "read",
+                        lambda blk: (calls.__setitem__(
+                            "drain", calls["drain"] + 1), inner_read(blk))[1])
+    eng.run(reqs)
+    assert calls["step"] == eng.counters["dispatches"]
+    assert calls["drain"] == 1
+    assert eng._last_device_metrics["shadow_dispatches"] \
+        == eng.counters["dispatches"]
+
+
+# -- drift detection -------------------------------------------------------
+
+def _dm(fs, tl, group="mor_stats"):
+    return {"groups": {group: {"false_skip": np.asarray(fs, np.int64),
+                               "truth_live": np.asarray(tl, np.int64)}}}
+
+
+def test_drift_detector_ewma_needs_two_flushes():
+    """The EWMA (alpha=0.5) is compared, not the raw sample: after a
+    clean flush, one drifted flush at rate 0.5 smooths to exactly the
+    0.25 threshold (not above), the second crosses it."""
+    d = DriftDetector(threshold=0.25)
+    assert d.update(_dm([0, 0], [10, 10])) == []        # clean baseline
+    assert d.update(_dm([0, 5], [20, 20])) == []        # ewma == 0.25
+    ev = d.update(_dm([0, 10], [30, 30]))               # ewma == 0.375
+    assert ev == [{"group": "mor_stats", "layer": 1, "expert": None,
+                   "rate": 0.5}]
+    # already flagged: no duplicate event while the flag stays raised
+    assert d.update(_dm([0, 15], [40, 40])) == []
+    assert d.drifted_series() == [{"group": "mor_stats", "layer": 1,
+                                   "expert": None, "rate": 0.5}]
+    s = d.summary()
+    assert s["n_drifted"] == 1 and s["detector"] == "ewma"
+
+
+def test_drift_detector_min_tiles_and_rebase():
+    d = DriftDetector(threshold=0.25, min_tiles=1)
+    d.update(_dm([0, 0], [10, 10]))
+    # no truly-live tiles since last flush -> series skipped entirely
+    assert d.update(_dm([0, 0], [10, 10])) == []
+    assert d.n_updates == 2
+    # rebase forgets the cumulative snapshot (counters re-zeroed) but
+    # keeps detector state: the same absolute counters re-read from
+    # zero do not fire a fresh clean series
+    d.rebase()
+    assert d.update(_dm([0, 0], [10, 10])) == []
+    # expert-shaped (L, E) groups carry the expert coordinate
+    d2 = DriftDetector(threshold=0.1)
+    d2.update(_dm([[0, 0]], [[4, 4]], group="moe"))
+    # rate 1.0 smooths to ewma 0.5 > 0.1: fires on the second flush
+    ev = d2.update(_dm([[0, 4]], [[8, 8]], group="moe"))
+    assert ev == [{"group": "moe", "layer": 0, "expert": 1, "rate": 1.0}]
+
+
+def test_drift_detector_page_hinkley():
+    d = DriftDetector(threshold=0.3, detector="page-hinkley")
+    for k in range(3):                                  # flat baseline
+        assert d.update(_dm([0], [10 * (k + 1)])) == []
+    ev = d.update(_dm([5], [40]))                       # mean shift up
+    assert ev and ev[0]["layer"] == 0
+    with pytest.raises(AssertionError):
+        DriftDetector(detector="bogus")
+
+
+def test_engine_drift_fires_on_injected_layer_only():
+    """Clean serving stays silent; after inject_coefficient_drift on one
+    layer the detector flags that layer and no other, the tracer records
+    timeline events, and report()['quality'] surfaces the state."""
+    cfg, _api, params, mor = _calibrated_arch("granite-3-2b")
+    rng = np.random.default_rng(13)
+    reqs = [(rng.integers(1, cfg.vocab_size, size=n).astype(np.int32), 4)
+            for n in (7, 12)]
+    eng = Engine(cfg, params, mor=mor, mor_mode="tiled", n_slots=2,
+                 max_len=64, chunk=8, obs=Observability(),
+                 shadow_rate=1.0, drift_threshold=0.25)
+    eng.run([(p.copy(), g) for p, g in reqs])
+    assert eng.drift.drifted_series() == []             # clean: silent
+    inject_layer = 1
+    eng.update_mor(inject_coefficient_drift(
+        eng.raw_mor, "layers", inject_layer))
+    # the EWMA needs two post-injection flushes to cross the threshold
+    eng.run([(p.copy(), g) for p, g in reqs])
+    eng.run([(p.copy(), g) for p, g in reqs])
+    drifted = eng.drift.drifted_series()
+    assert drifted, "injection did not fire the detector"
+    assert {(e["layer"], e["expert"]) for e in drifted} \
+        == {(inject_layer, None)}
+    rep = eng.report()
+    assert rep["quality"]["drift"]["n_drifted"] == 1
+    assert rep["obs"]["tracing"]["n_drift_events"] >= 1
+    # the gauge mirrors landed: drift flag 1 on the injected layer
+    reg = eng.obs.registry
+    lab = dict(layout="paged", group="mor_stats", layer=str(inject_layer))
+    assert reg.get("repro_mor_drift").get(**lab) == 1.0
+    assert reg.get("repro_mor_false_skip_rate").get(**lab) > 0.25
+
+
+# -- registry fixes: label escaping + empty-histogram quantiles ------------
+
+def test_prometheus_label_value_escaping():
+    reg = MetricsRegistry()
+    c = reg.counter("x_total", "xs", ("k",))
+    c.inc(1, k='a\\b"c\nd')
+    txt = reg.to_prometheus()
+    assert r'x_total{k="a\\b\"c\nd"} 1' in txt
+    # the raw (unescaped) forms must NOT leak into the exposition
+    assert 'a\\b"c\nd' not in txt
+
+
+def test_histogram_quantile_empty_returns_none():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", "latency", buckets=(1.0, 2.0))
+    assert h.quantile(0.5) is None
+    assert h.summary() == {"count": 0}
+    hl = reg.histogram("lat2", "latency", ("k",), buckets=(1.0,))
+    hl.observe(0.5, k="seen")
+    assert hl.quantile(0.5, k="never") is None          # unseen series
+    assert hl.summary(k="never") == {"count": 0}
+    assert hl.quantile(0.5, k="seen") == pytest.approx(0.5)
+
+
+# -- live metrics endpoint -------------------------------------------------
+
+def test_metrics_server_endpoints():
+    obs = Observability(tracing=False)
+    obs.registry.counter("x_total", "xs").inc(3)
+    srv = MetricsServer(obs, port=0)
+    try:
+        assert srv.port > 0
+        txt = urllib.request.urlopen(
+            f"{srv.url}/metrics", timeout=5).read().decode()
+        assert "x_total 3" in txt
+        js = json.loads(urllib.request.urlopen(
+            f"{srv.url}/metrics.json", timeout=5).read().decode())
+        assert js["metrics"]["x_total"]["values"][0]["value"] == 3
+        # renders at request time: a later inc is visible to a re-scrape
+        obs.registry.get("x_total").inc(2)
+        txt = urllib.request.urlopen(
+            f"{srv.url}/metrics", timeout=5).read().decode()
+        assert "x_total 5" in txt
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(f"{srv.url}/nope", timeout=5)
+    finally:
+        srv.close()
+    with pytest.raises(OSError):
+        urllib.request.urlopen(f"{srv.url}/metrics", timeout=2)
